@@ -1,0 +1,47 @@
+"""Paper Table IV: brute-force (exhaustive) search timing per dataset.
+
+The absolute times define the speed-up denominators of Fig. 9/10; reported
+per dataset stand-in at the harness scale (scale with --n)."""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+from repro.core import brute
+
+DATASETS = [
+    ("SIFT-like", "clustered", 128, "l2", 1024),
+    ("GloVe-like", "heavy_tailed", 100, "cosine", 256),
+    ("NUSW-like", "histogram", 500, "chi2", 256),
+    ("Rand", "uniform", 100, "l2", 256),
+]
+
+
+def run(n: int = 10_000, seed: int = 0, datasets=DATASETS):
+    tbl = common.Table(
+        "brute force timing (Table IV)",
+        ["dataset", "metric", "n", "n_q", "total_s", "ms/query"],
+    )
+    for name, kind, d, metric, n_q in datasets:
+        x = common.dataset(kind, n, d, seed)
+        q = common.dataset(kind, n_q, d, seed + 1)
+        t = common.timeit(
+            lambda: brute.brute_force_knn(x, q, 10, metric, use_pallas=False), iters=2
+        )
+        tbl.add(name, metric, n, n_q, t, 1e3 * t / n_q)
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(2000 if args.quick else args.n,
+        datasets=DATASETS[:2] if args.quick else DATASETS)
+
+
+if __name__ == "__main__":
+    main()

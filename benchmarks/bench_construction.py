@@ -1,0 +1,66 @@
+"""Paper Fig. 6/7 + Table II: graph quality vs dimension at matched scanning
+rates, OLG / LGD / NN-Descent, l1 and l2.
+
+Synthetic uniform data (intrinsic dim == d), the paper's Rand100K protocol at
+CPU-scale n (default 10k; --n scales up).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import construct, nndescent
+
+DIMS = (2, 5, 10, 20)
+
+
+def run(n: int = 10_000, dims=DIMS, metrics=("l2", "l1"), k: int = 10, seed: int = 0):
+    tbl = common.Table(
+        "construction: recall vs dim at matched scanning rate (Fig 6/7, Table II)",
+        ["metric", "d", "algo", "recall@1", "recall@10", "scan_rate"],
+    )
+    for metric in metrics:
+        for d in dims:
+            x = common.dataset("uniform", n, d, seed)
+            true_ids = common.ground_truth(x, x, k + 1, metric)[:, 1:]  # drop self
+
+            kk = min(max(d, 10), 50)  # paper: k close to dim, <= 50
+            bcfg = construct.BuildConfig(
+                k=kk, metric=metric, wave=256, beam=max(kk, 20),
+                n_seeds=8, use_pallas=False,
+            )
+            for name, lgd in (("OLG", False), ("LGD", True)):
+                cfg = construct.BuildConfig(**{**bcfg.__dict__, "lgd": lgd})
+                g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
+                c = construct.scanning_rate(stats, n)
+                r1 = common.graph_recall(g, true_ids, 1)
+                r10 = common.graph_recall(g, true_ids, min(10, kk))
+                tbl.add(metric, d, name, r1, r10, c)
+
+            ncfg = nndescent.NNDescentConfig(
+                k=kk, metric=metric, max_iters=10, use_pallas=False, node_chunk=1024
+            )
+            g, st = nndescent.build(x, ncfg, jax.random.PRNGKey(seed))
+            r1 = common.graph_recall(g, true_ids, 1)
+            r10 = common.graph_recall(g, true_ids, min(10, kk))
+            tbl.add(metric, d, "NN-Desc", r1, r10, st["scanning_rate"])
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--dims", type=int, nargs="+", default=list(DIMS))
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    dims = args.dims[:2] if args.quick else args.dims
+    run(args.n if not args.quick else 2000, dims)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Table III + Fig. 7: scanning rate & graph quality per dataset type.
+
+Real datasets are offline-unavailable; calibrated synthetic stand-ins with
+matched (d, metric, intrinsic-dimension regime) are used — DESIGN.md §8.6:
+  SIFT-like  = clustered d=128 l2      GloVe-like = heavy_tailed d=100 cosine
+  NUSW-like  = histogram d=500 chi2    Rand       = uniform d=100 l2
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks import common
+from repro.core import construct, nndescent
+
+DATASETS = [
+    ("SIFT-like", "clustered", 128, "l2"),
+    ("GloVe-like", "heavy_tailed", 100, "cosine"),
+    ("NUSW-like", "histogram", 500, "chi2"),
+    ("Rand", "uniform", 100, "l2"),
+]
+
+
+def run(n: int = 10_000, k: int = 20, seed: int = 0, datasets=DATASETS):
+    tbl = common.Table(
+        "datasets: scanning rate + graph recall (Table III / Fig 7)",
+        ["dataset", "metric", "algo", "recall@1", "recall@10", "scan_rate"],
+    )
+    for name, kind, d, metric in datasets:
+        x = common.dataset(kind, n, d, seed)
+        true_ids = common.ground_truth(x, x, k + 1, metric)[:, 1:]
+        for algo, lgd in (("OLG", False), ("LGD", True)):
+            cfg = construct.BuildConfig(
+                k=k, metric=metric, wave=256, lgd=lgd, beam=max(k, 40),
+                n_seeds=8, use_pallas=False,
+            )
+            g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
+            tbl.add(
+                name, metric, algo,
+                common.graph_recall(g, true_ids, 1),
+                common.graph_recall(g, true_ids, 10),
+                construct.scanning_rate(stats, n),
+            )
+        ncfg = nndescent.NNDescentConfig(
+            k=k, metric=metric, max_iters=10, use_pallas=False, node_chunk=1024
+        )
+        g, st = nndescent.build(x, ncfg, jax.random.PRNGKey(seed))
+        tbl.add(
+            name, metric, "NN-Desc",
+            common.graph_recall(g, true_ids, 1),
+            common.graph_recall(g, true_ids, 10),
+            st["scanning_rate"],
+        )
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(2000 if args.quick else args.n,
+        datasets=DATASETS[:2] if args.quick else DATASETS)
+
+
+if __name__ == "__main__":
+    main()

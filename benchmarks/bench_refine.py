@@ -1,0 +1,52 @@
+"""Paper §IV-D: NN-Descent-style local-join refinement of an online graph.
+
+Shows the recall recovered per refinement round and its scanning-rate cost
+(the trade the paper describes: 'a trade-off between efficiency and graph
+quality')."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks import common
+from repro.core import construct, nndescent
+
+
+def run(n: int = 10_000, d: int = 32, k: int = 20, seed: int = 0, rounds: int = 3):
+    x = common.dataset("uniform", n, d, seed)
+    true_ids = common.ground_truth(x, x, k + 1, "l2")[:, 1:]
+    cfg = construct.BuildConfig(
+        k=k, metric="l2", wave=256, lgd=True, beam=max(k, 40), use_pallas=False
+    )
+    g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
+    c0 = construct.scanning_rate(stats, n)
+
+    tbl = common.Table(
+        "refinement: local-join rounds on the LGD graph (sec IV-D)",
+        ["round", "recall@1", "recall@10", "cum_scan_rate"],
+    )
+    tbl.add(0, common.graph_recall(g, true_ids, 1),
+            common.graph_recall(g, true_ids, 10), c0)
+    total = c0 * (n * (n - 1) / 2)
+    for r in range(1, rounds + 1):
+        g, comps = nndescent.local_join_refine(g, x, "l2", rounds=1, node_chunk=1024)
+        total += comps
+        tbl.add(r, common.graph_recall(g, true_ids, 1),
+                common.graph_recall(g, true_ids, 10),
+                total / (n * (n - 1) / 2))
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(2000 if args.quick else args.n, rounds=1 if args.quick else 3)
+
+
+if __name__ == "__main__":
+    main()

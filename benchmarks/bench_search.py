@@ -1,0 +1,75 @@
+"""Paper Fig. 9/10: NN-search recall vs speed-up over brute force.
+
+OLG / LGD (update ops off — the paper's protocol) vs NN-Descent-graph search,
+sweeping the beam width to trace the recall/speed-up curve.  Speed-up
+denominator is brute force timed on the SAME machine (Table IV protocol).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import brute, construct, nndescent
+from repro.core import search as search_lib
+
+DATASETS = [
+    ("SIFT-like", "clustered", 128, "l2"),
+    ("GloVe-like", "heavy_tailed", 100, "cosine"),
+    ("Rand", "uniform", 100, "l2"),
+]
+
+
+def run(n: int = 10_000, n_q: int = 256, k: int = 20, seed: int = 0, datasets=DATASETS):
+    tbl = common.Table(
+        "search: recall@1 vs speed-up over brute force (Fig 9/10)",
+        ["dataset", "graph", "beam", "recall@1", "speedup", "ms/query"],
+    )
+    for name, kind, d, metric in datasets:
+        x, q = common.dataset_with_queries(kind, n, n_q, d, seed)
+        true_ids = common.ground_truth(x, q, 1, metric)
+        t_brute = common.timeit(
+            lambda: brute.brute_force_knn(x, q, 1, metric, use_pallas=False), iters=2
+        )
+
+        graphs = {}
+        for algo, lgd in (("OLG", False), ("LGD", True)):
+            cfg = construct.BuildConfig(
+                k=k, metric=metric, wave=256, lgd=lgd, beam=max(k, 40),
+                n_seeds=8, use_pallas=False,
+            )
+            graphs[algo], _ = construct.build(x, cfg, jax.random.PRNGKey(seed))
+        ncfg = nndescent.NNDescentConfig(
+            k=k, metric=metric, max_iters=10, use_pallas=False, node_chunk=1024
+        )
+        graphs["NN-Desc"], _ = nndescent.build(x, ncfg, jax.random.PRNGKey(seed))
+
+        for gname, g in graphs.items():
+            for beam in (8, 16, 32, 64):
+                scfg = search_lib.SearchConfig(
+                    k=beam, beam=beam, n_seeds=8, metric=metric,
+                    use_lgd_mask=(gname == "LGD"), use_pallas=False,
+                )
+                fn = lambda: search_lib.search(g, x, q, jax.random.PRNGKey(3), scfg)
+                t = common.timeit(fn, iters=2)
+                res = fn()
+                rec = common.search_recall(jax.device_get(res.ids), true_ids, 1)
+                tbl.add(name, gname, beam, rec, t_brute / t, 1e3 * t / n_q)
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(2000 if args.quick else args.n,
+        datasets=DATASETS[:1] if args.quick else DATASETS)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Fig. 5: the baseline search algorithm (EHC, Alg. 1) vs plain HC,
+on an NN-Descent graph and on the TRUE k-NN graph.
+
+Shows (a) reverse edges buy recall at equal beam budgets, (b) approximate
+vs true graph makes little difference — both paper claims.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import brute, nndescent
+from repro.core import search as search_lib
+from repro.core.graph import KNNGraph, rebuild_reverse
+
+
+def true_graph(x, k: int, metric: str) -> KNNGraph:
+    n = x.shape[0]
+    ids, dists = brute.brute_force_knn(
+        x, x, k, metric, exclude_ids=jnp.arange(n, dtype=jnp.int32), use_pallas=False
+    )
+    g = KNNGraph(
+        nbr_ids=ids,
+        nbr_dist=dists,
+        nbr_lam=jnp.zeros_like(ids),
+        rev_ids=jnp.full((n, 2 * k), -1, jnp.int32),
+        rev_ptr=jnp.zeros((n,), jnp.int32),
+        alive=jnp.ones((n,), bool),
+        n_valid=jnp.asarray(n, jnp.int32),
+    )
+    return rebuild_reverse(g)
+
+
+def run(n: int = 10_000, d: int = 32, n_q: int = 200, k: int = 20, metric: str = "l2", seed: int = 0):
+    x, q = common.dataset_with_queries("clustered", n, n_q, d, seed)
+    true_ids = common.ground_truth(x, q, 1, metric)
+
+    ncfg = nndescent.NNDescentConfig(k=k, metric=metric, max_iters=10, use_pallas=False, node_chunk=1024)
+    g_nnd, _ = nndescent.build(x, ncfg, jax.random.PRNGKey(seed))
+    g_true = true_graph(x, k, metric)
+
+    tbl = common.Table(
+        "baseline search: EHC vs HC on approx/true graphs (Fig 5)",
+        ["graph", "algo", "beam", "recall@1", "avg_comps", "ms/query"],
+    )
+    for gname, g in (("NN-Descent", g_nnd), ("true-kNN", g_true)):
+        for algo, use_rev in (("EHC", True), ("HC", False)):
+            for beam in (8, 16, 32, 64):
+                # k == beam: the termination horizon IS the search-depth
+                # knob the paper sweeps (recall measured at top-1)
+                scfg = search_lib.SearchConfig(
+                    k=beam, beam=beam, n_seeds=8, metric=metric,
+                    use_reverse=use_rev, use_pallas=False,
+                )
+                fn = lambda: search_lib.search(g, x, q, jax.random.PRNGKey(7), scfg)
+                t = common.timeit(fn, iters=2)
+                res = fn()
+                rec = common.search_recall(jax.device_get(res.ids), true_ids, 1)
+                comps = float(jnp.mean(res.n_comps))
+                tbl.add(gname, algo, beam, rec, comps, 1e3 * t / n_q)
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(2000 if args.quick else args.n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Render the §Roofline table from dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report dryrun_single.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"
+
+
+def render(records: list[dict]) -> str:
+    rows = []
+    head = (
+        "| arch | shape | mesh | t_compute | t_memory (lo–hi) | t_collective | dominant "
+        "| peak GiB/dev | useful | roofline frac |"
+    )
+    rows.append(head)
+    rows.append("|" + "---|" * 10)
+    for r in records:
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"SKIP | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"FAIL: {r.get('error','')[:40]} | — | — | — |"
+            )
+            continue
+        # memory bounds: t_memory (cost_analysis "bytes accessed") assumes
+        # every HLO op round-trips HBM — an UPPER bound under fusion; the
+        # LOWER bound touches each resident byte once (peak + args)
+        lower = (r["bytes_per_device"] + r.get("arg_bytes_per_device", 0)) / 819e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_t(r['t_compute_s'])} | {fmt_t(lower)}–{fmt_t(r['t_memory_s'])} "
+            f"| {fmt_t(r['t_collective_s'])} | **{r['dominant']}** "
+            f"| {r['bytes_per_device']/2**30:.2f} "
+            f"| {r.get('useful_ratio', float('nan')):.3f} "
+            f"| {r.get('roofline_fraction', float('nan')):.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.json"
+    with open(path) as f:
+        records = json.load(f)
+    print(render(records))
+
+
+if __name__ == "__main__":
+    main()

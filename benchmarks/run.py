@@ -1,0 +1,52 @@
+"""Benchmark driver: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--n N]
+
+Sections:
+  Table IV  bench_brute            exhaustive-search timing
+  Fig 5     bench_search_baseline  EHC vs HC, approx vs true graph
+  Fig 6/7 + Table II  bench_construction  recall vs dim, scanning rates
+  Table III bench_datasets         per-dataset scanning rate + recall
+  Fig 9/10  bench_search           recall vs speed-up over brute
+  §IV-D     bench_refine           local-join refinement rounds
+
+The dry-run/roofline numbers (EXPERIMENTS.md §Dry-run/§Roofline) come from
+``repro.launch.dryrun`` — they need the 512-device XLA flag and therefore a
+fresh interpreter, not this driver.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=5_000,
+                    help="dataset size (paper scale: 100k+; default fits CI)")
+    ap.add_argument("--quick", action="store_true", help="tiny sizes, smoke only")
+    args = ap.parse_args()
+    n = 2000 if args.quick else args.n
+
+    from benchmarks import (
+        bench_brute,
+        bench_construction,
+        bench_datasets,
+        bench_refine,
+        bench_search,
+        bench_search_baseline,
+    )
+
+    t0 = time.time()
+    bench_brute.run(n, datasets=bench_brute.DATASETS[: 2 if args.quick else 4])
+    bench_search_baseline.run(n)
+    bench_construction.run(n, dims=(2, 5) if args.quick else (2, 5, 10, 20))
+    bench_datasets.run(n, datasets=bench_datasets.DATASETS[: 2 if args.quick else 4])
+    bench_search.run(n, datasets=bench_search.DATASETS[: 1 if args.quick else 3])
+    bench_refine.run(n, rounds=1 if args.quick else 3)
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s (n={n})")
+
+
+if __name__ == "__main__":
+    main()

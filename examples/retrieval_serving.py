@@ -1,0 +1,70 @@
+"""End-to-end retrieval serving: MIND interests -> LGD-graph ANN index.
+
+    PYTHONPATH=src python examples/retrieval_serving.py
+
+The paper's own production scenario (§IV-C e-shopping): a live item catalog
+indexed by online LGD construction, queried by the MIND recommender's
+interest vectors, with items joining and leaving the catalog — no rebuilds.
+Compares the graph path against exact brute-force retrieval.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import recsys
+from repro.serve import retrieval
+
+N_ITEMS, D = 8000, 16
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # a trained-ish MIND encoder (random params suffice for the demo)
+    cfg = recsys.RecsysConfig(
+        name="mind", vocab_per_field=N_ITEMS, embed_dim=D,
+        n_interests=4, capsule_iters=3, mlp=(32,), seq_len=12,
+    )
+    params = recsys.init_params(key, cfg)
+    items = params["table"][:N_ITEMS]  # serve directly from the item table
+    items = items / jnp.maximum(jnp.linalg.norm(items, axis=1, keepdims=True), 1e-9)
+
+    t0 = time.time()
+    index = retrieval.build_index(
+        items, k=16, metric="ip", wave=512, capacity=N_ITEMS + 2000,
+        key=jax.random.PRNGKey(1),
+    )
+    print(f"indexed {N_ITEMS} items with online LGD in {time.time()-t0:.1f}s")
+
+    # a user arrives: history -> 4 interest vectors -> ANN retrieval
+    hist = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, N_ITEMS)
+    interests = recsys.mind_interests(params, hist, cfg)[0]
+    interests = interests / jnp.maximum(
+        jnp.linalg.norm(interests, axis=1, keepdims=True), 1e-9)
+
+    t0 = time.time()
+    ids, scores = retrieval.retrieve(index, interests, 20, beam=48)
+    t_ann = time.time() - t0
+    t0 = time.time()
+    bids, _ = retrieval.retrieve_brute(index, interests, 20)
+    t_brute = time.time() - t0
+    overlap = len(set(np.asarray(ids).tolist()) & set(np.asarray(bids).tolist()))
+    print(f"top-20 via LGD graph: overlap {overlap}/20 with exact, "
+          f"{t_brute/max(t_ann,1e-9):.1f}x speed-up ({t_ann*1e3:.0f}ms vs {t_brute*1e3:.0f}ms)")
+
+    # catalog churn: 300 new products listed, 200 withdrawn — no rebuild
+    new_items = jax.random.normal(jax.random.PRNGKey(3), (300, D))
+    new_items = new_items / jnp.linalg.norm(new_items, axis=1, keepdims=True)
+    index = retrieval.add_items(index, new_items, key=jax.random.PRNGKey(4))
+    index = retrieval.remove_items(index, jnp.arange(200, dtype=jnp.int32))
+    ids2, _ = retrieval.retrieve(index, interests, 20, beam=48)
+    assert not (set(np.asarray(ids2).tolist()) & set(range(200)))
+    print(f"catalog churn applied online: +300 / -200 items, retrieval still "
+          f"serving (no withdrawn items returned)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end driver: train a ~100M-param decoder LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+Uses the full production substrate — config zoo (gemma3-style local:global
+attention), AdamW, deterministic skip-ahead loader, periodic checkpointing
+with resume.  ``--tiny`` drops to a 2M model for CI-speed smoke runs.
+"""
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.data import loader
+from repro.models import transformer as tfm
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop
+
+
+def make_config(tiny: bool) -> tfm.TransformerConfig:
+    if tiny:
+        return tfm.TransformerConfig(
+            name="lm-2m", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+            d_ff=256, vocab=2048, local_global=(1, 1), local_window=64,
+            remat=False, q_chunk=64, kv_chunk=64,
+        )
+    # ~100M params: 12L x 768, vocab 32k (GPT-2-small-ish with GQA + SWA mix)
+    return tfm.TransformerConfig(
+        name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=2048, vocab=32_000, local_global=(3, 1), local_window=256,
+        remat=False, q_chunk=128, kv_chunk=128,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = make_config(args.tiny)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params")
+
+    ocfg = opt_lib.OptConfig(name="adamw", lr=3e-4 if not args.tiny else 3e-3)
+    opt_state = opt_lib.init_opt_state(params, ocfg)
+    step_fn = jax.jit(train_loop.make_train_step(
+        lambda p, b: tfm.loss_fn(p, b["tokens"], cfg), ocfg))
+    data = loader.lm_batches(args.batch, args.seq, cfg.vocab)
+
+    ckpt_dir = args.ckpt or os.path.join(tempfile.gettempdir(), "lm_ckpt")
+    t0 = time.time()
+    first = last = None
+    for step in range(args.steps):
+        params, opt_state, m = step_fn(params, opt_state, data.batch(step))
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if step % 20 == 0:
+            tok_s = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step:4d} loss {loss:.4f} ({tok_s:,.0f} tok/s)", flush=True)
+        if (step + 1) % 100 == 0:
+            ckpt_lib.save(ckpt_dir, (params, opt_state), step=step + 1)
+    print(f"done: loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"in {time.time()-t0:.0f}s; checkpoints in {ckpt_dir}")
+    assert last < first, "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""knn-search iteration 5b: attack the measured bottleneck (per-iteration
+hash/beam bookkeeping bytes, NOT vector data — it.5a refuted bf16-data).
+
+Variant: probes 8->4, reverse-λ twin lookup off (saves two (B,R,k) gathers
+per expansion), beam 40->32.  Search quality at these settings is measured
+separately on CPU (see EXPERIMENTS §Perf it.5 quality check).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import sys
+import time
+
+import jax
+
+sys.path.insert(0, "src")
+from repro.configs import cells  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+import repro.configs.knn_lgd as kl  # noqa: E402
+from repro.core import search as search_lib  # noqa: E402
+from repro.core import construct as construct_lib  # noqa: E402
+
+mesh = mesh_lib.make_production_mesh(multi_pod=False)
+
+orig = kl.full_config
+
+
+def lean():
+    return dataclasses.replace(orig(), beam=32, hash_slots=2048)
+
+
+# monkeypatch the search config the cell builds: fewer probes + no rev-λ
+_orig_sc = construct_lib.BuildConfig.search_config
+
+
+def lean_sc(self):
+    sc = _orig_sc(self)
+    return dataclasses.replace(sc, hash_probes=4, lgd_rev_lambda=False)
+
+
+kl.full_config = lean
+construct_lib.BuildConfig.search_config = lean_sc
+
+c = cells.plan("knn-lgd", "search_4k", mesh)
+t0 = time.time()
+with mesh:
+    comp = cells.lower(c).compile()
+rec = roofline.analyze(comp, mesh, model_flops=c.model_flops, loop_factor=c.loop_factor)
+print(f"[lean-bookkeeping] t_comp={rec['t_compute_s']:.4f}s t_mem={rec['t_memory_s']:.4f}s "
+      f"t_coll={rec['t_collective_s']:.4f}s peak={rec['bytes_per_device']/2**30:.3f}GiB "
+      f"({time.time()-t0:.0f}s compile)")

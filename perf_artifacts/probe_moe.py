@@ -1,0 +1,87 @@
+"""Fast A/B probe for the mixtral train cell sharding (2 layers, 8 devices).
+
+Variants:
+  a) baseline: FSDP + activation constraints, NO weight use-constraints
+  b) + weight use-constraints (_use_constrain_layer)
+  c) b) but model-only param sharding (no FSDP)
+
+Reports flops/bytes/collectives per variant; per-layer marginal cost via a
+3-layer minus 2-layer diff would isolate embed/head, but 2 layers at 1/16 the
+full depth is enough to rank variants.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import sys
+import time
+
+import jax
+from jax.sharding import AxisType
+
+sys.path.insert(0, "src")
+from repro.configs import cells  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.models import transformer as tfm  # noqa: E402
+
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+VARIANT = sys.argv[1] if len(sys.argv) > 1 else "b"
+N_LAYERS = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+
+import repro.configs.mixtral_8x7b as mix
+
+orig_full = mix.full_config
+
+
+def small_full():
+    return dataclasses.replace(orig_full(), n_layers=N_LAYERS)
+
+
+mix.full_config = small_full
+
+if VARIANT == "a":
+    tfm._use_constrain_layer_orig = tfm._use_constrain_layer
+    tfm._use_constrain_layer = lambda lp, cfg: lp
+elif VARIANT == "d":
+    # MoE weights only
+    _orig = tfm._use_constrain_layer
+    def _moe_only(lp, cfg):
+        out = _orig(lp, cfg)
+        for k in ("wq", "wk", "wv", "wo", "dense_gate", "dense_up", "dense_down"):
+            if k in lp:
+                out[k] = lp[k]
+        return out
+    tfm._use_constrain_layer = _moe_only
+elif VARIANT == "e":
+    # attention weights only
+    _orig = tfm._use_constrain_layer
+    def _attn_only(lp, cfg):
+        out = _orig(lp, cfg)
+        for k in ("w_gate", "w_up", "w_down"):
+            if k in lp:
+                out[k] = lp[k]
+        return out
+    tfm._use_constrain_layer = _attn_only
+
+c = cells.plan("mixtral-8x7b", "train_4k", mesh)
+if VARIANT == "c":
+    # model-only param sharding
+    pspecs = tfm.param_pspecs(small_full(), fsdp=False)
+    from repro.train import optimizer as opt_lib
+    ocfg = opt_lib.OptConfig(name="adamw")
+    params_shapes = c.args[0]
+    opt_specs = opt_lib.opt_state_pspecs(pspecs, params_shapes, ocfg)
+    c = dataclasses.replace(
+        c, in_shardings=(cells._ns(mesh, pspecs), cells._ns(mesh, opt_specs),
+                         c.in_shardings[2]))
+
+t0 = time.time()
+with mesh:
+    comp = cells.lower(c).compile()
+rec = roofline.analyze(comp, mesh, model_flops=None)
+print(f"variant={VARIANT} L={N_LAYERS}: {time.time()-t0:.0f}s "
+      f"TF/dev={rec['hlo_gflops']/1e3:.1f} GBacc={rec['hlo_gbytes']:.0f} "
+      f"peakGiB={rec['bytes_per_device']/2**30:.1f} "
+      f"coll={rec['collective_gbytes']:.0f}GB "
+      f"breakdown={{k: round(v/1e9) for k, v in rec['collective_breakdown'].items()}}")
+print("  breakdown:", {k: round(v / 1e9) for k, v in rec["collective_breakdown"].items()})

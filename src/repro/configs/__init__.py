@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture has its own module exporting:
+  * ``ARCH``         — the public id (e.g. "mixtral-8x7b");
+  * ``FAMILY``       — "lm" | "gnn" | "recsys" | "knn";
+  * ``full_config()``  — the exact published configuration (dry-run only);
+  * ``smoke_config()`` — reduced same-family config for CPU tests;
+  * ``SHAPES``       — shape-name -> params for this arch's input-shape set;
+  * ``SKIP``         — shape-name -> reason, for documented inapplicability.
+
+``repro.configs.cells`` turns (arch, shape, mesh) into a lowerable CellPlan.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_ARCH_MODULES = {
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "mace": "repro.configs.mace_cfg",
+    "deepfm": "repro.configs.deepfm",
+    "bst": "repro.configs.bst",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "mind": "repro.configs.mind",
+    # the paper's own technique as a first-class arch
+    "knn-lgd": "repro.configs.knn_lgd",
+    "knn-olg": "repro.configs.knn_olg",
+}
+
+ASSIGNED = [a for a in _ARCH_MODULES if not a.startswith("knn-")]
+
+
+def get(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch])
+
+
+def names(include_knn: bool = True) -> List[str]:
+    return list(_ARCH_MODULES) if include_knn else list(ASSIGNED)
+
+
+def all_cells(include_knn: bool = False) -> List[tuple]:
+    """Every (arch, shape) pair, with skips annotated: [(arch, shape, skip_reason|None)]."""
+    out = []
+    for arch in names(include_knn):
+        mod = get(arch)
+        for shape in mod.SHAPES:
+            out.append((arch, shape, mod.SKIP.get(shape)))
+    return out

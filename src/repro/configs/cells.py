@@ -1,0 +1,501 @@
+"""CellPlan: (arch x shape x mesh) -> a lowerable, sharded step function.
+
+This is what the multi-pod dry-run compiles for every assigned cell.  A plan
+carries the step callable, positional ShapeDtypeStruct args (no allocation)
+and a matching NamedSharding tree, plus MODEL_FLOPS for the roofline's
+useful-compute ratio.
+
+Sharding policy (baseline — §Perf iterates on it):
+  * LM train: params per Megatron TP rules (models.transformer.param_pspecs),
+    batch over (pod, data); MoE experts over 'model' when E >= 16.
+  * LM decode: KV cache sequence-sharded over 'model' (flash-decoding style
+    split-K; the softmax reduction becomes an all-reduce), batch over data
+    axes; long_500k (batch=1) shards sequence over EVERY axis.
+  * GNN: node/edge arrays sharded over all axes (edge-parallel message
+    passing); shapes are padded to multiples of 512 with explicit masks.
+  * RecSys: embedding tables row-sharded over 'model' (DLRM), batch over
+    data axes; retrieval candidates sharded over all axes.
+  * k-NN (the paper): graph+data row-sharded over all axes via shard_map
+    (zero-collective build, all-gather-merge search) — core.distributed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import mace as mace_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: tuple  # positional ShapeDtypeStruct pytrees
+    in_shardings: tuple  # matching NamedSharding pytrees
+    model_flops: Optional[float]  # 6·N·D (train) / 2·N·D (fwd) where defined
+    notes: str = ""
+    donate_argnums: tuple = ()
+    # while-loop-dominated programs (EHC search): cost_analysis counts loop
+    # bodies once; multiply flops/bytes by this factor (== expected trips)
+    loop_factor: float = 1.0
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def flat_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _ns(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _specs_of(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_plan(arch: str, shape: str, mesh: Mesh, mod, opts=None) -> CellPlan:
+    opts = opts or {}
+    cfg: tfm.TransformerConfig = mod.full_config()
+    info = mod.SHAPES[shape]
+    kind, S, B = info["kind"], info["seq"], info["batch"]
+    da = data_axes(mesh)
+    fa = flat_axes(mesh)
+    # dry-run lowering: unrolled layers + statically-tiled attention so
+    # cost_analysis counts every layer/tile (scan bodies count once) and
+    # fully-masked tiles are skipped (the production flash schedule).
+    chunk = max(512, S // 4)
+    n_data = int(np.prod([mesh.shape[a] for a in da]))
+    cfg = dataclasses.replace(
+        cfg, unrolled=True, q_chunk=chunk, kv_chunk=chunk,
+        moe_groups=n_data,  # shard-local MoE dispatch (EXPERIMENTS §Perf it.1)
+    )
+
+    params_shapes = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg), SDS((2,), jnp.uint32)
+    )
+    # FSDP: weight matrices sharded over BOTH axes (d over data, out over
+    # model) — params+optimizer state for the big archs exceed HBM under
+    # model-only sharding (arctic: 960 GB bf16 params alone)
+    pspecs = tfm.param_pspecs(cfg, fsdp=True)
+    params_sh = _ns(mesh, pspecs)
+
+    n_active = cfg.active_param_count()
+
+    if kind == "train":
+        ocfg = opt_lib.OptConfig(
+            name="adafactor" if cfg.param_count() > 1e11 else "adamw"
+        )
+        opt_shapes = jax.eval_shape(
+            functools.partial(opt_lib.init_opt_state, cfg=ocfg), params_shapes
+        )
+        opt_specs = opt_lib.opt_state_pspecs(pspecs, params_shapes, ocfg)
+        opt_sh = _ns(mesh, opt_specs)
+        step = train_loop.make_train_step(
+            lambda p, b: tfm.loss_fn(p, b["tokens"], cfg), ocfg
+        )
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        batch_sh = {"tokens": NamedSharding(mesh, P(da, None))}
+        return CellPlan(
+            arch, shape, kind, step,
+            (params_shapes, opt_shapes, batch),
+            (params_sh, opt_sh, batch_sh),
+            model_flops=6.0 * n_active * B * S,
+            notes=f"opt={ocfg.name}",
+        )
+
+    if kind == "prefill":
+        step = functools.partial(tfm.prefill, cfg=cfg)
+        step = lambda params, tokens: tfm.prefill(params, tokens, cfg)  # noqa: E731
+        tokens = SDS((B, S), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(da, None))
+        return CellPlan(
+            arch, shape, kind, step,
+            (params_shapes, tokens),
+            (params_sh, tok_sh),
+            model_flops=2.0 * n_active * B * S,
+        )
+
+    # decode
+    split_cache = bool(opts.get("split_cache")) and (
+        cfg.window is not None or cfg.local_global is not None)
+    if B == 1:
+        seq_axes = fa  # long_500k: every axis on the sequence (split-K decode)
+        kv_spec = P(None, None, seq_axes, None, None)
+        len_spec = P(None)
+        tok_spec = P(None)
+    else:
+        kv_spec = P(None, da, "model", None, None)
+        len_spec = P(da)
+        tok_spec = P(da)
+    if split_cache:
+        cache_shapes = jax.eval_shape(
+            lambda: tfm.init_split_cache(cfg, B, S, dtype=jnp.bfloat16))
+        # ring caches are small (window-sized): batch-shard only; global
+        # layers keep the sequence sharding
+        ring_spec = P(None, da if B > 1 else None, None, None, None)
+        cache_sh = {"k_loc": NamedSharding(mesh, ring_spec),
+                    "v_loc": NamedSharding(mesh, ring_spec),
+                    "len": NamedSharding(mesh, len_spec)}
+        if "k_glob" in cache_shapes:
+            cache_sh["k_glob"] = NamedSharding(mesh, kv_spec)
+            cache_sh["v_glob"] = NamedSharding(mesh, kv_spec)
+        step = lambda params, cache, tokens: tfm.decode_step_split(  # noqa: E731
+            params, cache, tokens, cfg)
+        notes = "windowed ring KV caches (exact SWA; §Perf it.4)"
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, B, S, dtype=jnp.bfloat16))
+        cache_sh = {
+            "k": NamedSharding(mesh, kv_spec),
+            "v": NamedSharding(mesh, kv_spec),
+            "len": NamedSharding(mesh, len_spec),
+        }
+        step = lambda params, cache, tokens: tfm.decode_step(params, cache, tokens, cfg)  # noqa: E731
+        notes = "KV cache sequence-sharded (split-K decode)"
+    tokens = SDS((B,), jnp.int32)
+    return CellPlan(
+        arch, shape, kind, step,
+        (params_shapes, cache_shapes, tokens),
+        (params_sh, cache_sh, NamedSharding(mesh, tok_spec)),
+        model_flops=2.0 * n_active * B,
+        notes=notes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_plan(arch: str, shape: str, mesh: Mesh, mod) -> CellPlan:
+    info = mod.SHAPES[shape]
+    cfg: mace_lib.MACEConfig = mod.full_config(shape)
+    fa = flat_axes(mesh)
+    da = data_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in fa]))
+
+    params_shapes = jax.eval_shape(
+        lambda k: mace_lib.init_params(k, cfg), SDS((2,), jnp.uint32)
+    )
+    params_sh = _ns(mesh, mace_lib.param_pspecs(cfg))
+    ocfg = opt_lib.OptConfig(name="adamw")
+    opt_shapes = jax.eval_shape(
+        functools.partial(opt_lib.init_opt_state, cfg=ocfg), params_shapes
+    )
+    opt_sh = _ns(mesh, opt_lib.opt_state_pspecs(mace_lib.param_pspecs(cfg), params_shapes, ocfg))
+
+    if shape == "molecule":
+        Bm, N, E = info["batch"], info["n_nodes"], info["n_edges"]
+        step = train_loop.make_train_step(
+            lambda p, b: mace_lib.energy_loss(p, b, cfg), ocfg
+        )
+        batch = {
+            "positions": SDS((Bm, N, 3), jnp.float32),
+            "species": SDS((Bm, N), jnp.int32),
+            "senders": SDS((Bm, E), jnp.int32),
+            "receivers": SDS((Bm, E), jnp.int32),
+            "energy": SDS((Bm,), jnp.float32),
+        }
+        bsh = {k: NamedSharding(mesh, P(da, *([None] * (len(v.shape) - 1))))
+               for k, v in batch.items()}
+        mflops = 2.0 * Bm * E * cfg.d_hidden * (9 + 3 + 1) * 3  # messages fwd~
+        return CellPlan(
+            arch, shape, "train", step,
+            (params_shapes, opt_shapes, batch),
+            (params_sh, opt_sh, bsh),
+            model_flops=3.0 * mflops,
+            notes="vmapped energy MSE; k-NN edges from repro.core (DESIGN §5)",
+        )
+
+    # full-batch / sampled node classification: padded to shard boundaries
+    if shape == "minibatch_lg":
+        seeds = info["batch_nodes"]
+        f1, f2 = info["fanout"]
+        N = seeds * (1 + f1 + f1 * f2)  # sampled frontier (dups kept, padded slots)
+        E = seeds * f1 + seeds * f1 * f2
+        notes = f"sampled subgraph: {seeds} seeds x fanout {f1}-{f2} (data.graphs sampler)"
+    else:
+        N, E = info["n_nodes"], info["n_edges"]
+        notes = "full-batch"
+    Np, Ep = _pad_to(N, 512), _pad_to(E, 512)
+    if (Np, Ep) != (N, E):
+        notes += f"; padded nodes {N}->{Np}, edges {E}->{Ep} (masked)"
+
+    step = train_loop.make_train_step(
+        lambda p, b: mace_lib.node_class_loss(p, b, cfg), ocfg
+    )
+    batch = {
+        "positions": SDS((Np, 3), jnp.float32),
+        "species": SDS((Np,), jnp.int32),
+        "node_feat": SDS((Np, info["d_feat"]), jnp.float32),
+        "labels": SDS((Np,), jnp.int32),
+        "train_mask": SDS((Np,), jnp.bool_),
+        "node_mask": SDS((Np,), jnp.bool_),
+        "senders": SDS((Ep,), jnp.int32),
+        "receivers": SDS((Ep,), jnp.int32),
+        "edge_mask": SDS((Ep,), jnp.bool_),
+    }
+    bsh = {k: NamedSharding(mesh, P(fa, *([None] * (len(v.shape) - 1))))
+           for k, v in batch.items()}
+    # messages: per edge ~ (1+3+9)·C mults for A-basis x3 ranks; fwd+bwd ~3x
+    mflops = 3.0 * 2.0 * Ep * cfg.d_hidden * 13 * cfg.n_layers
+    return CellPlan(
+        arch, shape, "train", step,
+        (params_shapes, opt_shapes, batch),
+        (params_sh, opt_sh, bsh),
+        model_flops=mflops,
+        notes=notes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_plan(arch: str, shape: str, mesh: Mesh, mod) -> CellPlan:
+    info = mod.SHAPES[shape]
+    cfg: recsys_lib.RecsysConfig = mod.full_config()
+    da = data_axes(mesh)
+    fa = flat_axes(mesh)
+    kind = info["kind"]
+
+    params_shapes = jax.eval_shape(
+        lambda k: recsys_lib.init_params(k, cfg), SDS((2,), jnp.uint32)
+    )
+    params_sh = _ns(mesh, recsys_lib.param_pspecs(cfg))
+
+    def batch_specs(B):
+        if cfg.name in ("deepfm", "xdeepfm"):
+            return (
+                {
+                    "dense": SDS((B, cfg.n_dense), jnp.float32),
+                    "sparse": SDS((B, cfg.n_sparse), jnp.int32),
+                    "label": SDS((B,), jnp.float32),
+                },
+                {
+                    "dense": NamedSharding(mesh, P(da, None)),
+                    "sparse": NamedSharding(mesh, P(da, None)),
+                    "label": NamedSharding(mesh, P(da)),
+                },
+            )
+        return (
+            {
+                "hist": SDS((B, cfg.seq_len), jnp.int32),
+                "target": SDS((B,), jnp.int32),
+                "label": SDS((B,), jnp.float32),
+            },
+            {
+                "hist": NamedSharding(mesh, P(da, None)),
+                "target": NamedSharding(mesh, P(da)),
+                "label": NamedSharding(mesh, P(da)),
+            },
+        )
+
+    # useful compute ~ 2 * dense-tower params per example (embedding gather is
+    # memory, not FLOPs); train ~ 3x fwd
+    tower_params = sum(
+        int(np.prod(v.shape))
+        for k, v in jax.tree_util.tree_leaves_with_path(params_shapes)
+        if "table" not in jax.tree_util.keystr(k)
+    )
+
+    if kind == "train":
+        B = info["batch"]
+        ocfg = opt_lib.OptConfig(name="adamw")
+        opt_shapes = jax.eval_shape(
+            functools.partial(opt_lib.init_opt_state, cfg=ocfg), params_shapes
+        )
+        opt_sh = _ns(mesh, opt_lib.opt_state_pspecs(
+            recsys_lib.param_pspecs(cfg), params_shapes, ocfg))
+        step = train_loop.make_train_step(
+            lambda p, b: recsys_lib.loss_fn(p, b, cfg), ocfg
+        )
+        batch, bsh = batch_specs(B)
+        return CellPlan(
+            arch, shape, kind, step,
+            (params_shapes, opt_shapes, batch),
+            (params_sh, opt_sh, bsh),
+            model_flops=3.0 * 2.0 * tower_params * B,
+            notes="table row-sharded over 'model' (DLRM)",
+        )
+
+    if kind == "serve":
+        B = info["batch"]
+        step = lambda params, batch: recsys_lib.serve_scores(params, batch, cfg)  # noqa: E731
+        batch, bsh = batch_specs(B)
+        return CellPlan(
+            arch, shape, kind, step,
+            (params_shapes, batch),
+            (params_sh, bsh),
+            model_flops=2.0 * tower_params * B,
+        )
+
+    # retrieval_cand: 1 query x N candidates, padded to shard multiple
+    N = _pad_to(info["n_candidates"], 512)
+    notes = f"candidates padded {info['n_candidates']}->{N}"
+    if cfg.name in ("deepfm", "xdeepfm"):
+        batch = {
+            "dense": SDS((1, cfg.n_dense), jnp.float32),
+            "sparse": SDS((1, cfg.n_sparse), jnp.int32),
+            "cand": SDS((N,), jnp.int32),
+        }
+        bsh = {
+            "dense": NamedSharding(mesh, P(None, None)),
+            "sparse": NamedSharding(mesh, P(None, None)),
+            "cand": NamedSharding(mesh, P(fa)),
+        }
+        step = lambda params, batch: recsys_lib.ctr_retrieval_scores(params, batch, cfg)  # noqa: E731
+        mflops = 2.0 * tower_params * N
+    elif cfg.name == "bst":
+        batch = {
+            "hist": SDS((1, cfg.seq_len), jnp.int32),
+            "cand": SDS((N,), jnp.int32),
+        }
+        bsh = {
+            "hist": NamedSharding(mesh, P(None, None)),
+            "cand": NamedSharding(mesh, P(fa)),
+        }
+        step = lambda params, batch: recsys_lib.bst_retrieval_scores(params, batch, cfg)  # noqa: E731
+        mflops = 2.0 * tower_params * N
+    else:  # mind: interests once, then a (N, D) x (D, K) GEMM
+        batch = {
+            "hist": SDS((1, cfg.seq_len), jnp.int32),
+            "candidates": SDS((N, cfg.embed_dim), jnp.float32),
+        }
+        bsh = {
+            "hist": NamedSharding(mesh, P(None, None)),
+            "candidates": NamedSharding(mesh, P(fa, None)),
+        }
+        step = lambda params, batch: recsys_lib.retrieval_scores(
+            params, batch["hist"], batch["candidates"], cfg)  # noqa: E731
+        mflops = 2.0 * N * cfg.embed_dim * cfg.n_interests
+        notes += "; two-tower dot (ANN alternative: serve/retrieval.py)"
+    return CellPlan(
+        arch, shape, kind, step,
+        (params_shapes, batch),
+        (params_sh, bsh),
+        model_flops=mflops,
+        notes=notes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# k-NN (the paper) cells
+# ---------------------------------------------------------------------------
+
+
+def _knn_plan(arch: str, shape: str, mesh: Mesh, mod) -> CellPlan:
+    from repro.core import distributed as dist
+    from repro.core.graph import KNNGraph
+
+    cfg = mod.full_config()
+    info = mod.SHAPES[shape]
+    fa = flat_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in fa]))
+    n_total, d = info["n_total"], info["d"]
+    assert n_total % ndev == 0
+    R = cfg.rev_cap or 2 * cfg.k
+    g_shapes = KNNGraph(
+        nbr_ids=SDS((n_total, cfg.k), jnp.int32),
+        nbr_dist=SDS((n_total, cfg.k), jnp.float32),
+        nbr_lam=SDS((n_total, cfg.k), jnp.int32),
+        rev_ids=SDS((n_total, R), jnp.int32),
+        rev_ptr=SDS((n_total,), jnp.int32),
+        alive=SDS((n_total,), jnp.bool_),
+        n_valid=SDS((), jnp.int32),
+    )
+    g_sh = _ns(mesh, dist.graph_pspec(fa))
+    x_dtype = jnp.bfloat16 if getattr(cfg, "data_bf16", False) else jnp.float32
+    x_shapes = SDS((n_total, d), x_dtype)
+    x_sh = NamedSharding(mesh, P(fa, None))
+    key_s = SDS((2,), jnp.uint32)
+    key_sh = NamedSharding(mesh, P(None))
+
+    if info["kind"] == "knn_build":
+        step = dist.make_distributed_build_step(mesh, cfg)
+        args = (g_shapes, x_shapes, SDS((), jnp.int32), SDS((), jnp.int32), key_s)
+        shs = (g_sh, x_sh, NamedSharding(mesh, P()), NamedSharding(mesh, P()), key_sh)
+        W = cfg.wave
+        # useful work: one wave of W queries x (expansions x candidate dists)
+        mflops = 2.0 * W * cfg.max_iters * (cfg.k + R) * d * ndev
+        notes = f"per-shard online insertion, wave={W}/shard, zero-collective"
+        lf = float(cfg.max_iters)
+    else:
+        scfg = cfg.search_config()
+        step = dist.make_distributed_search(mesh, scfg)
+        B = info["batch"]
+        args = (g_shapes, x_shapes, SDS((B, d), jnp.float32), key_s)
+        shs = (g_sh, x_sh, NamedSharding(mesh, P(None, None)), key_sh)
+        mflops = 2.0 * B * scfg.max_iters * (scfg.k + R) * d * ndev
+        notes = "scatter-gather EHC + tournament top-k merge"
+        lf = float(cfg.max_iters)
+    return CellPlan(
+        arch, shape, info["kind"], step, args, shs, mflops, notes,
+        loop_factor=lf,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+def plan(arch: str, shape: str, mesh: Mesh, opts=None) -> CellPlan:
+    from repro.models import sharding as sharding_lib
+
+    sharding_lib.set_mesh(mesh)  # activate constrain() for this mesh
+    mod = configs.get(arch)
+    if shape not in mod.SHAPES:
+        raise KeyError(f"{arch} has no shape {shape!r}")
+    fam = mod.FAMILY
+    if fam == "lm":
+        return _lm_plan(arch, shape, mesh, mod, opts)
+    if fam == "gnn":
+        return _gnn_plan(arch, shape, mesh, mod)
+    if fam == "recsys":
+        return _recsys_plan(arch, shape, mesh, mod)
+    if fam == "knn":
+        return _knn_plan(arch, shape, mesh, mod)
+    raise ValueError(fam)
+
+
+def lower(cell: CellPlan):
+    """jit + lower (no execution, no allocation)."""
+    fn = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.in_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    return fn.lower(*cell.args)

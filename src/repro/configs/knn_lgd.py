@@ -1,0 +1,28 @@
+"""The paper's own technique as a first-class arch: LGD (Alg. 3).
+
+Production setting: 16.7M vectors (d=128, l2 — SIFT-like scale x16) sharded
+over the mesh; per-shard online construction (zero-collective build) and
+scatter-gather search (DESIGN.md §4).  The dry-run lowers one build wave and
+one 4096-query search wave under shard_map on the production mesh."""
+
+from repro.core.construct import BuildConfig
+
+ARCH = "knn-lgd"
+FAMILY = "knn"
+
+SHAPES = {
+    "build_wave": {"kind": "knn_build", "n_total": 16_777_216, "d": 128, "wave": 4096},
+    "search_4k": {"kind": "knn_search", "n_total": 16_777_216, "d": 128, "batch": 4096},
+}
+SKIP = {}
+
+
+def full_config() -> BuildConfig:
+    return BuildConfig(k=20, metric="l2", wave=4096, lgd=True, beam=40, n_seeds=8)
+
+
+def smoke_config() -> BuildConfig:
+    return BuildConfig(
+        k=5, metric="l2", wave=64, lgd=True, beam=12, n_seeds=4,
+        n_seed_init=32, hash_slots=256, max_iters=12,
+    )

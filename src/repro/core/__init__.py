@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: online k-NN graph construction.
+
+Public API:
+  * ``metrics``       — generic distance registry (l2/l1/cosine/chi2/ip)
+  * ``brute``         — tiled exact k-NN (ground truth, seed graph, baseline)
+  * ``graph``         — KNNGraph state (G ∪ Ḡ as dense arrays) + invariants
+  * ``search``        — batched Enhanced Hill-Climbing (Alg. 1)
+  * ``construct``     — OLG (Alg. 2) / LGD (Alg. 3) wave-based online build
+  * ``nndescent``     — NN-Descent baseline + §IV-D refinement
+  * ``dynamic``       — online insert / remove (§IV-C)
+  * ``distributed``   — shard_map sharded build & scatter-gather search
+"""
+
+from repro.core import brute, construct, dynamic, graph, merge, metrics, nndescent, search
+
+from repro.core.construct import BuildConfig, build
+from repro.core.graph import KNNGraph, empty_graph
+from repro.core.search import SearchConfig
+from repro.core.brute import brute_force_knn, recall_at_k
+
+__all__ = [
+    "brute",
+    "construct",
+    "dynamic",
+    "graph",
+    "merge",
+    "metrics",
+    "nndescent",
+    "search",
+    "BuildConfig",
+    "build",
+    "KNNGraph",
+    "empty_graph",
+    "SearchConfig",
+    "brute_force_knn",
+    "recall_at_k",
+]

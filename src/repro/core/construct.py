@@ -1,0 +1,303 @@
+"""Online k-NN graph construction — OLG (Alg. 2) and LGD (Alg. 3), TPU-native.
+
+The paper inserts samples one at a time: search the graph under construction
+with the new sample as query, join its top-k result as a new row, and update
+the k-NN lists of every vertex the search compared against.  On TPU we insert
+*waves* of W samples (DESIGN.md §2, deviation §8.1):
+
+  1. the whole wave searches the frozen graph G_t in parallel (core.search);
+  2. an intra-wave distance tile lets near-simultaneous arrivals find each
+     other (what sequential insertion gives for free);
+  3. one batched commit produces G_{t+1}:
+       * new rows  = top-k over (search result ‖ intra-wave candidates),
+       * edge updates to existing rows = the (vertex, query, distance) triples
+         logged in the search's visited tables, merged with core.merge,
+       * reverse lists appended (ring buffers),
+       * LGD occlusion factors λ updated under Rules 1-3 using ONLY distances
+         the search already computed — the visited table *is* the paper's D
+         array (default ∞), the intra-wave tile covers wave-wave pairs.
+
+W=1 degenerates to the paper's sequential algorithm exactly; W=256..4096 is
+the production setting.  ``lgd=False`` gives OLG (Alg. 2): same flow, no λ
+bookkeeping and no expansion filtering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brute, merge
+from repro.core import search as search_lib
+from repro.core.graph import KNNGraph
+from repro.core.search import SearchConfig
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    k: int = 20  # graph degree (size of NN lists)
+    metric: str = "l2"
+    n_seed_init: int = 256  # |I|, fixed to 256 across the paper
+    wave: int = 256  # W — queries inserted per batched round
+    lgd: bool = True  # Alg. 3 (True) vs Alg. 2 / OLG (False)
+    intra_wave: bool = True  # wave members see each other (W x W tile)
+    rev_cap: Optional[int] = None  # reverse-list ring capacity (default 2k)
+    ins_cap_per_q: Optional[int] = None  # rows one query may update (default 3k)
+    # search parameters (Alg. 1/3 inner loop)
+    beam: int = 40
+    n_seeds: int = 8  # p
+    hash_slots: int = 2048
+    max_iters: int = 60
+    use_pallas: Optional[bool] = None
+    data_bf16: bool = False  # store the dataset bf16 (distances accum f32)
+
+    def search_config(self) -> SearchConfig:
+        return SearchConfig(
+            k=self.k,
+            beam=max(self.beam, self.k),
+            n_seeds=self.n_seeds,
+            hash_slots=self.hash_slots,
+            max_iters=self.max_iters,
+            metric=self.metric,
+            use_lgd_mask=self.lgd,
+            use_pallas=self.use_pallas,
+        )
+
+
+class BuildStats(NamedTuple):
+    n_comps: Array  # () int64-ish float — total distance computations
+    n_waves: Array
+    n_inserted_edges: Array
+
+
+def scanning_rate(stats: BuildStats, n: int) -> float:
+    """Eq. 2: c = C / (n (n-1) / 2)."""
+    return float(stats.n_comps) / (n * (n - 1) / 2.0)
+
+
+# ---------------------------------------------------------------------------
+# Wave commit
+# ---------------------------------------------------------------------------
+
+
+def _lookup_D(
+    vis_ids: Array,  # (W, H) per-wave-lane tables
+    vis_dist: Array,
+    lane: Array,  # (T,) which lane's table to consult
+    ids: Array,  # (T, k) ids to look up
+    probes: int,
+) -> Array:
+    """D(q_lane, ids): distance if the search computed it, else ∞ (Rule 1/3)."""
+    H = vis_ids.shape[1]
+    slots = search_lib._probe_slots(ids, H, probes)  # (T, k, P)
+    got_ids = vis_ids[lane[:, None, None], slots]
+    got_d = vis_dist[lane[:, None, None], slots]
+    hit = got_ids == ids[..., None]
+    return jnp.min(jnp.where(hit, got_d, jnp.inf), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def commit_wave(
+    g: KNNGraph,
+    x: Array,
+    q_start: Array,  # () int32 — wave rows are [q_start, q_start + W)
+    n_real: Array,  # () int32 — how many of the W are real (tail padding)
+    res: search_lib.SearchResult,
+    cfg: BuildConfig,
+) -> tuple[KNNGraph, Array]:
+    """Apply one wave's results to the graph. Returns (graph, edges_inserted)."""
+    W = res.ids.shape[0]
+    cap, k = g.nbr_ids.shape
+    lanes = jnp.arange(W, dtype=jnp.int32)
+    q_ids = q_start + lanes
+    q_mask = lanes < n_real
+    xq = x[jnp.minimum(q_ids, cap - 1)]
+
+    # ---- 1. new-row lists: search results ‖ intra-wave candidates ----------
+    new_ids, new_dist = res.ids, res.dists
+    if cfg.intra_wave and W > 1:
+        tile = ops.pairwise_distance(xq, xq, cfg.metric, use_pallas=cfg.use_pallas)
+        off = ~(q_mask[None, :] & q_mask[:, None]) | jnp.eye(W, dtype=bool)
+        tile = jnp.where(off, jnp.inf, tile)
+        wave_ids = jnp.broadcast_to(q_ids[None, :], (W, W))
+        cat_d = jnp.concatenate([new_dist, tile], axis=1)
+        cat_i = jnp.concatenate([new_ids, wave_ids], axis=1)
+        new_dist, new_ids = ops.topk_smallest(cat_d, cat_i, k)
+    new_ids = jnp.where(jnp.isfinite(new_dist), new_ids, -1)
+    new_dist = jnp.where(new_ids >= 0, new_dist, jnp.inf)
+
+    # ---- 2. candidate edges into existing rows ------------------------------
+    ins_cap = cfg.ins_cap_per_q or 3 * k
+    v_all = res.vis_ids  # (W, H)
+    d_all = res.vis_dist
+    kth = g.nbr_dist[jnp.maximum(v_all, 0), k - 1]
+    qual = (v_all >= 0) & q_mask[:, None] & (d_all < kth)
+    # keep each query's best ins_cap target rows
+    keyed = jnp.where(qual, d_all, jnp.inf)
+    order = jnp.argsort(keyed, axis=1)[:, :ins_cap]
+    v_kept = jnp.take_along_axis(jnp.where(qual, v_all, -1), order, axis=1)
+    d_kept = jnp.take_along_axis(keyed, order, axis=1)
+    v_flat = v_kept.reshape(-1)
+    d_flat = d_kept.reshape(-1)
+    q_flat = jnp.broadcast_to(q_ids[:, None], (W, ins_cap)).reshape(-1)
+    lane_flat = jnp.broadcast_to(lanes[:, None], (W, ins_cap)).reshape(-1)
+
+    mres = merge.merge_candidates(
+        g.nbr_ids, g.nbr_dist, g.nbr_lam, v_flat, q_flat, d_flat
+    )
+    m_ids, m_dist, m_lam = mres.nbr_ids, mres.nbr_dist, mres.nbr_lam
+
+    # ---- 3. LGD occlusion-factor rules (Alg. 3 / updateG) -------------------
+    if cfg.lgd:
+        T = v_flat.shape[0]
+        probes = 8
+        safe_v = jnp.minimum(jnp.maximum(v_flat, 0), cap - 1)
+        row_ids = m_ids[safe_v]  # (T, k) merged list of the target row
+        at_q = row_ids == q_flat[:, None]
+        inserted = jnp.any(at_q, axis=1) & (v_flat >= 0)
+        j_star = jnp.argmax(at_q, axis=1)  # slot of q in the merged row
+        # D(q, member_j): wave-wave pairs from the intra tile, others from the
+        # visited hash (∞ when the search never compared them — Rule 1).
+        is_wave = (row_ids >= q_start) & (row_ids < q_start + W)
+        D_hash = _lookup_D(res.vis_ids, res.vis_dist, lane_flat, row_ids, probes)
+        if cfg.intra_wave and W > 1:
+            w_idx = jnp.clip(row_ids - q_start, 0, W - 1)
+            D_wave = tile[lane_flat[:, None], w_idx]
+            D = jnp.where(is_wave, D_wave, D_hash)
+        else:
+            D = jnp.where(is_wave, jnp.inf, D_hash)
+        occludes = (D < d_flat[:, None]) & (row_ids >= 0) & inserted[:, None]
+        slots_k = jnp.arange(k, dtype=jnp.int32)[None, :]
+        before = slots_k < j_star[:, None]
+        after = slots_k > j_star[:, None]
+        # Rule 2: λ(q) = #{j ranked before q : D(q, x_j) < m(q, v)}
+        lam_q = jnp.sum(occludes & before, axis=1).astype(jnp.int32)
+        m_lam = m_lam.at[
+            jnp.where(inserted, safe_v, cap), jnp.where(inserted, j_star, 0)
+        ].add(jnp.where(inserted, lam_q, 0), mode="drop")
+        # Rule 3: λ(x_j) += 1 for j ranked after q with D(q, x_j) < m(q, v)
+        add3 = (occludes & after).astype(jnp.int32)  # (T, k)
+        m_lam = m_lam.at[jnp.where(inserted, safe_v, cap)[:, None], slots_k].add(
+            jnp.where(inserted[:, None], add3, 0), mode="drop"
+        )
+    else:
+        inserted = jnp.any(m_ids[jnp.minimum(jnp.maximum(v_flat, 0), cap - 1)] == q_flat[:, None], axis=1) & (
+            v_flat >= 0
+        )
+
+    # ---- 4. write back: existing-row merges + new rows ----------------------
+    safe_q = jnp.minimum(q_ids, cap - 1)
+    nbr_ids = m_ids.at[safe_q].set(jnp.where(q_mask[:, None], new_ids, m_ids[safe_q]))
+    nbr_dist = m_dist.at[safe_q].set(
+        jnp.where(q_mask[:, None], new_dist, m_dist[safe_q])
+    )
+    nbr_lam = m_lam.at[safe_q].set(
+        jnp.where(q_mask[:, None], 0, m_lam[safe_q])  # λ init 0 on join (Alg. 3)
+    )
+
+    # ---- 5. reverse-list appends --------------------------------------------
+    # (a) new rows list their members; (b) inserted queries join target rows.
+    own_a = jnp.broadcast_to(q_ids[:, None], (W, k)).reshape(-1)
+    mem_a = jnp.where(q_mask[:, None], new_ids, -1).reshape(-1)
+    own_b = jnp.where(inserted, v_flat, -1)
+    mem_b = jnp.where(inserted, q_flat, -1)
+    owners = jnp.concatenate([own_a, own_b])
+    members = jnp.concatenate([mem_a, mem_b])
+    rev_ids, rev_ptr = merge.append_reverse(g.rev_ids, g.rev_ptr, owners, members)
+
+    alive = g.alive.at[safe_q].set(q_mask | g.alive[safe_q])
+    n_valid = jnp.minimum(g.n_valid + n_real, cap).astype(jnp.int32)
+    g2 = KNNGraph(
+        nbr_ids=nbr_ids,
+        nbr_dist=nbr_dist,
+        nbr_lam=nbr_lam,
+        rev_ids=rev_ids,
+        rev_ptr=rev_ptr,
+        alive=alive,
+        n_valid=n_valid,
+    )
+    return g2, mres.n_inserted
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def build(
+    x: Array,
+    cfg: BuildConfig,
+    key: Optional[Array] = None,
+    *,
+    wave_callback: Optional[Callable[[int, KNNGraph], None]] = None,
+    initial: Optional[tuple[KNNGraph, int]] = None,
+) -> tuple[KNNGraph, BuildStats]:
+    """Build the k-NN graph over x with OLG (cfg.lgd=False) or LGD (True).
+
+    Args:
+      x: (n, d) dataset.
+      cfg: build configuration.
+      key: PRNG key (entry-point sampling).
+      wave_callback: called as f(wave_index, graph) after each commit —
+        checkpoint / progress hook (fault tolerance: construction resumes
+        from any wave boundary, see train.checkpoint).
+      initial: optional (graph, next_row) to resume from a checkpoint.
+
+    Returns: (graph, stats).
+    """
+    n = x.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    scfg = cfg.search_config()
+
+    if initial is not None:
+        g, start = initial
+    else:
+        n_seed = min(cfg.n_seed_init, n)
+        g = brute.exact_seed_graph(
+            x, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap,
+            use_pallas=cfg.use_pallas,
+        )
+        start = n_seed
+    # seed-graph comparisons count toward the scanning rate
+    n_seed0 = int(start)
+    total_comps = n_seed0 * (n_seed0 - 1) / 2.0 if initial is None else 0.0
+    total_edges = 0.0
+    W = cfg.wave
+    n_waves = 0
+
+    pos = start
+    while pos < n:
+        n_real = min(W, n - pos)
+        q_ids = jnp.minimum(pos + jnp.arange(W), n - 1)
+        q = x[q_ids]
+        key, sk = jax.random.split(key)
+        res = search_lib.search(g, x, q, sk, scfg)
+        res = res._replace(
+            n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
+        )
+        g, edges = commit_wave(
+            g, x, jnp.asarray(pos, jnp.int32), jnp.asarray(n_real, jnp.int32), res, cfg
+        )
+        total_comps += float(jnp.sum(res.n_comps))
+        if cfg.intra_wave and W > 1:
+            total_comps += n_real * (n_real - 1) / 2.0
+        total_edges += float(edges)
+        pos += n_real
+        n_waves += 1
+        if wave_callback is not None:
+            wave_callback(n_waves, g)
+
+    stats = BuildStats(
+        n_comps=jnp.asarray(total_comps),
+        n_waves=jnp.asarray(n_waves),
+        n_inserted_edges=jnp.asarray(total_edges),
+    )
+    return g, stats

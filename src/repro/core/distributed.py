@@ -1,0 +1,201 @@
+"""Sharded-graph parallelism: the production (1000+ node) k-NN deployment.
+
+DESIGN.md §4: the dataset is partitioned row-wise across every device of the
+mesh; each device owns an independent LGD graph over its shard.
+
+  * **build** — embarrassingly parallel: one ``shard_map`` wave step runs
+    search+commit per shard with ZERO collective traffic (the paper's online
+    property is what makes this possible: a shard never needs another
+    shard's rows to insert its own).  Node failure loses one shard only;
+    the shard is rebuilt from its data slice while serving continues on the
+    rest (test_distributed.py exercises the degraded-recall path).
+  * **search** — scatter-gather: the query wave is replicated (one broadcast),
+    every shard runs local EHC, and the per-shard top-k lists (k ids+dists
+    per query — tiny) meet in an all-gather + tournament top-k merge.
+    Recall >= single-graph recall; cost is the classic p-way fanout trade.
+
+Ids are translated local -> global (shard_index * shard_rows + local) at the
+merge boundary, so callers see one logical id space.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import construct as construct_lib
+from repro.core import search as search_lib
+from repro.core.graph import KNNGraph, empty_graph
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+def _flat_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def graph_pspec(axes) -> KNNGraph:
+    """PartitionSpecs for a row-sharded KNNGraph (n_valid replicated —
+    distributed builds keep shards in lockstep)."""
+    return KNNGraph(
+        nbr_ids=P(axes, None),
+        nbr_dist=P(axes, None),
+        nbr_lam=P(axes, None),
+        rev_ids=P(axes, None),
+        rev_ptr=P(axes),
+        alive=P(axes),
+        n_valid=P(),
+    )
+
+
+def wave_step(
+    g: KNNGraph,
+    x: Array,
+    pos: Array,  # () int32 — wave rows are [pos, pos + cfg.wave)
+    n_real: Array,  # () int32
+    key: Array,
+    cfg: construct_lib.BuildConfig,
+) -> tuple[KNNGraph, Array]:
+    """One fused search+commit insertion wave (the unit the dry-run lowers).
+
+    The wave's vectors already live at rows [pos, pos+W) of x (append-only
+    data region); returns (updated graph, distance computations spent).
+    """
+    W = cfg.wave
+    n = x.shape[0]
+    q_ids = jnp.minimum(pos + jnp.arange(W, dtype=jnp.int32), n - 1)
+    q = x[q_ids]
+    scfg = cfg.search_config()
+    res = search_lib.search(g, x, q, key, scfg)
+    res = res._replace(
+        n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
+    )
+    g2, _ = construct_lib.commit_wave(g, x, pos, n_real, res, cfg)
+    return g2, jnp.sum(res.n_comps)
+
+
+def make_distributed_build_step(
+    mesh: Mesh, cfg: construct_lib.BuildConfig, axes: Optional[Sequence[str]] = None
+):
+    """shard_map'd wave step: every shard inserts its own next W rows.
+
+    Returns step(g, x, pos, n_real, key) -> (g, total_comps); all graph/data
+    leaves row-sharded over ``axes`` (default: every mesh axis).  No
+    collectives except the final comps psum (monitoring only).
+    """
+    ax = tuple(axes) if axes is not None else _flat_axes(mesh)
+    gspec = graph_pspec(ax)
+
+    def local(g, x, pos, n_real, key):
+        # per-shard PRNG: fold in the linearized shard index
+        idx = jnp.int32(0)
+        stride = 1
+        for a in reversed(ax):
+            idx = idx + jax.lax.axis_index(a) * stride
+            stride = stride * jax.lax.axis_size(a)
+        g2, comps = wave_step(g, x, pos, n_real, jax.random.fold_in(key, idx), cfg)
+        return g2, jax.lax.psum(comps, ax)
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(gspec, P(ax, None), P(), P(), P(None)),
+        out_specs=(gspec, P()),
+        check_vma=False,
+    )
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    scfg: search_lib.SearchConfig,
+    axes: Optional[Sequence[str]] = None,
+):
+    """shard_map'd scatter-gather search.
+
+    Returns search(g, x, q, key) -> (ids (B,k) GLOBAL ids, dists (B,k)),
+    with q replicated, graph/data row-sharded, and one all-gather of the
+    per-shard (k ids, k dists) — the only collective on the serving path.
+    """
+    ax = tuple(axes) if axes is not None else _flat_axes(mesh)
+    gspec = graph_pspec(ax)
+
+    def local(g, x, q, key):
+        idx = jnp.int32(0)
+        stride = 1
+        for a in reversed(ax):
+            idx = idx + jax.lax.axis_index(a) * stride
+            stride = stride * jax.lax.axis_size(a)
+        n_local = x.shape[0]
+        res = search_lib.search(g, x, q, jax.random.fold_in(key, idx), scfg)
+        gids = jnp.where(res.ids >= 0, res.ids + idx * n_local, -1)
+        # tournament merge: gather every shard's top-k and re-select
+        all_ids = jax.lax.all_gather(gids, ax, axis=0, tiled=False)  # (P, B, k)
+        all_d = jax.lax.all_gather(res.dists, ax, axis=0, tiled=False)
+        nsh = all_ids.shape[0]
+        B = q.shape[0]
+        cat_i = jnp.moveaxis(all_ids, 0, 1).reshape(B, nsh * scfg.k)
+        cat_d = jnp.moveaxis(all_d, 0, 1).reshape(B, nsh * scfg.k)
+        d, i = ops.topk_smallest(cat_d, cat_i, scfg.k)
+        return i, d
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(gspec, P(ax, None), P(None, None), P(None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+
+
+def init_sharded_state(
+    mesh: Mesh,
+    n_total: int,
+    d: int,
+    cfg: construct_lib.BuildConfig,
+    *,
+    axes: Optional[Sequence[str]] = None,
+    seed: int = 0,
+):
+    """Device-sharded (graph, data) with per-shard exact seed graphs.
+
+    Every shard gets its own |I|-row exact seed graph (Alg. 2 line 4-5 run
+    per shard) so distributed construction starts from the same invariant
+    the paper's sequential algorithm does.
+    """
+    ax = tuple(axes) if axes is not None else _flat_axes(mesh)
+    n_dev = 1
+    for a in ax:
+        n_dev *= mesh.shape[a]
+    assert n_total % n_dev == 0, (n_total, n_dev)
+    n_local = n_total // n_dev
+
+    gspec = graph_pspec(ax)
+
+    def init_local(key):
+        x = jax.random.uniform(key, (n_local, d), jnp.float32)
+        from repro.core import brute
+
+        n_seed = min(cfg.n_seed_init, n_local)
+        g = brute.exact_seed_graph(
+            x, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap, use_pallas=False
+        )
+        return g, x
+
+    def shard_init():
+        idx = jnp.int32(0)
+        stride = 1
+        for a in reversed(ax):
+            idx = idx + jax.lax.axis_index(a) * stride
+            stride = stride * jax.lax.axis_size(a)
+        return init_local(jax.random.fold_in(jax.random.PRNGKey(seed), idx))
+
+    fn = jax.shard_map(
+        shard_init, mesh=mesh, in_specs=(), out_specs=(gspec, P(ax, None)),
+        check_vma=False,
+    )
+    return jax.jit(fn)()

@@ -1,0 +1,139 @@
+"""Dynamic updates — §IV-C: samples join and leave the graph online.
+
+Insertion *is* the construction step (Alg. 2/3): ``insert`` simply runs more
+waves against the existing graph, so an open set (the paper's Flickr / object
+-tracking / e-shopping scenarios) is supported by the same code path as the
+initial build — no separate machinery, no reconstruction.
+
+Removal follows the paper exactly:
+  * drop the row (k-NN list released, ``alive`` cleared);
+  * purge the sample from the reverse side (its reverse list tells us which
+    rows reference it; we additionally sweep all lists since ring-buffer
+    reverse lists are bounded — DESIGN.md §8.2);
+  * LGD λ repair: per the paper, only samples ranked *after* the removed one
+    in each affected list need their λ updated (undo of Rule 3) — ~k²/2
+    distance computations per removal on average, recomputed on the spot.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import construct as construct_lib
+from repro.core import metrics as metrics_lib
+from repro.core import search as search_lib
+from repro.core.graph import KNNGraph
+
+Array = jax.Array
+
+
+def insert(
+    g: KNNGraph,
+    x: Array,
+    n_new: int,
+    cfg: construct_lib.BuildConfig,
+    key: Optional[Array] = None,
+) -> tuple[KNNGraph, construct_lib.BuildStats]:
+    """Insert rows [n_valid, n_valid + n_new) of x into the graph online.
+
+    ``x`` is the full (capacity, d) data array with the new samples already
+    written at their rows (the framework's data region grows append-only,
+    which is also what the sharded serving path assumes).
+    """
+    start = int(g.n_valid)
+    if key is None:
+        key = jax.random.PRNGKey(start)
+    sub = x[: start + n_new]
+    return construct_lib.build(sub, cfg, key, initial=(g, start))
+
+
+def remove(
+    g: KNNGraph,
+    x: Array,
+    ids: Array,
+    metric: str = "l2",
+    *,
+    repair_lambda: bool = True,
+) -> KNNGraph:
+    """Remove samples from the graph (batched).
+
+    Args:
+      g: graph.
+      x: (cap, d) data (needed for the λ repair distance recomputations).
+      ids: (m,) int32 sample ids to remove.
+
+    Returns the updated graph.  Rows that lose neighbors keep holes (padding
+    moves to the tail); search tolerates short lists, and the next refinement
+    or insertion wave naturally refills them.
+    """
+    cap, k = g.nbr_ids.shape
+    removed = jnp.zeros((cap,), bool).at[jnp.clip(ids, 0, cap - 1)].set(True)
+
+    hit = jnp.where(g.nbr_ids >= 0, removed[jnp.maximum(g.nbr_ids, 0)], False)
+
+    nbr_lam = g.nbr_lam
+    if repair_lambda:
+        # Undo Rule 3: for each removed member m at slot s of row r, samples
+        # at slots > s lose one λ count if m(x_j, x_m) < m(x_m, x_r).
+        # Distances are recomputed directly (k^2/2 per affected row, as the
+        # paper prescribes) — vectorized over all rows at once.
+        safe_ids = jnp.maximum(g.nbr_ids, 0)
+        vecs = x[safe_ids]  # (cap, k, d)
+        rows = x[: cap]  # (cap, d)
+
+        def row_repair(row_vec, member_vecs, member_hit, member_valid, row_dist):
+            # pair distances between members (k, k)
+            dm = metrics_lib.pairwise(metric, member_vecs, member_vecs)
+            s = jnp.arange(k)
+            later = s[None, :] > s[:, None]  # (s_removed, s_later)
+            # threshold: m(x_m, row) — the removed member's distance to row
+            thresh = row_dist[:, None]
+            undo = (
+                member_hit[:, None]
+                & member_valid[None, :]
+                & ~member_hit[None, :]
+                & later
+                & (dm < thresh)
+            )
+            return jnp.sum(undo, axis=0).astype(jnp.int32)  # per later slot
+
+        dec = jax.vmap(row_repair)(
+            rows, vecs, hit, g.nbr_ids >= 0, g.nbr_dist
+        )
+        nbr_lam = jnp.maximum(nbr_lam - dec, 0)
+
+    # purge removed entries and re-pack rows (stable sort keeps order)
+    dist = jnp.where(hit, jnp.inf, g.nbr_dist)
+    idsx = jnp.where(hit, -1, g.nbr_ids)
+    lam = jnp.where(hit, 0, nbr_lam)
+    order = jnp.argsort(jnp.where(idsx >= 0, dist, jnp.inf), axis=1, stable=True)
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
+    nbr_ids = take(idsx)
+    nbr_dist = jnp.where(nbr_ids >= 0, take(dist), jnp.inf)
+    nbr_lam2 = jnp.where(nbr_ids >= 0, take(lam), 0)
+
+    # clear the removed rows themselves
+    rid = jnp.clip(ids, 0, cap - 1)
+    nbr_ids = nbr_ids.at[rid].set(-1)
+    nbr_dist = nbr_dist.at[rid].set(jnp.inf)
+    nbr_lam2 = nbr_lam2.at[rid].set(0)
+
+    # purge from reverse lists (ring buffers keep their ptr; holes are -1)
+    rev_hit = jnp.where(g.rev_ids >= 0, removed[jnp.maximum(g.rev_ids, 0)], False)
+    rev_ids = jnp.where(rev_hit, -1, g.rev_ids)
+    rev_ids = rev_ids.at[rid].set(-1)
+    rev_ptr = g.rev_ptr.at[rid].set(0)
+
+    alive = g.alive.at[rid].set(False)
+    return KNNGraph(
+        nbr_ids=nbr_ids,
+        nbr_dist=nbr_dist,
+        nbr_lam=nbr_lam2,
+        rev_ids=rev_ids,
+        rev_ptr=rev_ptr,
+        alive=alive,
+        n_valid=g.n_valid,
+    )

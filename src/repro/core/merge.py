@@ -1,0 +1,177 @@
+"""Batched ``insertG``: merge a flat stream of candidate edges into k-NN lists.
+
+This is the vectorized form of the paper's ``insertG(a, b, m(a,b), 𝒢)``.  On
+a CPU each call surgically splices one node into one sorted linked list; on a
+TPU we instead collect *all* candidate edges produced by a wave (OLG/LGD
+construction), a local-join round (NN-Descent) or a refinement pass into flat
+``(row, id, dist)`` triples and commit them in one shot:
+
+  qualify -> dedupe -> segment-rank -> scatter to per-row buffers -> row merge
+
+The merge is exact with respect to the final top-k content: any candidate
+that sequential insertion would have kept is kept (rank-<k filtering per row
+is lossless because at most k candidates can enter a k-list).  What differs
+from sequential semantics is only *when* displaced entries disappear — the
+same batching trade NN-Descent makes (DESIGN.md §8.1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class MergeResult(NamedTuple):
+    nbr_ids: Array  # (cap, k) int32  merged lists
+    nbr_dist: Array  # (cap, k) float32
+    nbr_lam: Array  # (cap, k) int32 — carried for old entries, 0 for new
+    is_new: Array  # (cap, k) bool — slot filled by this merge
+    old_slot: Array  # (cap, k) int32 — original slot index if carried, -1 if new
+    cand_ids: Array  # (cap, k) int32 — per-row qualified candidates (post rank-filter)
+    cand_dist: Array  # (cap, k) float32
+    n_inserted: Array  # () int32 — number of slots that changed
+
+
+def _segment_rank(sorted_keys: Array) -> Array:
+    """Rank of each element within its run of equal keys (keys sorted)."""
+    idx = jnp.arange(sorted_keys.shape[0])
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
+    )
+    seg_start = jnp.maximum.accumulate(jnp.where(is_start, idx, 0))
+    return (idx - seg_start).astype(jnp.int32)
+
+
+def merge_candidates(
+    nbr_ids: Array,
+    nbr_dist: Array,
+    nbr_lam: Array,
+    v: Array,
+    q: Array,
+    d: Array,
+) -> MergeResult:
+    """Commit candidate edges (v -> q with distance d) into the k-NN lists.
+
+    Args:
+      nbr_ids/nbr_dist/nbr_lam: (cap, k) graph rows (sorted ascending).
+      v: (T,) int32 target rows; -1 (or any negative) = padding.
+      q: (T,) int32 candidate neighbor ids.
+      d: (T,) float32 distances m(v, q).
+
+    Returns: MergeResult with merged rows and provenance masks.
+    """
+    cap, k = nbr_ids.shape
+    v = v.astype(jnp.int32)
+    q = q.astype(jnp.int32)
+    d = d.astype(jnp.float32)
+
+    # --- qualify -----------------------------------------------------------
+    valid = (v >= 0) & (v < cap) & (q >= 0) & (q != v) & jnp.isfinite(d)
+    vs = jnp.where(valid, v, cap)
+    kth = jnp.where(valid, nbr_dist[jnp.minimum(vs, cap - 1), k - 1], -jnp.inf)
+    valid &= d < kth
+    # drop candidates already present in the row
+    row_ids = nbr_ids[jnp.minimum(vs, cap - 1)]  # (T, k)
+    present = jnp.any(row_ids == q[:, None], axis=1)
+    valid &= ~present
+
+    # --- dedupe exact (v, q) duplicates (NN-Descent emits them) ------------
+    v1 = jnp.where(valid, v, cap)
+    q1 = jnp.where(valid, q, cap)
+    order1 = jnp.lexsort((q1, v1))
+    sv1, sq1 = v1[order1], q1[order1]
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (sv1[1:] == sv1[:-1]) & (sq1[1:] == sq1[:-1])]
+    )
+    dup_unsorted = jnp.zeros_like(dup).at[order1].set(dup)
+    valid &= ~dup_unsorted
+
+    # --- segment rank by (v, d), keep top-k per row -------------------------
+    vv = jnp.where(valid, v, cap)
+    order2 = jnp.lexsort((d, vv))
+    sv = vv[order2]
+    sq = q[order2]
+    sd = d[order2]
+    rank = _segment_rank(sv)
+    keep = (sv < cap) & (rank < k)
+
+    cand_ids = jnp.full((cap + 1, k), -1, jnp.int32)
+    cand_dist = jnp.full((cap + 1, k), jnp.inf, jnp.float32)
+    rrow = jnp.where(keep, sv, cap)
+    rcol = jnp.where(keep, rank, 0)
+    cand_ids = cand_ids.at[rrow, rcol].max(jnp.where(keep, sq, -1), mode="drop")
+    cand_dist = cand_dist.at[rrow, rcol].min(jnp.where(keep, sd, jnp.inf), mode="drop")
+    cand_ids = cand_ids[:cap]
+    cand_dist = cand_dist[:cap]
+
+    # --- row-wise merge: top-k of (old ‖ candidates) ------------------------
+    all_ids = jnp.concatenate([nbr_ids, cand_ids], axis=1)  # (cap, 2k)
+    all_dist = jnp.concatenate([nbr_dist, cand_dist], axis=1)
+    all_lam = jnp.concatenate([nbr_lam, jnp.zeros_like(nbr_lam)], axis=1)
+    origin = jnp.broadcast_to(jnp.arange(2 * k, dtype=jnp.int32), (cap, 2 * k))
+    # stable sort keeps old entries ahead of equal-distance candidates
+    order = jnp.argsort(jnp.where(all_ids >= 0, all_dist, jnp.inf), axis=1, stable=True)
+    take = lambda a: jnp.take_along_axis(a, order[:, :k], axis=1)
+    m_ids = take(all_ids)
+    m_dist = take(all_dist)
+    m_lam = take(all_lam)
+    m_origin = take(origin)
+    is_new = (m_origin >= k) & (m_ids >= 0)
+    old_slot = jnp.where(m_origin < k, m_origin, -1)
+    m_lam = jnp.where(is_new, 0, m_lam)
+    n_inserted = jnp.sum(is_new).astype(jnp.int32)
+    return MergeResult(
+        nbr_ids=m_ids,
+        nbr_dist=m_dist,
+        nbr_lam=m_lam,
+        is_new=is_new,
+        old_slot=old_slot,
+        cand_ids=cand_ids,
+        cand_dist=cand_dist,
+        n_inserted=n_inserted,
+    )
+
+
+def append_reverse(
+    rev_ids: Array, rev_ptr: Array, owner: Array, member: Array
+) -> tuple[Array, Array]:
+    """Batched FIFO ring-buffer append: owner joins rev list of member.
+
+    Args:
+      rev_ids: (cap, R) ring buffers.
+      rev_ptr: (cap,) total-appends counters.
+      owner: (T,) int32 rows that now list ``member`` in their k-NN list.
+      member: (T,) int32; negative = padding.
+
+    Returns updated (rev_ids, rev_ptr).
+    """
+    cap, R = rev_ids.shape
+    valid = (member >= 0) & (member < cap) & (owner >= 0)
+    m = jnp.where(valid, member, cap)
+    order = jnp.argsort(m)
+    sm = m[order]
+    so = jnp.where(valid, owner, -1)[order]
+    rank = _segment_rank(sm)
+    # If more than R appends hit one member in a single wave, keep the last R
+    # (FIFO overwrite — matches ring semantics of sequential appends).
+    counts_all = jax.ops.segment_sum(
+        (sm < cap).astype(jnp.int32), sm, num_segments=cap + 1
+    )
+    counts = counts_all[:cap]
+    cnt_e = counts_all[jnp.minimum(sm, cap)]
+    # keep only the last R appends per member so ring slots are unique within
+    # one batch (deterministic FIFO overwrite)
+    ok = (sm < cap) & (rank >= cnt_e - R)
+    base = rev_ptr[jnp.minimum(sm, cap - 1)]
+    slot = (base + rank) % R
+    ext = jnp.concatenate([rev_ids, jnp.full((1, R), -1, jnp.int32)], axis=0)
+    ext = ext.at[jnp.where(ok, sm, cap), jnp.where(ok, slot, 0)].set(
+        jnp.where(ok, so, -1)
+    )
+    rev_ids = ext[:cap]
+    rev_ptr = rev_ptr + counts
+    return rev_ids, rev_ptr

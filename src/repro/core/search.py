@@ -1,0 +1,345 @@
+"""Batched Enhanced Hill-Climbing (EHC) — Alg. 1, TPU-native.
+
+The paper's Alg. 1 is a best-first walk: repeatedly take the closest
+not-yet-expanded vertex r from a sorted list Q, compare the query against
+G[r] ∪ Ḡ[r], and stop when no unexpanded vertex can improve the result.
+
+TPU adaptation (DESIGN.md §2):
+  * a whole wave of B queries climbs simultaneously (leading batch axis, not
+    vmap, so the gathers/distance kernels see batched shapes);
+  * Q becomes a fixed-width beam (ids, dists, expanded-flags) maintained by
+    top-k merges;
+  * the O(n) Flag array becomes a per-query open-addressing hash table that
+    doubles as the paper's D array of Alg. 3 (id -> computed distance), which
+    is exactly what the LGD commit needs later;
+  * ``while updated`` becomes a lax.while_loop over a convergence mask: a
+    lane is done when its best unexpanded beam entry cannot enter its current
+    top-k (the paper's "no closer sample identified"), with a hard
+    ``max_iters`` cap as straggler mitigation — one pathological query cannot
+    stall the wave (converged lanes are masked, SIMT style).
+
+LGD-aware expansion (Alg. 3 lines 15/19): neighbors whose occlusion factor λ
+exceeds the mean λ of the expanded row are skipped; for reverse edges the λ
+of the forward twin (r's slot inside G[j]) is looked up.  ``hard_diversify``
+gives the FANNG/DPG-style λ>0 ablation the paper argues against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import KNNGraph
+from repro.kernels import ops
+
+Array = jax.Array
+
+_KNUTH = jnp.uint32(2654435761)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int = 10  # result size; also the improvement-termination horizon
+    beam: int = 64  # beam width e >= k
+    n_seeds: int = 8  # p random entry points
+    hash_slots: int = 2048  # H, power of two; ~4x expected comparisons
+    hash_probes: int = 8  # linear-probe depth
+    max_iters: int = 64  # straggler cap on expansions
+    metric: str = "l2"
+    use_reverse: bool = True  # False = plain HC (Fig. 5 ablation: no Ḡ[r])
+    use_lgd_mask: bool = False  # λ <= mean-λ expansion filter (Alg. 3)
+    lgd_rev_lambda: bool = True  # look up λ of the forward twin for rev edges
+    hard_diversify: bool = False  # ablation: skip any λ > 0 (DPG/FANNG style)
+    use_pallas: Optional[bool] = None
+
+    def __post_init__(self):
+        assert self.beam >= self.k, "beam must be >= k"
+        assert self.hash_slots & (self.hash_slots - 1) == 0, "hash_slots must be 2^h"
+
+
+class SearchResult(NamedTuple):
+    ids: Array  # (B, k) int32 top-k ids, ascending distance
+    dists: Array  # (B, k) float32
+    vis_ids: Array  # (B, H) int32 — every vertex compared (the D array keys)
+    vis_dist: Array  # (B, H) float32 — m(q, vertex) (the D array values)
+    n_comps: Array  # (B,) int32 — distance computations (scanning rate)
+    n_iters: Array  # (B,) int32 — expansions until convergence
+    converged: Array  # (B,) bool — False = stopped by max_iters cap
+
+
+def _probe_slots(ids: Array, hash_slots: int, probes: int) -> Array:
+    """(...,) ids -> (..., P) linear-probe slot sequence."""
+    h = (ids.astype(jnp.uint32) * _KNUTH) >> jnp.uint32(16)
+    h = h.astype(jnp.int32) & (hash_slots - 1)
+    return (h[..., None] + jnp.arange(probes, dtype=jnp.int32)) & (hash_slots - 1)
+
+
+def hash_lookup(vis_ids: Array, vis_dist: Array, ids: Array, probes: int) -> tuple[Array, Array]:
+    """Batch lookup ids (B, C) in per-lane tables (B, H).
+
+    Returns (found (B, C) bool, dist (B, C) f32 — +inf where not found).
+    The paper's D[i] with default ∞ (Alg. 3 line 3) is exactly this.
+    """
+    B, H = vis_ids.shape
+    C = ids.shape[1]
+    slots = _probe_slots(ids, H, probes)  # (B, C, P)
+    flat = slots.reshape(B, C * probes)
+    got_ids = jnp.take_along_axis(vis_ids, flat, axis=1).reshape(B, C, probes)
+    got_dist = jnp.take_along_axis(vis_dist, flat, axis=1).reshape(B, C, probes)
+    hit = got_ids == ids[..., None]
+    found = jnp.any(hit, axis=-1)
+    dist = jnp.min(jnp.where(hit, got_dist, jnp.inf), axis=-1)
+    return found, dist
+
+
+def _hash_probe_state(vis_ids: Array, ids: Array, probes: int):
+    """Classify ids against tables: (present, insert_ok, insert_slot)."""
+    B, H = vis_ids.shape
+    C = ids.shape[1]
+    slots = _probe_slots(ids, H, probes)
+    flat = slots.reshape(B, C * probes)
+    got = jnp.take_along_axis(vis_ids, flat, axis=1).reshape(B, C, probes)
+    is_hit = got == ids[..., None]
+    is_empty = got == -1
+    pidx = jnp.arange(probes, dtype=jnp.int32)
+    first_hit = jnp.min(jnp.where(is_hit, pidx, probes), axis=-1)
+    first_empty = jnp.min(jnp.where(is_empty, pidx, probes), axis=-1)
+    present = first_hit < first_empty
+    insert_ok = (~present) & (first_empty < probes)
+    insert_slot = jnp.take_along_axis(
+        slots, jnp.minimum(first_empty, probes - 1)[..., None], axis=-1
+    )[..., 0]
+    return present, insert_ok, insert_slot
+
+
+def _dedupe_beam(ids: Array, dist: Array, exp: Array):
+    """Mask later copies of duplicate beam ids (rows sorted by distance).
+
+    Duplicates are rare — they only arise when a hash insert failed (probe
+    exhaustion) and the same vertex was re-compared later — but they must not
+    survive into results/new graph rows.
+    """
+    dup = jnp.triu((ids[:, None, :] == ids[:, :, None]) & (ids[:, None, :] >= 0), k=1)
+    dup = jnp.any(dup, axis=1)
+    return (
+        jnp.where(dup, -1, ids),
+        jnp.where(dup, jnp.inf, dist),
+        exp | dup,
+    )
+
+
+def _row_mean_lambda(lam_row: Array, ids_row: Array) -> Array:
+    """Mean λ over valid entries of a k-NN list: λ̄(r)."""
+    valid = ids_row >= 0
+    cnt = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    return jnp.sum(jnp.where(valid, lam_row, 0), axis=-1) / cnt
+
+
+class _LoopState(NamedTuple):
+    beam_ids: Array
+    beam_dist: Array
+    beam_exp: Array
+    vis_ids: Array
+    vis_dist: Array
+    n_comps: Array
+    n_iters: Array
+    done: Array
+    it: Array
+
+
+def _candidates_from_expansion(
+    g: KNNGraph, r_id: Array, has_r: Array, cfg: SearchConfig
+) -> Array:
+    """Expand r: G[r] ∪ Ḡ[r] with LGD masking. Returns (B, k+R) ids, -1 masked."""
+    B = r_id.shape[0]
+    safe_r = jnp.maximum(r_id, 0)
+    fwd_ids = g.nbr_ids[safe_r]  # (B, kg)
+    rev_ids = g.rev_ids[safe_r]  # (B, R)
+    if not cfg.use_reverse:  # plain hill-climbing (Hajebi'11): G[r] only
+        rev_ids = jnp.full_like(rev_ids, -1)
+    if cfg.use_lgd_mask or cfg.hard_diversify:
+        fwd_lam = g.nbr_lam[safe_r]  # (B, kg)
+        mean_lam = _row_mean_lambda(fwd_lam, fwd_ids)[:, None]
+        if cfg.hard_diversify:
+            fwd_keep = fwd_lam <= 0
+        else:
+            fwd_keep = fwd_lam.astype(jnp.float32) <= mean_lam  # Alg.3 line 15 (≤)
+        fwd_ids = jnp.where(fwd_keep, fwd_ids, -1)
+        if cfg.lgd_rev_lambda:
+            # λ of the forward twin: r's slot inside G[j] for each rev entry j.
+            safe_rev = jnp.maximum(rev_ids, 0)
+            twin_ids = g.nbr_ids[safe_rev]  # (B, R, kg)
+            twin_lam = g.nbr_lam[safe_rev]  # (B, R, kg)
+            at_r = twin_ids == r_id[:, None, None]
+            rev_lam = jnp.max(jnp.where(at_r, twin_lam, 0), axis=-1)  # 0 if stale
+            rev_lam = rev_lam.astype(jnp.float32)
+            if cfg.hard_diversify:
+                rev_keep = rev_lam <= 0
+            else:
+                rev_keep = rev_lam < mean_lam  # Alg.3 line 19 (<)
+            rev_ids = jnp.where(rev_keep, rev_ids, -1)
+    cands = jnp.concatenate([fwd_ids, rev_ids], axis=1)  # (B, C0)
+    cands = jnp.where(has_r[:, None], cands, -1)
+    # mask ids beyond allocation / dead rows
+    in_range = (cands >= 0) & (cands < g.n_valid)
+    alive = jnp.where(in_range, g.alive[jnp.maximum(cands, 0)], False)
+    cands = jnp.where(in_range & alive, cands, -1)
+    # in-step dedupe (G[r] and Ḡ[r] overlap, per the paper's Fig. 1 remark)
+    dup = jnp.triu(
+        (cands[:, None, :] == cands[:, :, None]) & (cands[:, None, :] >= 0), k=1
+    )
+    cands = jnp.where(jnp.any(dup, axis=1), -1, cands)
+    return cands
+
+
+def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
+    def step(st: _LoopState) -> _LoopState:
+        B, e = st.beam_ids.shape
+        # -- select r: closest unexpanded beam entry per lane ----------------
+        sel_dist = jnp.where(st.beam_exp, jnp.inf, st.beam_dist)
+        r_slot = jnp.argmin(sel_dist, axis=1)
+        r_best = jnp.take_along_axis(sel_dist, r_slot[:, None], axis=1)[:, 0]
+        has_r = jnp.isfinite(r_best) & ~st.done
+        r_id = jnp.where(
+            has_r, jnp.take_along_axis(st.beam_ids, r_slot[:, None], axis=1)[:, 0], -1
+        )
+        beam_exp = st.beam_exp.at[jnp.arange(B), r_slot].set(
+            st.beam_exp[jnp.arange(B), r_slot] | has_r
+        )
+        # -- expand ----------------------------------------------------------
+        cands = _candidates_from_expansion(g, r_id, has_r, cfg)
+        present, insert_ok, insert_slot = _hash_probe_state(
+            st.vis_ids, cands, cfg.hash_probes
+        )
+        fresh = (cands >= 0) & ~present  # compare these (probe-full: compare anyway)
+        cand_ids = jnp.where(fresh, cands, -1)
+        dists = ops.gather_distance(
+            q, x, cand_ids, cfg.metric, use_pallas=cfg.use_pallas
+        )  # (B, C) +inf at -1
+        n_comps = st.n_comps + jnp.sum(fresh, axis=1).astype(jnp.int32)
+        # -- record into hash (the D array) -----------------------------------
+        do_ins = fresh & insert_ok
+        B_idx = jnp.broadcast_to(jnp.arange(B)[:, None], cand_ids.shape)
+        slot = jnp.where(do_ins, insert_slot, cfg.hash_slots)  # OOB -> dropped
+        vis_ids = st.vis_ids.at[B_idx, slot].set(
+            jnp.where(do_ins, cand_ids, -1), mode="drop"
+        )
+        vis_dist = st.vis_dist.at[B_idx, slot].set(
+            jnp.where(do_ins, dists, jnp.inf), mode="drop"
+        )
+        # -- beam merge --------------------------------------------------------
+        cat_ids = jnp.concatenate([st.beam_ids, cand_ids], axis=1)
+        cat_dist = jnp.concatenate([st.beam_dist, dists], axis=1)
+        cat_exp = jnp.concatenate(
+            [beam_exp, jnp.zeros_like(cand_ids, bool) | (cand_ids < 0)], axis=1
+        )
+        neg, sel = jax.lax.top_k(-cat_dist, e)
+        beam_ids = jnp.take_along_axis(cat_ids, sel, axis=1)
+        beam_dist = -neg
+        beam_exp = jnp.take_along_axis(cat_exp, sel, axis=1)
+        beam_ids, beam_dist, beam_exp = _dedupe_beam(beam_ids, beam_dist, beam_exp)
+        # -- convergence: best unexpanded cannot improve current top-k --------
+        best_unexp = jnp.min(jnp.where(beam_exp, jnp.inf, beam_dist), axis=1)
+        kth = beam_dist[:, cfg.k - 1]
+        newly_done = ~(best_unexp < kth)
+        n_iters = st.n_iters + (~st.done).astype(jnp.int32)
+        return _LoopState(
+            beam_ids,
+            beam_dist,
+            beam_exp,
+            vis_ids,
+            vis_dist,
+            n_comps,
+            n_iters,
+            st.done | newly_done,
+            st.it + 1,
+        )
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def search(
+    g: KNNGraph,
+    x: Array,
+    q: Array,
+    key: Array,
+    cfg: SearchConfig,
+) -> SearchResult:
+    """Batched EHC search of queries q against graph g over dataset x.
+
+    Args:
+      g: the (possibly under-construction) graph.
+      x: (n, d) dataset backing the graph rows.
+      q: (B, d) queries.
+      key: PRNG key for the p random entry points.
+      cfg: static search configuration.
+
+    Returns: SearchResult (top-k per lane + the comparison log).
+    """
+    B = q.shape[0]
+    e, H = cfg.beam, cfg.hash_slots
+
+    # -- p random seeds (Alg. 1 line 5) --------------------------------------
+    seeds = jax.random.randint(
+        key, (B, cfg.n_seeds), 0, jnp.maximum(g.n_valid, 1), dtype=jnp.int32
+    )
+    # dedupe seeds within a lane
+    dup = jnp.triu(
+        (seeds[:, None, :] == seeds[:, :, None]), k=1
+    )
+    seeds = jnp.where(jnp.any(dup, axis=1), -1, seeds)
+    seeds = jnp.where(g.alive[jnp.maximum(seeds, 0)] & (seeds >= 0), seeds, -1)
+    seed_dist = ops.gather_distance(q, x, seeds, cfg.metric, use_pallas=cfg.use_pallas)
+
+    beam_ids = jnp.full((B, e), -1, jnp.int32)
+    beam_dist = jnp.full((B, e), jnp.inf, jnp.float32)
+    beam_exp = jnp.ones((B, e), bool)
+    vis_ids = jnp.full((B, H), -1, jnp.int32)
+    vis_dist = jnp.full((B, H), jnp.inf, jnp.float32)
+
+    # install seeds via one merge + hash insert
+    _, ins_ok, ins_slot = _hash_probe_state(vis_ids, seeds, cfg.hash_probes)
+    do_ins = (seeds >= 0) & ins_ok
+    B_idx = jnp.broadcast_to(jnp.arange(B)[:, None], seeds.shape)
+    slot = jnp.where(do_ins, ins_slot, H)
+    vis_ids = vis_ids.at[B_idx, slot].set(jnp.where(do_ins, seeds, -1), mode="drop")
+    vis_dist = vis_dist.at[B_idx, slot].set(
+        jnp.where(do_ins, seed_dist, jnp.inf), mode="drop"
+    )
+    cat_ids = jnp.concatenate([beam_ids, seeds], axis=1)
+    cat_dist = jnp.concatenate([beam_dist, seed_dist], axis=1)
+    cat_exp = jnp.concatenate([beam_exp, seeds < 0], axis=1)
+    neg, sel = jax.lax.top_k(-cat_dist, e)
+    beam_ids = jnp.take_along_axis(cat_ids, sel, axis=1)
+    beam_dist = -neg
+    beam_exp = jnp.take_along_axis(cat_exp, sel, axis=1)
+
+    st = _LoopState(
+        beam_ids=beam_ids,
+        beam_dist=beam_dist,
+        beam_exp=beam_exp,
+        vis_ids=vis_ids,
+        vis_dist=vis_dist,
+        n_comps=jnp.sum(seeds >= 0, axis=1).astype(jnp.int32),
+        n_iters=jnp.zeros((B,), jnp.int32),
+        done=jnp.zeros((B,), bool),
+        it=jnp.zeros((), jnp.int32),
+    )
+    step = _make_step(g, x, q, cfg)
+    st = jax.lax.while_loop(
+        lambda s: (~jnp.all(s.done)) & (s.it < cfg.max_iters), step, st
+    )
+    return SearchResult(
+        ids=st.beam_ids[:, : cfg.k],
+        dists=st.beam_dist[:, : cfg.k],
+        vis_ids=st.vis_ids,
+        vis_dist=st.vis_dist,
+        n_comps=st.n_comps,
+        n_iters=st.n_iters,
+        converged=st.done,
+    )

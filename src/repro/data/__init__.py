@@ -1,0 +1,1 @@
+from repro.data import synthetic, loader, graphs, recsys_data  # noqa: F401

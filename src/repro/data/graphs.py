@@ -1,0 +1,151 @@
+"""Graph data substrate: generators, CSR utilities and a real neighbor sampler.
+
+The assigned GNN shapes span three data regimes:
+  * ``full_graph_sm`` / ``ogb_products`` — one fixed graph, full-batch message
+    passing (cora-size and products-size);
+  * ``minibatch_lg`` — reddit-size graph trained with *sampled* mini-batches:
+    this file provides the actual GraphSAGE-style fanout sampler (uniform with
+    replacement over CSR rows), not a stub;
+  * ``molecule`` — batches of small point clouds whose radius/k-NN edges are
+    built by the paper's own construction code (``repro.core``) — the one
+    place in the zoo where OLG/LGD is the data pipeline (DESIGN.md §5).
+
+Everything is fixed-shape: samplers return (batch, fanout) index arrays with
+self-loops standing in for missing neighbors, which keeps the whole pipeline
+jit-able and shard_map-able.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Graph(NamedTuple):
+    """One static graph in edge-list + CSR form."""
+
+    senders: Array  # (E,) int32 src node per edge
+    receivers: Array  # (E,) int32 dst node per edge
+    indptr: Array  # (N+1,) int32 CSR row pointers (receiver-major)
+    indices: Array  # (E,) int32 CSR column ids (= senders sorted by receiver)
+    features: Array  # (N, d) float32
+    labels: Array  # (N,) int32
+
+
+def csr_from_edges(senders: Array, receivers: Array, n_nodes: int):
+    """Build (indptr, indices) with edges grouped by receiver."""
+    order = jnp.argsort(receivers, stable=True)
+    indices = senders[order].astype(jnp.int32)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(receivers, dtype=jnp.int32), receivers, num_segments=n_nodes
+    )
+    indptr = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)])
+    return indptr.astype(jnp.int32), indices
+
+
+def random_graph(
+    key: Array,
+    n_nodes: int,
+    n_edges: int,
+    d_feat: int,
+    *,
+    n_classes: int = 16,
+    power: float = 0.8,
+) -> Graph:
+    """Power-law-ish random graph (citation-network stand-in).
+
+    Receiver ids are drawn with density ~ rank^-power so a few hub nodes have
+    large in-degree — the degree skew that makes real GNN workloads irregular.
+    """
+    ks, kr, kf, kl = jax.random.split(key, 4)
+    u = jax.random.uniform(kr, (n_edges,))
+    receivers = jnp.minimum(
+        (n_nodes * u ** (1.0 / (1.0 - power))).astype(jnp.int32), n_nodes - 1
+    )
+    senders = jax.random.randint(ks, (n_edges,), 0, n_nodes, dtype=jnp.int32)
+    indptr, indices = csr_from_edges(senders, receivers, n_nodes)
+    features = jax.random.normal(kf, (n_nodes, d_feat), jnp.float32)
+    labels = jax.random.randint(kl, (n_nodes,), 0, n_classes, dtype=jnp.int32)
+    return Graph(senders, receivers, indptr, indices, features, labels)
+
+
+def sample_neighbors(
+    key: Array,
+    indptr: Array,
+    indices: Array,
+    seeds: Array,  # (B,)
+    fanout: int,
+) -> Array:
+    """GraphSAGE uniform-with-replacement fanout sampling over CSR rows.
+
+    Returns (B, fanout) int32 neighbor ids; isolated nodes sample themselves
+    (self-loop), keeping shapes static and aggregation well-defined.
+    """
+    B = seeds.shape[0]
+    deg = indptr[seeds + 1] - indptr[seeds]  # (B,)
+    u = jax.random.uniform(key, (B, fanout))
+    offs = jnp.floor(u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    slot = indptr[seeds][:, None] + offs
+    nbrs = indices[jnp.minimum(slot, indices.shape[0] - 1)]
+    return jnp.where(deg[:, None] > 0, nbrs, seeds[:, None])
+
+
+def khop_sample(
+    key: Array,
+    indptr: Array,
+    indices: Array,
+    seeds: Array,  # (B,)
+    fanouts: tuple[int, ...],
+):
+    """Layered sampling: seeds -> (B, f1) -> (B, f1*f2) -> ...
+
+    Returns the per-layer frontier list [(B,), (B, f1), (B, f1, f2), ...] —
+    the shape GraphSAGE-style models aggregate bottom-up.
+    """
+    frontiers = [seeds]
+    cur = seeds
+    for li, f in enumerate(fanouts):
+        k = jax.random.fold_in(key, li)
+        flat = cur.reshape(-1)
+        nbr = sample_neighbors(k, indptr, indices, flat, f)
+        cur = nbr.reshape(cur.shape + (f,))
+        frontiers.append(cur)
+    return frontiers
+
+
+def molecules(
+    key: Array,
+    batch: int,
+    n_nodes: int,
+    *,
+    n_species: int = 8,
+    box: float = 6.0,
+) -> tuple[Array, Array]:
+    """Random molecular point clouds: positions (B, N, 3), species (B, N)."""
+    kp, ks = jax.random.split(key)
+    pos = jax.random.uniform(kp, (batch, n_nodes, 3), jnp.float32) * box
+    species = jax.random.randint(ks, (batch, n_nodes), 0, n_species, jnp.int32)
+    return pos, species
+
+
+def knn_edges_from_positions(
+    pos: Array,  # (N, 3) one molecule
+    k: int,
+) -> tuple[Array, Array]:
+    """Exact k-NN edges over atom positions (small N — brute force tile).
+
+    For large point sets the framework swaps this for the paper's online
+    LGD construction (see examples/molecule_graphs.py); the interface is
+    identical: (senders, receivers) with receivers the k-NN list owner.
+    """
+    d2 = jnp.sum((pos[:, None, :] - pos[None, :, :]) ** 2, axis=-1)
+    n = pos.shape[0]
+    d2 = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)
+    _, nbr = jax.lax.top_k(-d2, k)  # (N, k)
+    receivers = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    senders = nbr.reshape(-1).astype(jnp.int32)
+    return senders, receivers

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the distance hot-spots.
+
+Each kernel ships three layers:
+  * ``<name>.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+  * ``ops.py``    — jit'd dispatching wrappers (TPU: compiled kernel,
+                    CPU: jnp reference; ``use_pallas=True`` forces the
+                    interpreted kernel for validation),
+  * ``ref.py``    — pure-jnp oracles the tests sweep against.
+
+Kernels:
+  * ``distance``    — tiled pairwise distances (MXU GEMM for l2/ip/cosine,
+                      VPU strips for l1/chi2).
+  * ``gather_dist`` — fused gather+distance with scalar-prefetched candidate
+                      ids and double-buffered HBM→VMEM row DMAs (the EHC
+                      expansion hot loop).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

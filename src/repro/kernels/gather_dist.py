@@ -1,0 +1,139 @@
+"""Fused gather + distance Pallas TPU kernel (scalar-prefetch).
+
+The inner loop of EHC hill-climbing is: take the candidate ids produced by
+expanding a beam vertex, fetch those rows of the dataset, and compute their
+distance to the query.  Done naively (``x[idx]`` then a distance) XLA
+materializes the (B, C, d) gather in HBM.  This kernel fuses the two: the
+candidate ids ride in scalar-prefetch SMEM and drive double-buffered HBM->VMEM
+DMAs of the candidate rows, which are reduced against the VMEM-resident query
+row as soon as they land — the gather never exists as an HBM intermediate.
+
+Layout
+------
+* grid = (B,): one grid step per query; Pallas pipelines steps.
+* ``idx`` (B, C) int32: scalar-prefetch operand (SMEM).
+* ``x`` (n, d): stays in HBM/ANY; rows are moved manually with
+  ``pltpu.make_async_copy`` into a 2-slot VMEM scratch (double buffering:
+  slot (c+1) mod 2 is in flight while slot c mod 2 is reduced).
+* ``q`` block (1, d): standard VMEM operand per grid step.
+* out block (1, C) float32.
+
+Negative ids are padding: their lanes are forced to +inf (the convention the
+search layer uses for masked candidates).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _gather_dist_kernel(
+    idx_ref,  # (B, C) int32, SMEM (scalar prefetch)
+    q_ref,  # (1, d) VMEM
+    x_ref,  # (n, d) ANY (HBM)
+    o_ref,  # (1, C) VMEM
+    row_buf,  # (2, 1, d) VMEM scratch
+    sems,  # (2,) DMA semaphores
+    *,
+    n_cand: int,
+    metric: str,
+):
+    b = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+
+    def start_fetch(c, slot):
+        rid = jnp.maximum(idx_ref[b, c], 0)
+        cp = pltpu.make_async_copy(
+            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
+        )
+        cp.start()
+
+    def wait_fetch(c, slot):
+        rid = jnp.maximum(idx_ref[b, c], 0)
+        cp = pltpu.make_async_copy(
+            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
+        )
+        cp.wait()
+
+    # Warm up the pipeline with candidate 0.
+    start_fetch(0, 0)
+
+    def body(c, _):
+        slot = jax.lax.rem(c, 2)
+
+        @pl.when(c + 1 < n_cand)
+        def _prefetch_next():
+            start_fetch(c + 1, jax.lax.rem(c + 1, 2))
+
+        wait_fetch(c, slot)
+        row = row_buf[slot].astype(jnp.float32)  # (1, d)
+        if metric == "l2":
+            diff = q - row
+            dist = jnp.sum(diff * diff)
+        elif metric in ("ip", "dot"):
+            dist = jnp.sum(q * row)
+            if metric == "ip":
+                dist = -dist
+        elif metric == "l1":
+            dist = jnp.sum(jnp.abs(q - row))
+        elif metric == "chi2":
+            num = (q - row) ** 2
+            den = q + row
+            dist = jnp.sum(jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), 0.0))
+        else:
+            raise KeyError(metric)
+        valid = idx_ref[b, c] >= 0
+        o_ref[0, c] = jnp.where(valid, dist, jnp.inf)
+        return ()
+
+    jax.lax.fori_loop(0, n_cand, body, (), unroll=False)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_distance(
+    q: Array,
+    x: Array,
+    idx: Array,
+    *,
+    metric: str = "l2",
+    interpret: bool = True,
+) -> Array:
+    """(b, d) queries, (n, d) data, (b, c) int32 ids -> (b, c) f32 distances."""
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        out = gather_distance(q, x, idx, metric="dot", interpret=interpret)
+        return jnp.where(idx >= 0, 1.0 - out, jnp.inf)
+
+    b, d = q.shape
+    c = idx.shape[1]
+    kern = functools.partial(_gather_dist_kernel, n_cand=c, metric=metric)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda i, idx_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), q, x)
+    if metric == "dot":
+        return out  # caller (cosine path) applies masking itself
+    return out

@@ -1,0 +1,68 @@
+"""Dispatching wrappers over the Pallas kernels.
+
+Every call site in ``repro.core`` goes through these functions.  On TPU the
+Pallas kernels run compiled (``interpret=False``); on CPU the default is the
+pure-jnp reference path (fast under XLA:CPU) while ``use_pallas=True`` forces
+the interpreted kernel (what the correctness tests sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distance as _distance
+from repro.kernels import gather_dist as _gather_dist
+from repro.kernels import ref as _ref
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_distance(
+    q: Array,
+    x: Array,
+    metric: str = "l2",
+    *,
+    use_pallas: Optional[bool] = None,
+    bm: int = 128,
+    bn: int = 128,
+    bd: int = 128,
+) -> Array:
+    """(m, d) x (n, d) -> (m, n) float32 distances."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _distance.pairwise_distance(
+            q, x, metric=metric, bm=bm, bn=bn, bd=bd, interpret=not _on_tpu()
+        )
+    return _ref.pairwise_distance(q, x, metric)
+
+
+def gather_distance(
+    q: Array,
+    x: Array,
+    idx: Array,
+    metric: str = "l2",
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Array:
+    """(b, d) queries vs rows x[idx] -> (b, c) float32; inf at idx < 0."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _gather_dist.gather_distance(
+            q, x, idx, metric=metric, interpret=not _on_tpu()
+        )
+    return _ref.gather_distance(q, x, idx, metric)
+
+
+def topk_smallest(dists: Array, ids: Array, k: int):
+    """Row-wise smallest-k selection; see ref.topk_smallest."""
+    return _ref.topk_smallest(dists, ids, k)

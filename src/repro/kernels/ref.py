@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests sweep against
+(``tests/test_kernels.py``) and the CPU execution path used by the rest of the
+framework when no TPU is present.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+
+Array = jax.Array
+
+
+def pairwise_distance(q: Array, x: Array, metric: str = "l2") -> Array:
+    """(m, d) x (n, d) -> (m, n) distances.  Oracle for kernels.distance."""
+    return metrics.pairwise(metric, q, x)
+
+
+def gather_distance(q: Array, x: Array, idx: Array, metric: str = "l2") -> Array:
+    """Fused gather + distance oracle.
+
+    Args:
+      q:   (b, d)  queries.
+      x:   (n, d)  dataset.
+      idx: (b, c)  int32 candidate ids per query; id < 0 means padding.
+
+    Returns:
+      (b, c) float32 distances; +inf at padded slots.
+    """
+    b, c = idx.shape
+    safe = jnp.maximum(idx, 0)
+    cand = x[safe]  # (b, c, d)
+
+    def per_query(qi, ci):
+        return metrics.pairwise(metric, qi[None, :], ci)[0]
+
+    d = jax.vmap(per_query)(q, cand)
+    return jnp.where(idx >= 0, d.astype(jnp.float32), jnp.inf)
+
+
+def topk_smallest(dists: Array, ids: Array, k: int):
+    """Row-wise smallest-k (distance, id) selection.  Oracle for merge ops.
+
+    Args:
+      dists: (m, c) distances (inf = padding).
+      ids:   (m, c) ids aligned with dists.
+      k:     number to keep.
+
+    Returns:
+      (m, k) dists sorted ascending, (m, k) ids.
+    """
+    neg, sel = jax.lax.top_k(-dists, k)
+    return -neg, jnp.take_along_axis(ids, sel, axis=1)

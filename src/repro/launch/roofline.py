@@ -1,0 +1,157 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+Per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs / (chips x 197e12  bf16 FLOP/s)     [v5e MXU]
+  memory     = HLO_bytes / (chips x 819e9   B/s HBM)
+  collective = collective_bytes / (chips x n_links x 50e9 B/s ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+there, so the optimized HLO text is parsed: we sum the *operand* sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.  Cross-pod traffic (replica groups spanning
+pods on the 'pod' axis) would ride DCN, but at this granularity we charge
+everything to ICI — a conservative (pessimistic-for-us) collective term.
+
+MODEL_FLOPS (6·N·D style) versus HLO_FLOPs gives the useful-compute ratio —
+values << 1 flag remat recompute or redundant work; values > 1 flag an
+analytical undercount (documented per cell).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 per chip, TPU v5e
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+ICI_LINKS = 4  # v5e: 4 ICI links per chip (2D torus, 2 axes x 2 directions)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_OP_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<variant>-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shapes_in(type_str: str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out.append(n * _DTYPE_BYTES[dtype])
+    return out
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device interconnect traffic from the optimized (post-SPMD) HLO.
+
+    Shapes in partitioned HLO are device-local.  Conventions (ring algos,
+    g = replica-group size):
+      all-gather        : result bytes x (g-1)/g     (received)
+      all-reduce        : 2 x bytes x (g-1)/g        (reduce-scatter + AG)
+      reduce-scatter    : result bytes x (g-1)       (sends everyone's shard)
+      all-to-all        : bytes x (g-1)/g            (keeps own shard)
+      collective-permute: result bytes
+    '-done' variants are skipped (the '-start' op carries the shapes).
+    Returns {kind: bytes, '_total': ..., '_count': n_ops}.
+    """
+    out: dict = {}
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("variant") == "-done":
+            continue
+        kind = m.group("kind")
+        shapes = _shapes_in(m.group("result"))
+        if not shapes:
+            continue
+        # -start ops return (operand_alias, output, ...): use the largest
+        b = max(shapes) if m.group("variant") else sum(shapes)
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else 2
+        g = max(g, 2)
+        if kind == "all-gather":
+            traffic = b * (g - 1) / g
+        elif kind == "all-reduce":
+            traffic = 2.0 * b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            traffic = b * (g - 1)
+        elif kind == "all-to-all":
+            traffic = b * (g - 1) / g
+        else:  # collective-permute
+            traffic = float(b)
+        out[kind] = out.get(kind, 0.0) + traffic
+        n_ops += 1
+    out["_total"] = sum(v for k, v in out.items() if not k.startswith("_"))
+    out["_count"] = n_ops
+    return out
+
+
+def analyze(compiled, mesh, model_flops: Optional[float] = None,
+            loop_factor: float = 1.0) -> dict:
+    """Roofline record for one compiled cell.
+
+    ``loop_factor`` corrects while-loop-dominated programs (cost_analysis
+    counts loop bodies once; the EHC search loop runs ~max_iters times).
+    """
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0)) * loop_factor
+    # bytes accessed: sum the per-memory-space entries when present
+    byts = float(cost.get("bytes accessed", 0.0)) * loop_factor
+    mem = compiled.memory_analysis()
+    # peak live-buffer footprint (what must fit HBM); arguments reported
+    # separately (params/opt state are resident across steps)
+    bytes_per_dev = int(getattr(mem, "peak_memory_in_bytes", 0))
+    arg_bytes = int(getattr(mem, "argument_size_in_bytes", 0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # cost_analysis flops are whole-program per-device on SPMD-partitioned HLO
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll["_total"] / (ICI_LINKS * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    rec = {
+        "chips": chips,
+        "hlo_gflops": flops / 1e9,
+        "hlo_gbytes": byts / 1e9,
+        "collective_gbytes": coll["_total"] / 1e9,
+        "collective_breakdown": {k: v for k, v in coll.items() if not k.startswith("_")},
+        "bytes_per_device": bytes_per_dev,
+        "arg_bytes_per_device": arg_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_time_bound_s": max(terms.values()),
+    }
+    if model_flops:
+        # model_flops is whole-job; HLO flops are per-device
+        rec["model_flops"] = model_flops
+        rec["useful_ratio"] = model_flops / chips / max(flops, 1.0)
+        peak_time = model_flops / chips / PEAK_FLOPS
+        rec["roofline_fraction"] = peak_time / max(max(terms.values()), 1e-30)
+    return rec

@@ -1,0 +1,235 @@
+"""Attention for the LM zoo: GQA + RoPE + windowed causal masking.
+
+Covers, via one parameterization:
+  * full causal attention (stablelm, qwen, arctic) — window >= seq;
+  * sliding-window attention (mixtral, window 4096);
+  * gemma3's 5:1 local:global alternation — the window is a *per-layer
+    scalar* so the whole stack still runs as one scan-over-layers (the
+    mask formula ``(i >= j) & (i - j < window)`` is shared; only the
+    window value varies across scanned layers);
+  * KV-cache decode (one token against a cache of seq_len).
+
+Prefill/train uses a chunked two-level online-softmax (flash-style in pure
+XLA): the (S, S) score matrix never materializes — required for the 32k
+prefill shapes, where full scores would be ~TBs.  On TPU the inner block is
+MXU-shaped (q_chunk x kv_chunk = 512 x 512 by default).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (B, S, H, Dh), positions: (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """(B, S, KV, Dh) -> (B, S, KV*groups, Dh)."""
+    if groups == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, dh)).reshape(
+        b, s, kv * groups, dh
+    )
+
+
+def chunked_causal_attention(
+    q: Array,  # (B, S, H, Dh)
+    k: Array,  # (B, S, KV, Dh)
+    v: Array,  # (B, S, KV, Dh)
+    window,  # scalar (static or traced): attend to j with 0 <= i-j < window
+    *,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """Flash-style attention: scan over kv chunks with running (max, sum).
+
+    Memory high-water: (B, H, q_chunk, kv_chunk) scores per step — the full
+    (S, S) matrix never exists.  ``window`` may be traced, enabling
+    per-scanned-layer local/global behaviour.
+    """
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    groups = h // kv_heads
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    nq = -(-s // qc)
+    nk = -(-s // kc)
+    sp = nq * qc
+
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - s), (0, 0), (0, 0)))
+    kp = _repeat_kv(kp, groups)
+    vp = _repeat_kv(vp, groups)
+
+    # (B, H, nq, qc, Dh)
+    qb = qp.reshape(b, nq, qc, h, dh).transpose(0, 3, 1, 2, 4) * scale
+    kb = kp.reshape(b, nk, kc, h, dh).transpose(0, 3, 1, 2, 4)
+    vb = vp.reshape(b, nk, kc, h, dh).transpose(0, 3, 1, 2, 4)
+
+    q_pos = jnp.arange(sp).reshape(nq, qc)
+    k_pos = jnp.arange(nk * kc).reshape(nk, kc)
+
+    def per_q_chunk(qi, q_tile):
+        # q_tile: (B, H, qc, Dh)
+        qpos = q_pos[qi]  # (qc,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_tile = kb[:, :, ki]  # (B, H, kc, Dh)
+            v_tile = vb[:, :, ki]
+            scores = jnp.einsum(
+                "bhqd,bhkd->bhqk", q_tile, k_tile, preferred_element_type=jnp.float32
+            )
+            kpos = k_pos[ki]
+            delta = qpos[:, None] - kpos[None, :]
+            mask = (delta >= 0) & (delta < window) & (kpos < s)[None, :]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(
+        lambda qi: per_q_chunk(qi, qb[:, :, qi]), jnp.arange(nq)
+    )  # (nq, B, H, qc, Dh)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, dh)[:, :s]
+    return out.astype(q.dtype)
+
+
+def tiled_causal_attention(
+    q: Array,  # (B, S, H, Dh)
+    k: Array,  # (B, S, KV, Dh)
+    v: Array,  # (B, S, KV, Dh)
+    window: int,  # STATIC window (0 < w; FULL_WINDOW for none)
+    *,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """Statically-tiled flash attention: python tile loops with *static
+    causal/window tile skipping*.
+
+    Functionally identical to ``chunked_causal_attention`` but (a) tiles that
+    are fully masked (k entirely after q, or entirely outside the window)
+    are never emitted — the same schedule a production flash kernel runs,
+    worth ~2x on causal and ~S/w on windowed shapes; (b) every tile is
+    first-class HLO, so ``cost_analysis`` counts the true FLOPs (scan bodies
+    are counted once — DESIGN.md §7).  Used by the dry-run lowering and
+    available as a run-time option.
+    """
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    groups = h // kv_heads
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    nq = -(-s // qc)
+    nk = -(-s // kc)
+    sp = nq * qc
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - s), (0, 0), (0, 0)))
+    kp = _repeat_kv(kp, groups)
+    vp = _repeat_kv(vp, groups)
+    qb = qp.reshape(b, nq, qc, h, dh).transpose(0, 3, 1, 2, 4) * scale
+    kb = kp.reshape(b, nk, kc, h, dh).transpose(0, 3, 1, 2, 4)
+    vb = vp.reshape(b, nk, kc, h, dh).transpose(0, 3, 1, 2, 4)
+
+    outs = []
+    for qi in range(nq):
+        q_tile = qb[:, :, qi]  # (B, H, qc, Dh)
+        q_lo, q_hi = qi * qc, (qi + 1) * qc - 1
+        m = jnp.full((b, h, qc), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, h, qc), jnp.float32)
+        acc = jnp.zeros((b, h, qc, dh), jnp.float32)
+        for ki in range(nk):
+            k_lo, k_hi = ki * kc, (ki + 1) * kc - 1
+            if k_lo > q_hi:  # entirely in the future — causal skip
+                continue
+            if k_hi < q_lo - window + 1:  # entirely before the window
+                continue
+            k_tile = kb[:, :, ki]
+            v_tile = vb[:, :, ki]
+            scores = jnp.einsum(
+                "bhqd,bhkd->bhqk", q_tile, k_tile, preferred_element_type=jnp.float32
+            )
+            k_pos = k_lo + jnp.arange(kc)
+            delta = (q_lo + jnp.arange(qc))[:, None] - k_pos[None, :]
+            mask = (delta >= 0) & (delta < window) & (k_pos < s)[None, :]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32,
+            )
+            m = m_new
+        outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+    out = jnp.stack(outs, axis=2)  # (B, H, nq, qc, Dh)
+    out = out.transpose(0, 2, 3, 1, 4).reshape(b, sp, h, dh)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,  # (B, 1, H, Dh) — the new token's query
+    k_cache: Array,  # (B, S, KV, Dh)
+    v_cache: Array,  # (B, S, KV, Dh)
+    cache_len: Array,  # (B,) valid prefix length (new token goes at cache_len)
+    window,  # scalar
+    *,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """One-step decode: new query vs the whole KV cache (O(S) per token)."""
+    b, _, h, dh = q.shape
+    s = k_cache.shape[1]
+    kv_heads = k_cache.shape[2]
+    groups = h // kv_heads
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    kk = _repeat_kv(k_cache, groups)
+    vv = _repeat_kv(v_cache, groups)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q * scale, kk, preferred_element_type=jnp.float32
+    )  # (B, H, 1, S)
+    pos = jnp.arange(s)[None, :]  # (1, S)
+    qpos = cache_len[:, None]  # (B, 1) — query position
+    delta = qpos - pos
+    mask = (delta >= 0) & (delta < window)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vv, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,135 @@
+"""Shared building blocks for the architecture zoo.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (pytrees);
+  * every initializer takes an explicit PRNG key and is ``jax.eval_shape``-
+    safe (the dry-run never materializes the big configs);
+  * layers annotate their own sharding through logical axis names resolved in
+    ``repro.launch.mesh`` — models stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: Sequence[int], dtype=jnp.float32, scale: float = 1.0):
+    """Truncated-normal fan-in init (what most of the zoo's papers use)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, shape: Sequence[int], dtype=jnp.float32, scale: float = 1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32, scale=1.0):
+    del scale
+    return jnp.zeros(shape, dtype)
+
+
+def split_tree(key: Array, template: Dict[str, Any]) -> Dict[str, Array]:
+    """One fresh key per leaf name."""
+    names = sorted(template)
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# ---------------------------------------------------------------------------
+# Normalization / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+ACTIVATIONS: Dict[str, Callable[[Array], Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def mlp_stack(
+    key: Array,
+    sizes: Sequence[int],
+    dtype=jnp.float32,
+) -> Dict[str, Array]:
+    """Params for a plain MLP: sizes = [in, h1, ..., out]."""
+    params = {}
+    keys = jax.random.split(key, len(sizes) - 1)
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"w{i}"] = dense_init(keys[i], (a, b), dtype)
+        params[f"b{i}"] = jnp.zeros((b,), dtype)
+    return params
+
+
+def mlp_apply(params: Dict[str, Array], x: Array, act: str = "relu", final_act: bool = False) -> Array:
+    n = len([k for k in params if k.startswith("w")])
+    fn = ACTIVATIONS[act]
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = fn(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: Array, labels: Array, *, z_loss: float = 0.0) -> Array:
+    """Token-level cross entropy in f32; labels < 0 are masked (padding)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.clip(labels, 0, logits.shape[-1] - 1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    return jnp.sum(jnp.where(mask, loss, 0.0)) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def sigmoid_bce(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def count_params(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+import numpy as np  # noqa: E402  (used by count_params only)

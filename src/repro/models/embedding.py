@@ -1,0 +1,85 @@
+"""EmbeddingBag and sharded-table lookup — the recsys hot path.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse; per the assignment
+this is implemented from primitives and IS part of the system:
+
+  * single-hot lookup  = ``jnp.take`` rows;
+  * multi-hot bag      = gather + ``jax.ops.segment_sum`` (sum/mean modes),
+    ids < 0 are padding and contribute zero;
+  * sharded tables     = rows partitioned over the 'model' mesh axis (the
+    DLRM pattern).  Under pjit the gather over a row-sharded operand lowers
+    to partial gathers + a small all-reduce — visible in the dry-run
+    collective schedule (EXPERIMENTS.md §Roofline discusses it).
+
+Tables use the quotient-remainder trick optionally (``hash_rows``) so a
+10⁹-id space fits a 10⁶..10⁸-row table — the production memory/recall trade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TableConfig:
+    rows: int
+    dim: int
+    hash_rows: int = 0  # 0 = direct indexing; >0 = QR-hash into this many rows
+
+
+def init_table(key: Array, cfg: TableConfig, dtype=jnp.float32) -> Array:
+    rows = cfg.hash_rows or cfg.rows
+    return common.embed_init(key, (rows, cfg.dim), dtype, scale=0.05)
+
+
+def _resolve_ids(ids: Array, cfg: TableConfig) -> Array:
+    if cfg.hash_rows:
+        # quotient-remainder: (id % H + id // H) mod H keeps collisions spread
+        h = cfg.hash_rows
+        return ((ids % h) + (ids // h)) % h
+    return ids
+
+
+def lookup(table: Array, ids: Array, cfg: Optional[TableConfig] = None) -> Array:
+    """Single-hot rows: ids (...,) -> (..., dim); ids < 0 give zeros."""
+    if cfg is not None:
+        ids = jnp.where(ids >= 0, _resolve_ids(jnp.maximum(ids, 0), cfg), -1)
+    safe = jnp.maximum(ids, 0)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where((ids >= 0)[..., None], out, 0.0)
+
+
+def embedding_bag(
+    table: Array,
+    ids: Array,  # (B, L) int32, -1 = padding
+    *,
+    mode: str = "sum",
+    weights: Optional[Array] = None,  # (B, L) per-sample weights
+    cfg: Optional[TableConfig] = None,
+) -> Array:
+    """torch.nn.EmbeddingBag equivalent: (B, L) multi-hot -> (B, dim).
+
+    gather + segment-reduce; the segment ids are the batch rows, so the
+    reduction is a single ``segment_sum`` over the flattened (B*L, dim)
+    gather — XLA fuses the gather into the scatter-add on TPU.
+    """
+    B, L = ids.shape
+    emb = lookup(table, ids, cfg)  # (B, L, dim) zeros at padding
+    if weights is not None:
+        emb = emb * weights[..., None]
+    seg = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, L)).reshape(-1)
+    out = jax.ops.segment_sum(emb.reshape(B * L, -1), seg, num_segments=B)
+    if mode == "mean":
+        cnt = jnp.sum((ids >= 0).astype(jnp.float32), axis=1, keepdims=True)
+        out = out / jnp.maximum(cnt, 1.0)
+    elif mode != "sum":
+        raise ValueError(f"mode {mode!r}")
+    return out

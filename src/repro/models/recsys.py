@@ -1,0 +1,357 @@
+"""The four assigned recsys architectures.
+
+  * **deepfm**  (arXiv:1703.04247): FM 1st+2nd order over 39 field embeddings
+    (dim 10) ∥ deep MLP 400-400-400, summed logits.
+  * **xdeepfm** (arXiv:1803.05170): CIN 200-200-200 (compressed interaction
+    network — the outer-product-and-compress op is contracted as one einsum,
+    never materializing the (B, H, F, D) tensor) ∥ MLP 400-400.
+  * **bst**     (arXiv:1905.06874): behavior-sequence transformer — 1 block,
+    8 heads over the 20-item history + target, MLP 1024-512-256.
+  * **mind**    (arXiv:1904.08030): multi-interest capsule routing (4
+    interests, 3 dynamic-routing iterations) + label-aware attention; its
+    serving path is candidate retrieval — the one recsys arch where the
+    paper's LGD graph is the serving index (DESIGN.md §5).
+
+All embedding access goes through ``models.embedding`` (take + segment_sum
+EmbeddingBag).  Tables are row-sharded over 'model' (DLRM pattern); the
+dense towers are small and replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, embedding
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "deepfm"  # deepfm | xdeepfm | bst | mind
+    n_sparse: int = 39
+    n_dense: int = 13
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 10
+    mlp: Tuple[int, ...] = (400, 400, 400)
+    # xdeepfm
+    cin_layers: Tuple[int, ...] = ()
+    # bst
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    # mind
+    n_interests: int = 4
+    capsule_iters: int = 3
+    param_dtype: str = "float32"
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def table(self) -> embedding.TableConfig:
+        return embedding.TableConfig(rows=self.total_rows, dim=self.embed_dim)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = common.split_tree(
+        key, {n: None for n in ["table", "lin", "mlp", "cin", "attn", "caps", "dense"]}
+    )
+    p: Dict[str, Any] = {}
+    D = cfg.embed_dim
+
+    if cfg.name in ("deepfm", "xdeepfm"):
+        p["table"] = embedding.init_table(ks["table"], cfg.table(), pd)
+        p["lin_table"] = embedding.init_table(
+            jax.random.fold_in(ks["lin"], 0),
+            embedding.TableConfig(rows=cfg.total_rows, dim=1),
+            pd,
+        )
+        p["dense_proj"] = common.dense_init(ks["dense"], (cfg.n_dense, cfg.n_sparse * D), pd)
+        mlp_in = cfg.n_sparse * D
+        p["mlp"] = common.mlp_stack(ks["mlp"], [mlp_in, *cfg.mlp, 1], pd)
+        if cfg.name == "xdeepfm":
+            widths = [cfg.n_sparse, *cfg.cin_layers]
+            cin = {}
+            for i, (hin, hout) in enumerate(zip(widths[:-1], widths[1:])):
+                cin[f"w{i}"] = common.dense_init(
+                    jax.random.fold_in(ks["cin"], i), (hout, hin, cfg.n_sparse), pd,
+                    scale=math.sqrt(hin * cfg.n_sparse) / math.sqrt(hin),
+                )
+            p["cin"] = cin
+            p["cin_out"] = common.dense_init(
+                jax.random.fold_in(ks["cin"], 99), (sum(cfg.cin_layers), 1), pd
+            )
+    elif cfg.name == "bst":
+        p["table"] = embedding.init_table(
+            ks["table"], embedding.TableConfig(rows=cfg.vocab_per_field, dim=D), pd
+        )
+        p["pos"] = common.embed_init(
+            jax.random.fold_in(ks["table"], 1), (cfg.seq_len + 1, D), pd, 0.02
+        )
+        H = cfg.n_heads
+        p["attn"] = {
+            "wq": common.dense_init(ks["attn"], (cfg.n_blocks, D, D), pd),
+            "wk": common.dense_init(jax.random.fold_in(ks["attn"], 1), (cfg.n_blocks, D, D), pd),
+            "wv": common.dense_init(jax.random.fold_in(ks["attn"], 2), (cfg.n_blocks, D, D), pd),
+            "wo": common.dense_init(jax.random.fold_in(ks["attn"], 3), (cfg.n_blocks, D, D), pd),
+            "ff1": common.dense_init(jax.random.fold_in(ks["attn"], 4), (cfg.n_blocks, D, 4 * D), pd),
+            "ff2": common.dense_init(jax.random.fold_in(ks["attn"], 5), (cfg.n_blocks, 4 * D, D), pd),
+            "ln1": jnp.zeros((cfg.n_blocks, D), pd),
+            "ln2": jnp.zeros((cfg.n_blocks, D), pd),
+        }
+        mlp_in = (cfg.seq_len + 1) * D
+        p["mlp"] = common.mlp_stack(ks["mlp"], [mlp_in, *cfg.mlp, 1], pd)
+    elif cfg.name == "mind":
+        p["table"] = embedding.init_table(
+            ks["table"], embedding.TableConfig(rows=cfg.vocab_per_field, dim=D), pd
+        )
+        p["caps_bilinear"] = common.dense_init(ks["caps"], (D, D), pd)
+        p["mlp"] = common.mlp_stack(ks["mlp"], [D, *cfg.mlp, D], pd)
+    else:
+        raise ValueError(cfg.name)
+    return p
+
+
+def param_pspecs(cfg: RecsysConfig) -> Dict[str, Any]:
+    """Row-shard the big tables over 'model'; everything else replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def rep(tree):
+        return jax.tree.map(lambda v: P(*([None] * v.ndim)), tree)
+
+    p = init_params(jax.random.PRNGKey(0), _tiny_like(cfg))
+    specs = rep(p)
+    specs["table"] = P("model", None)
+    if "lin_table" in p:
+        specs["lin_table"] = P("model", None)
+    return specs
+
+
+def _tiny_like(cfg: RecsysConfig) -> RecsysConfig:
+    """Same pytree structure, tiny tables (pspec derivation only)."""
+    return dataclasses.replace(cfg, vocab_per_field=8)
+
+
+# ---------------------------------------------------------------------------
+# Interaction blocks
+# ---------------------------------------------------------------------------
+
+
+def fm_second_order(emb: Array) -> Array:
+    """(B, F, D) -> (B,) : ½[(Σ_f v)² − Σ_f v²] summed over D."""
+    s = jnp.sum(emb, axis=1)
+    s2 = jnp.sum(emb * emb, axis=1)
+    return 0.5 * jnp.sum(s * s - s2, axis=-1)
+
+
+def cin(emb: Array, params: Dict[str, Array], widths: Tuple[int, ...]) -> Array:
+    """Compressed Interaction Network: (B, F, D) -> (B, sum(widths)).
+
+    x^k_h = Σ_{i,j} W^k_{h i j} (x^{k-1}_i ∘ x^0_j); one einsum per layer —
+    the (B, H, F, D) outer product is contracted inline, which is the memory
+    adaptation that makes the 65k train batch feasible.
+    """
+    x0 = emb
+    xk = emb
+    pools = []
+    for i, _ in enumerate(widths):
+        w = params[f"w{i}"]  # (hout, hin, F)
+        xk = jnp.einsum("bhd,bfd,ohf->bod", xk, x0, w)
+        pools.append(jnp.sum(xk, axis=-1))  # sum-pool over D -> (B, hout)
+    return jnp.concatenate(pools, axis=-1)
+
+
+def _bst_block(h: Array, bp: Dict[str, Array], i: int, n_heads: int) -> Array:
+    """One post-LN transformer block over the (B, S+1, D) behavior sequence."""
+    B, S, D = h.shape
+    dh = D // n_heads
+    q = (h @ bp["wq"][i]).reshape(B, S, n_heads, dh)
+    k = (h @ bp["wk"][i]).reshape(B, S, n_heads, dh)
+    v = (h @ bp["wv"][i]).reshape(B, S, n_heads, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    att = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, D)
+    h = common.layer_norm(h + o @ bp["wo"][i], 1.0 + bp["ln1"][i], jnp.zeros_like(bp["ln1"][i]))
+    f = jax.nn.relu(h @ bp["ff1"][i]) @ bp["ff2"][i]
+    h = common.layer_norm(h + f, 1.0 + bp["ln2"][i], jnp.zeros_like(bp["ln2"][i]))
+    return h
+
+
+def capsule_routing(
+    hist_emb: Array,  # (B, S, D) behavior capsules (zeros at padding)
+    hist_mask: Array,  # (B, S)
+    bilinear: Array,  # (D, D)
+    n_interests: int,
+    iters: int,
+) -> Array:
+    """MIND's B2I dynamic routing -> (B, K, D) interest capsules."""
+    B, S, D = hist_emb.shape
+    u = hist_emb @ bilinear  # (B, S, D) behavior->interest projections
+    # fixed (untrainable) random logit init, shared across batch (MIND §4.2)
+    b = jnp.broadcast_to(
+        jax.random.normal(jax.random.PRNGKey(7), (1, S, n_interests)), (B, S, n_interests)
+    )
+
+    def squash(z):
+        n2 = jnp.sum(z * z, axis=-1, keepdims=True)
+        return (n2 / (1.0 + n2)) * z / jnp.sqrt(jnp.maximum(n2, 1e-9))
+
+    caps = None
+    for _ in range(iters):
+        w = jax.nn.softmax(b, axis=-1)  # routing over interests
+        w = jnp.where(hist_mask[..., None], w, 0.0)
+        z = jnp.einsum("bsk,bsd->bkd", w, u)
+        caps = squash(z)  # (B, K, D)
+        b = b + jnp.einsum("bsd,bkd->bsk", u, caps)
+    return caps
+
+
+# ---------------------------------------------------------------------------
+# Forward / losses
+# ---------------------------------------------------------------------------
+
+
+def ctr_logits(params: Dict[str, Any], batch: Dict[str, Array], cfg: RecsysConfig) -> Array:
+    """deepfm / xdeepfm pointwise CTR score."""
+    F, D = cfg.n_sparse, cfg.embed_dim
+    ids = batch["sparse"] + jnp.arange(F, dtype=jnp.int32)[None, :] * cfg.vocab_per_field
+    emb = embedding.lookup(params["table"], ids)  # (B, F, D)
+    lin = embedding.lookup(params["lin_table"], ids)[..., 0]  # (B, F)
+    first = jnp.sum(lin, axis=1)
+    deep_in = emb.reshape(emb.shape[0], F * D)
+    deep_in = deep_in + batch["dense"] @ params["dense_proj"]
+    deep = common.mlp_apply(params["mlp"], deep_in, act="relu")[:, 0]
+    if cfg.name == "deepfm":
+        return first + fm_second_order(emb) + deep
+    feats = cin(emb, params["cin"], cfg.cin_layers)
+    return first + (feats @ params["cin_out"])[:, 0] + deep
+
+
+def bst_logits(params: Dict[str, Any], batch: Dict[str, Array], cfg: RecsysConfig) -> Array:
+    hist, target = batch["hist"], batch["target"]
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)  # (B, S+1)
+    h = embedding.lookup(params["table"], seq) + params["pos"][None]
+    for i in range(cfg.n_blocks):
+        h = _bst_block(h, params["attn"], i, cfg.n_heads)
+    flat = h.reshape(h.shape[0], -1)
+    return common.mlp_apply(params["mlp"], flat, act="relu")[:, 0]
+
+
+def mind_interests(params: Dict[str, Any], hist: Array, cfg: RecsysConfig) -> Array:
+    """User history -> (B, K, D) interest vectors (the serving-side encoder)."""
+    mask = hist >= 0
+    emb = embedding.lookup(params["table"], hist)
+    caps = capsule_routing(
+        emb, mask, params["caps_bilinear"], cfg.n_interests, cfg.capsule_iters
+    )
+    B, K, D = caps.shape
+    out = common.mlp_apply(params["mlp"], caps.reshape(B * K, D), act="relu")
+    return out.reshape(B, K, D)
+
+
+def mind_logits(params: Dict[str, Any], batch: Dict[str, Array], cfg: RecsysConfig) -> Array:
+    """Label-aware attention (pow=2) over interests vs the target item."""
+    interests = mind_interests(params, batch["hist"], cfg)  # (B, K, D)
+    t = embedding.lookup(params["table"], batch["target"])  # (B, D)
+    scores = jnp.einsum("bkd,bd->bk", interests, t)
+    att = jax.nn.softmax(scores * 2.0, axis=-1)  # label-aware attention
+    user = jnp.einsum("bk,bkd->bd", att, interests)
+    return jnp.sum(user * t, axis=-1)
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: RecsysConfig):
+    if cfg.name in ("deepfm", "xdeepfm"):
+        logits = ctr_logits(params, batch, cfg)
+    elif cfg.name == "bst":
+        logits = bst_logits(params, batch, cfg)
+    else:
+        logits = mind_logits(params, batch, cfg)
+    loss = common.sigmoid_bce(logits, batch["label"])
+    acc = jnp.mean(((logits > 0) == (batch["label"] > 0.5)).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+def serve_scores(params, batch: Dict[str, Array], cfg: RecsysConfig) -> Array:
+    """Pointwise inference (serve_p99 / serve_bulk shapes)."""
+    if cfg.name in ("deepfm", "xdeepfm"):
+        return jax.nn.sigmoid(ctr_logits(params, batch, cfg))
+    if cfg.name == "bst":
+        return jax.nn.sigmoid(bst_logits(params, batch, cfg))
+    return jax.nn.sigmoid(mind_logits(params, batch, cfg))
+
+
+def retrieval_scores(
+    params, hist: Array, candidates: Array, cfg: RecsysConfig
+) -> Array:
+    """retrieval_cand shape: one user's interests vs N candidate embeddings.
+
+    Brute path: (K, D) x (N, D) GEMM, max over interests -> (N,) scores.
+    (The ANN path over the same candidates lives in serve/retrieval.py and
+    uses the paper's LGD graph with metric='ip'.)
+    """
+    interests = mind_interests(params, hist, cfg)[0]  # (K, D)
+    scores = candidates @ interests.T  # (N, K)
+    return jnp.max(scores, axis=-1)
+
+
+def ctr_retrieval_scores(
+    params, batch: Dict[str, Array], cfg: RecsysConfig
+) -> Array:
+    """deepfm/xdeepfm retrieval_cand: one user context x N candidate items.
+
+    Pointwise CTR models have no two-tower factorization, so every candidate
+    runs the full interaction+MLP — but the user-side embedding gather
+    happens ONCE (1 row) and is broadcast; only the item field varies.
+    batch: dense (1, n_dense), sparse (1, F) user fields, cand (N,) item ids
+    for field 0.
+    """
+    F, D = cfg.n_sparse, cfg.embed_dim
+    N = batch["cand"].shape[0]
+    ids = batch["sparse"] + jnp.arange(F, dtype=jnp.int32)[None, :] * cfg.vocab_per_field
+    user_emb = embedding.lookup(params["table"], ids)  # (1, F, D)
+    user_lin = embedding.lookup(params["lin_table"], ids)[..., 0]  # (1, F)
+    cand_emb = embedding.lookup(params["table"], batch["cand"])  # (N, D) field 0
+    cand_lin = embedding.lookup(params["lin_table"], batch["cand"])[..., 0]  # (N,)
+    emb = jnp.broadcast_to(user_emb, (N, F, D)).at[:, 0, :].set(cand_emb)
+    first = jnp.sum(user_lin[0, 1:]) + cand_lin
+    deep_in = emb.reshape(N, F * D) + batch["dense"] @ params["dense_proj"]
+    deep = common.mlp_apply(params["mlp"], deep_in, act="relu")[:, 0]
+    if cfg.name == "deepfm":
+        return first + fm_second_order(emb) + deep
+    feats = cin(emb, params["cin"], cfg.cin_layers)
+    return first + (feats @ params["cin_out"])[:, 0] + deep
+
+
+def bst_retrieval_scores(
+    params, batch: Dict[str, Array], cfg: RecsysConfig
+) -> Array:
+    """bst retrieval_cand: one history x N candidate targets.
+
+    The candidate sits in the sequence, so the transformer block runs per
+    candidate (N, S+1, D) — the honest cost of sequence-conditioned scoring.
+    History embeddings are gathered once and broadcast.
+    """
+    hist, cand = batch["hist"], batch["cand"]  # (1, S), (N,)
+    N = cand.shape[0]
+    S = cfg.seq_len
+    h_hist = embedding.lookup(params["table"], hist)  # (1, S, D)
+    h_cand = embedding.lookup(params["table"], cand)[:, None, :]  # (N, 1, D)
+    h = jnp.concatenate(
+        [jnp.broadcast_to(h_hist, (N, S, cfg.embed_dim)), h_cand], axis=1
+    )
+    h = h + params["pos"][None]
+    for i in range(cfg.n_blocks):
+        h = _bst_block(h, params["attn"], i, cfg.n_heads)
+    return common.mlp_apply(params["mlp"], h.reshape(N, -1), act="relu")[:, 0]

@@ -1,0 +1,52 @@
+"""Activation-sharding hooks: models stay mesh-agnostic.
+
+The launcher installs a mesh + logical rules; models call
+``constrain(x, spec)`` at the few places that matter (post-embed, attention
+output, FFN intermediate, logits).  Outside a mesh context this is a no-op,
+so unit tests and the CPU examples run unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def batch_axes() -> tuple:
+    """Axes that jointly play the data-parallel role."""
+    if _ACTIVE_MESH is None:
+        return ("data",)
+    names = _ACTIVE_MESH.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity.
+
+    spec entries: None, an axis name, or a tuple of axis names; the special
+    string "batch" resolves to ``batch_axes()`` (pod+data under multi-pod).
+    """
+    if _ACTIVE_MESH is None:
+        return x
+    resolved = tuple(batch_axes() if s == "batch" else s for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE_MESH, P(*resolved))
+    )
+
+
+def named(*spec) -> P:
+    return P(*tuple(() if s is None else s for s in spec))

@@ -1,0 +1,741 @@
+"""Config-driven decoder-only LM covering the five assigned transformer archs.
+
+One parameterization spans: mixtral-8x7b (GQA kv=8, SWA 4096, MoE 8e top-2),
+arctic-480b (GQA kv=8, MoE 128e top-2 + parallel dense residual FFN),
+stablelm-1.6b (MHA-ish GQA kv=32), qwen2.5-3b (GQA kv=2, QKV bias),
+gemma3-1b (GQA kv=1, head_dim 256, 5:1 local:global attention).
+
+Implementation notes (all production-motivated):
+  * **scan-over-layers** with stacked (L, ...) params — compile time stays
+    flat in depth, which the 40-cell dry-run depends on; per-layer attention
+    patterns ride through the scan as a (L,) window vector;
+  * **remat** (``jax.checkpoint``) around the scanned layer body — activation
+    memory ~ O(L * B * S * d) at layer boundaries only;
+  * attention is the chunked online-softmax of ``models.attention`` — no
+    (S, S) score tensor, prefill_32k stays within HBM;
+  * MoE is the sorted-capacity dispatch of ``models.moe``;
+  * activations are computed in ``compute_dtype`` (bf16), params stored in
+    ``param_dtype``; the loss/softmax runs in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, common, moe as moe_lib
+from repro.models.sharding import constrain
+
+Array = jax.Array
+
+FULL_WINDOW = 1 << 30  # "no window": i - j < 2^30 is always true in-range
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    d_head: Optional[int] = None  # default d_model // n_heads (gemma3: 256)
+    act: str = "silu"
+    qkv_bias: bool = False  # qwen2.5
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+    # attention pattern
+    window: Optional[int] = None  # sliding window (mixtral 4096); None = full
+    local_global: Optional[Tuple[int, int]] = None  # gemma3: (5 local, 1 global)
+    local_window: int = 1024
+    # MoE
+    moe: Optional[moe_lib.MoEConfig] = None
+    moe_d_ff: int = 0  # expert hidden width (falls back to d_ff)
+    dense_residual: bool = False  # arctic: parallel dense FFN
+    dense_d_ff: int = 0
+    moe_groups: int = 1  # shard-local dispatch groups (= data shards)
+    # numerics / scheduling
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    # dry-run / production-schedule mode: python-loop over layers with the
+    # statically-tiled attention (tile skipping + faithful cost_analysis —
+    # scan bodies are otherwise counted once, DESIGN.md §7)
+    unrolled: bool = False
+    # explicit ZeRO-3 weight use-constraints.  Measured (EXPERIMENTS §Perf
+    # it.2B): cuts collectives 1.7x but GSPMD then *replicates* part of the
+    # MoE einsum (3.4x FLOPs) — net loss, so default OFF; kept as a knob
+    # because the trade flips for collective-bound meshes.
+    zero3_use_constraints: bool = False
+    # Megatron sequence parallelism: residual stream sharded over 'model' on
+    # the sequence dim at layer boundaries (§Perf it.3)
+    seq_shard: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    def window_by_layer(self) -> np.ndarray:
+        """Static (L,) per-layer attention window (DESIGN.md: one scan body)."""
+        L = self.n_layers
+        if self.local_global is not None:
+            nl, ng = self.local_global
+            period = nl + ng
+            pat = [self.local_window] * nl + [FULL_WINDOW] * ng
+            w = [pat[i % period] for i in range(L)]
+            return np.asarray(w, np.int32)
+        if self.window is not None:
+            return np.full((L,), self.window, np.int32)
+        return np.full((L,), FULL_WINDOW, np.int32)
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        attn = self.n_layers * (
+            d * (self.n_heads * dh)
+            + 2 * d * (self.n_kv_heads * dh)
+            + (self.n_heads * dh) * d
+        )
+        if self.moe is not None:
+            f = self.moe_d_ff or self.d_ff
+            ffn = self.n_layers * self.moe.n_experts * 3 * d * f
+            ffn += self.n_layers * d * self.moe.n_experts
+            if self.dense_residual:
+                ffn += self.n_layers * 3 * d * (self.dense_d_ff or self.d_ff)
+        else:
+            ffn = self.n_layers * 3 * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return attn + ffn + emb + self.n_layers * 2 * d + d
+
+    def active_param_count(self) -> int:
+        """6·N_active·D counting for MoE rooflines."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        f = self.moe_d_ff or self.d_ff
+        total = self.param_count()
+        all_exp = self.n_layers * self.moe.n_experts * 3 * d * f
+        act_exp = self.n_layers * self.moe.top_k * 3 * d * f
+        return total - all_exp + act_exp
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: Array, cfg: TransformerConfig) -> Dict[str, Any]:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, dh, H, KV, L = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    ks = common.split_tree(
+        key,
+        {n: None for n in [
+            "embed", "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+            "router", "head", "dense_gate", "dense_up", "dense_down",
+        ]},
+    )
+    p: Dict[str, Any] = {
+        "embed": common.embed_init(ks["embed"], (cfg.vocab, d), pd),
+        "ln1": jnp.zeros((L, d), pd),
+        "ln2": jnp.zeros((L, d), pd),
+        "ln_f": jnp.zeros((d,), pd),
+        "wq": common.dense_init(ks["wq"], (L, d, H * dh), pd),
+        "wk": common.dense_init(ks["wk"], (L, d, KV * dh), pd),
+        "wv": common.dense_init(ks["wv"], (L, d, KV * dh), pd),
+        "wo": common.dense_init(ks["wo"], (L, H * dh, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((L, H * dh), pd)
+        p["bk"] = jnp.zeros((L, KV * dh), pd)
+        p["bv"] = jnp.zeros((L, KV * dh), pd)
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        f = cfg.moe_d_ff or cfg.d_ff
+        p["router"] = common.dense_init(ks["router"], (L, d, E), jnp.float32)
+        p["w_gate"] = common.dense_init(ks["w_gate"], (L, E, d, f), pd)
+        p["w_up"] = common.dense_init(ks["w_up"], (L, E, d, f), pd)
+        p["w_down"] = common.dense_init(ks["w_down"], (L, E, f, d), pd)
+        if cfg.dense_residual:
+            df = cfg.dense_d_ff or cfg.d_ff
+            p["dense_gate"] = common.dense_init(ks["dense_gate"], (L, d, df), pd)
+            p["dense_up"] = common.dense_init(ks["dense_up"], (L, d, df), pd)
+            p["dense_down"] = common.dense_init(ks["dense_down"], (L, df, d), pd)
+    else:
+        p["w_gate"] = common.dense_init(ks["w_gate"], (L, d, cfg.d_ff), pd)
+        p["w_up"] = common.dense_init(ks["w_up"], (L, d, cfg.d_ff), pd)
+        p["w_down"] = common.dense_init(ks["w_down"], (L, cfg.d_ff, d), pd)
+    if not cfg.tie_embeddings:
+        p["head"] = common.dense_init(ks["head"], (d, cfg.vocab), pd)
+    return p
+
+
+def param_pspecs(cfg: TransformerConfig, fsdp: bool = False) -> Dict[str, Any]:
+    """Megatron TP rules (+ optional FSDP on the d_model axis of big mats)."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = "data" if fsdp else None
+    specs: Dict[str, Any] = {
+        "embed": P("model", None),
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "ln_f": P(None),
+        "wq": P(None, dp, "model"),
+        "wk": P(None, dp, "model"),
+        "wv": P(None, dp, "model"),
+        "wo": P(None, "model", dp),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = P(None, "model")
+        specs["bk"] = P(None, "model")
+        specs["bv"] = P(None, "model")
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        specs["router"] = P(None, None, None)
+        if E >= 16:  # expert parallelism (arctic: 128 experts / 16 = 8 per chip)
+            specs["w_gate"] = P(None, "model", dp, None)
+            specs["w_up"] = P(None, "model", dp, None)
+            specs["w_down"] = P(None, "model", None, dp)
+        else:  # per-expert tensor parallelism (mixtral: 8 experts < 16 chips)
+            specs["w_gate"] = P(None, None, dp, "model")
+            specs["w_up"] = P(None, None, dp, "model")
+            specs["w_down"] = P(None, None, "model", dp)
+        if cfg.dense_residual:
+            specs["dense_gate"] = P(None, dp, "model")
+            specs["dense_up"] = P(None, dp, "model")
+            specs["dense_down"] = P(None, "model", dp)
+    else:
+        specs["w_gate"] = P(None, dp, "model")
+        specs["w_up"] = P(None, dp, "model")
+        specs["w_down"] = P(None, "model", dp)
+    if not cfg.tie_embeddings:
+        specs["head"] = P(None, "model")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer(cfg: TransformerConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def body(h: Array, lp: Dict[str, Array], window, positions: Array):
+        B, S, d = h.shape
+        a = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = a @ lp["wq"].astype(cd)
+        k = a @ lp["wk"].astype(cd)
+        v = a @ lp["wv"].astype(cd)
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = q.reshape(B, S, H, dh)
+        k = k.reshape(B, S, KV, dh)
+        v = v.reshape(B, S, KV, dh)
+        q = attention.rope(q, positions, cfg.rope_theta)
+        k = attention.rope(k, positions, cfg.rope_theta)
+        q = constrain(q, "batch", None, "model", None)
+        if cfg.unrolled:
+            o = attention.tiled_causal_attention(
+                q, k, v, int(window), q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+            )
+        else:
+            o = attention.chunked_causal_attention(
+                q, k, v, window, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+            )
+        o = o.reshape(B, S, H * dh) @ lp["wo"].astype(cd)
+        h = h + constrain(o, "batch", None, None)
+
+        m = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        aux = {}
+        if cfg.moe is not None:
+            flat = m.reshape(B * S, d)
+            mo, aux = moe_lib.apply_moe(
+                {k2: lp[k2] for k2 in ("router", "w_gate", "w_up", "w_down")},
+                flat,
+                cfg.moe,
+                act=cfg.act,
+                groups=cfg.moe_groups,
+            )
+            out = mo.reshape(B, S, d)
+            if cfg.dense_residual:
+                fn = common.ACTIVATIONS[cfg.act]
+                dz = fn(m @ lp["dense_gate"].astype(cd)) * (m @ lp["dense_up"].astype(cd))
+                out = out + dz @ lp["dense_down"].astype(cd)
+        else:
+            fn = common.ACTIVATIONS[cfg.act]
+            z = fn(m @ lp["w_gate"].astype(cd)) * (m @ lp["w_up"].astype(cd))
+            z = constrain(z, "batch", None, "model")
+            out = z @ lp["w_down"].astype(cd)
+        h = h + constrain(out, "batch", None, None)
+        return h, aux
+
+    return body
+
+
+_LAYER_KEYS = (
+    "ln1", "ln2", "wq", "wk", "wv", "wo", "bq", "bk", "bv",
+    "router", "w_gate", "w_up", "w_down", "dense_gate", "dense_up", "dense_down",
+)
+
+
+def _use_constrain_layer(lp: Dict[str, Array], cfg: TransformerConfig) -> Dict[str, Array]:
+    """ZeRO-3 semantics made explicit: storage sharding (FSDP, d over data)
+    differs from USE sharding (replicated over data, split over model).
+
+    Without this, GSPMD may resolve a data-sharded contraction dim by
+    ALL-REDUCING the (huge) activation instead of all-gathering the (small)
+    weight — measured 70 GiB x 64 all-reduces on the mixtral train cell
+    (EXPERIMENTS.md §Perf iteration 2).  Constraining each weight to its use
+    sharding forces the cheap side: one weight all-gather per use.
+
+    MEASURED OUTCOME (EXPERIMENTS.md §Perf iteration 2B): collectives drop
+    1027->594 GB/step(2L probe) but the MoE einsum partially REPLICATES
+    (1166->3937 TF) — GSPMD mis-costs the constrained einsum.  Net loss on
+    compute-bound cells, so gated behind cfg.zero3_use_constraints.
+    """
+    if not cfg.zero3_use_constraints:
+        return lp
+    specs = {
+        "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+        "wo": ("model", None),
+        "dense_gate": (None, "model"), "dense_up": (None, "model"),
+        "dense_down": ("model", None),
+    }
+    if cfg.moe is not None:
+        if cfg.moe.n_experts >= 16:  # expert parallelism
+            specs.update({
+                "w_gate": ("model", None, None), "w_up": ("model", None, None),
+                "w_down": ("model", None, None),
+            })
+        else:  # per-expert tensor parallelism
+            specs.update({
+                "w_gate": (None, None, "model"), "w_up": (None, None, "model"),
+                "w_down": (None, "model", None),
+            })
+    else:
+        specs.update({
+            "w_gate": (None, "model"), "w_up": (None, "model"),
+            "w_down": ("model", None),
+        })
+    out = dict(lp)
+    for k, sp in specs.items():
+        if k in out:
+            out[k] = constrain(out[k], *sp)
+    return out
+
+
+def _split_layer_params(params):
+    layer = {k: v for k, v in params.items() if k in _LAYER_KEYS}
+    rest = {k: v for k, v in params.items() if k not in _LAYER_KEYS}
+    return layer, rest
+
+
+def forward(params: Dict[str, Any], tokens: Array, cfg: TransformerConfig) -> Array:
+    """tokens (B, S) -> logits (B, S, vocab)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    layer_params, rest = _split_layer_params(params)
+    h = rest["embed"].astype(cd)[tokens] * jnp.asarray(
+        np.sqrt(cfg.d_model), cd
+    )
+    h = constrain(h, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = jnp.asarray(cfg.window_by_layer())
+    body = _layer(cfg)
+
+    def scan_fn(carry, xs):
+        lp, w = xs
+        out, aux = body(carry, lp, w, positions)
+        return out, aux
+
+    if cfg.unrolled:
+        # python layer loop: static windows (tile skipping) + faithful HLO
+        win_np = cfg.window_by_layer()
+        aux_list = []
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                            static_argnums=(2,)) if cfg.remat else body
+        for li in range(cfg.n_layers):
+            lp = _use_constrain_layer(
+                jax.tree.map(lambda a: a[li], layer_params), cfg)
+            if cfg.seq_shard:  # Megatron-SP: boundary activations S-sharded
+                h = constrain(h, "batch", "model", None)
+            h, aux_i = fn(h, lp, int(win_np[li]), positions)
+            aux_list.append(aux_i)
+        aux = jax.tree.map(lambda *xs: jnp.stack(xs), *aux_list) if aux_list and aux_list[0] else {}
+    else:
+        if cfg.remat:
+            scan_fn = jax.checkpoint(
+                scan_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        h, aux = jax.lax.scan(scan_fn, h, (layer_params, windows))
+    h = common.rms_norm(h, rest["ln_f"], cfg.norm_eps)
+    head = rest["head"] if not cfg.tie_embeddings else rest["embed"].T
+    logits = h @ head.astype(cd)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return constrain(logits, "batch", None, "model"), aux
+
+
+def loss_fn(params, tokens: Array, cfg: TransformerConfig):
+    """Next-token cross entropy (tokens double as labels, shifted)."""
+    logits, aux = forward(params, tokens, cfg)
+    loss = common.softmax_xent(logits[:, :-1], tokens[:, 1:])
+    extra = 0.0
+    if cfg.moe is not None:
+        extra = jnp.sum(aux["moe_aux_loss"])  # summed over scanned layers
+    metrics = {"xent": loss}
+    if cfg.moe is not None:
+        metrics["moe_drop_rate"] = jnp.mean(aux["moe_drop_rate"])
+    return loss + extra, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill (serve: populate the KV cache, return next-token logits)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens: Array, cfg: TransformerConfig):
+    """tokens (B, S) -> (last-position logits (B, vocab), KV cache).
+
+    The ``prefill_32k`` cells lower this: full chunked-causal attention over
+    the prompt, per-layer K/V emitted through the scan's ys (so the cache
+    materializes once, already stacked (L, B, S, KV, dh)).
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    layer_params, rest = _split_layer_params(params)
+    h = rest["embed"].astype(cd)[tokens] * jnp.asarray(np.sqrt(cfg.d_model), cd)
+    h = constrain(h, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    windows = jnp.asarray(cfg.window_by_layer())
+
+    def body(h, xs):
+        lp, w = xs
+        B, S, d = h.shape
+        a = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = a @ lp["wq"].astype(cd)
+        k = a @ lp["wk"].astype(cd)
+        v = a @ lp["wv"].astype(cd)
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = attention.rope(q.reshape(B, S, H, dh), positions, cfg.rope_theta)
+        k = attention.rope(k.reshape(B, S, KV, dh), positions, cfg.rope_theta)
+        v = v.reshape(B, S, KV, dh)
+        if cfg.unrolled:
+            o = attention.tiled_causal_attention(
+                q, k, v, int(w), q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+            )
+        else:
+            o = attention.chunked_causal_attention(
+                q, k, v, w, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+            )
+        o = o.reshape(B, S, H * dh) @ lp["wo"].astype(cd)
+        h = h + o
+        m = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, _ = moe_lib.apply_moe(
+                {k2: lp[k2] for k2 in ("router", "w_gate", "w_up", "w_down")},
+                m.reshape(B * S, d),
+                cfg.moe,
+                act=cfg.act,
+                groups=cfg.moe_groups,
+            )
+            out = mo.reshape(B, S, d)
+            if cfg.dense_residual:
+                fn = common.ACTIVATIONS[cfg.act]
+                dz = fn(m @ lp["dense_gate"].astype(cd)) * (m @ lp["dense_up"].astype(cd))
+                out = out + dz @ lp["dense_down"].astype(cd)
+        else:
+            fn = common.ACTIVATIONS[cfg.act]
+            z = fn(m @ lp["w_gate"].astype(cd)) * (m @ lp["w_up"].astype(cd))
+            out = z @ lp["w_down"].astype(cd)
+        h = h + out
+        return h, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    if cfg.unrolled:
+        win_np = cfg.window_by_layer()
+        ks, vs = [], []
+        for li in range(cfg.n_layers):
+            lp = _use_constrain_layer(
+                jax.tree.map(lambda a: a[li], layer_params), cfg)
+            h, (k_i, v_i) = body(h, (lp, int(win_np[li])))
+            ks.append(k_i)
+            vs.append(v_i)
+        kc, vc = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (kc, vc) = jax.lax.scan(body, h, (layer_params, windows))
+    h = common.rms_norm(h[:, -1], rest["ln_f"], cfg.norm_eps)
+    head = rest["head"] if not cfg.tie_embeddings else rest["embed"].T
+    logits = (h @ head.astype(cd)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    cache = {"k": kc, "v": vc, "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_split_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16):
+    """Windowed ring-buffer caches for local-attention layers (§Perf it.4).
+
+    A layer with window w never reads K/V older than w tokens, so its cache
+    is a ring of w slots instead of max_seq — EXACT attention semantics,
+    cache bytes shrink by  (n_loc·w + n_glob·S) / (L·S)  (gemma3 decode_32k:
+    6.2x; mixtral long_500k: 128x).  Only meaningful with bounded windows;
+    falls back to the dense cache when every layer is global.
+    """
+    wins = cfg.window_by_layer()
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    loc = [i for i, w in enumerate(wins) if int(w) < max_seq]
+    glob = [i for i, w in enumerate(wins) if int(w) >= max_seq]
+    if not loc:
+        return init_cache(cfg, batch, max_seq, dtype)
+    w_max = max(int(wins[i]) for i in loc)
+    cache = {
+        "k_loc": jnp.zeros((len(loc), batch, w_max, KV, dh), dtype),
+        "v_loc": jnp.zeros((len(loc), batch, w_max, KV, dh), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if glob:
+        cache["k_glob"] = jnp.zeros((len(glob), batch, max_seq, KV, dh), dtype)
+        cache["v_glob"] = jnp.zeros((len(glob), batch, max_seq, KV, dh), dtype)
+    return cache
+
+
+def ring_decode_attention(
+    q: Array,  # (B, 1, H, Dh)
+    k_ring: Array,  # (B, W, KV, Dh) — ring buffer, slot p%W holds position p
+    v_ring: Array,
+    cache_len: Array,  # (B,) — the new token's position
+    window: int,
+    *,
+    softmax_scale: Optional[float] = None,
+) -> Array:
+    """Decode attention over a ring-buffered window cache (exact SWA)."""
+    b, _, h, dh = q.shape
+    W = k_ring.shape[1]
+    kv_heads = k_ring.shape[2]
+    groups = h // kv_heads
+    scale = softmax_scale if softmax_scale is not None else dh**-0.5
+    kk = _repeat_kv(k_ring, groups)
+    vv = _repeat_kv(v_ring, groups)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q * scale, kk, preferred_element_type=jnp.float32
+    )
+    # slot i holds position p = len - ((len - i) mod W); p < 0 = never written
+    slot = jnp.arange(W)[None, :]
+    ln = cache_len[:, None]
+    p = ln - jnp.mod(ln - slot, W)
+    delta = ln - p
+    mask = (delta >= 0) & (delta < window) & (p >= 0)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", prob, vv, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+from repro.models.attention import NEG_INF, _repeat_kv  # noqa: E402  (ring decode)
+
+
+def decode_step_split(params, cache, tokens: Array, cfg: TransformerConfig):
+    """decode_step over split (ring local + dense global) caches.
+
+    Python layer loop (per-layer cache shapes differ).  Output is bit-
+    equivalent to decode_step with a full cache — verified in
+    tests/test_models.py::test_split_cache_decode_matches_full.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    layer_params, rest = _split_layer_params(params)
+    h = rest["embed"].astype(cd)[tokens][:, None, :] * jnp.asarray(
+        np.sqrt(cfg.d_model), cd)
+    positions = cache["len"][:, None]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    wins = cfg.window_by_layer()
+    if "k_loc" not in cache:  # all-global config: plain dense path
+        return decode_step(params, cache, tokens, cfg)
+    max_seq = cache["k_glob"].shape[2] if "k_glob" in cache else None
+    W = cache["k_loc"].shape[2]
+    loc_map, glob_map = {}, {}
+    for i, w in enumerate(wins):
+        if max_seq is None or int(w) < max_seq:
+            loc_map[i] = len(loc_map)
+        else:
+            glob_map[i] = len(glob_map)
+
+    new_kl, new_vl = list(range(len(loc_map))), list(range(len(loc_map)))
+    new_kg, new_vg = list(range(len(glob_map))), list(range(len(glob_map)))
+    bidx = jnp.arange(B)
+    for li in range(cfg.n_layers):
+        lp = _use_constrain_layer(
+            jax.tree.map(lambda a: a[li], layer_params), cfg)
+        a = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = a @ lp["wq"].astype(cd)
+        k = a @ lp["wk"].astype(cd)
+        v = a @ lp["wv"].astype(cd)
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = attention.rope(q.reshape(B, 1, H, dh), positions, cfg.rope_theta)
+        k = attention.rope(k.reshape(B, 1, KV, dh), positions, cfg.rope_theta)
+        v = v.reshape(B, 1, KV, dh)
+        if li in loc_map:
+            ci = loc_map[li]
+            kc, vc = cache["k_loc"][ci], cache["v_loc"][ci]
+            slot = jnp.mod(cache["len"], W)
+            kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+            o = ring_decode_attention(q, kc, vc, cache["len"], int(wins[li]))
+            new_kl[ci], new_vl[ci] = kc, vc
+        else:
+            ci = glob_map[li]
+            kc, vc = cache["k_glob"][ci], cache["v_glob"][ci]
+            kc = kc.at[bidx, cache["len"]].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[bidx, cache["len"]].set(v[:, 0].astype(vc.dtype))
+            o = attention.decode_attention(q, kc, vc, cache["len"], int(wins[li]))
+            new_kg[ci], new_vg[ci] = kc, vc
+        o = o.reshape(B, 1, H * dh) @ lp["wo"].astype(cd)
+        h = h + o
+        m = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, _ = moe_lib.apply_moe(
+                {k2: lp[k2] for k2 in ("router", "w_gate", "w_up", "w_down")},
+                m.reshape(B, cfg.d_model), cfg.moe, act=cfg.act,
+                groups=cfg.moe_groups,
+            )
+            out = mo.reshape(B, 1, cfg.d_model)
+            if cfg.dense_residual:
+                fn = common.ACTIVATIONS[cfg.act]
+                dz = fn(m @ lp["dense_gate"].astype(cd)) * (m @ lp["dense_up"].astype(cd))
+                out = out + dz @ lp["dense_down"].astype(cd)
+        else:
+            fn = common.ACTIVATIONS[cfg.act]
+            z = fn(m @ lp["w_gate"].astype(cd)) * (m @ lp["w_up"].astype(cd))
+            out = z @ lp["w_down"].astype(cd)
+        h = h + out
+
+    hf = common.rms_norm(h[:, 0], rest["ln_f"], cfg.norm_eps)
+    head = rest["head"] if not cfg.tie_embeddings else rest["embed"].T
+    logits = (hf @ head.astype(cd)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    new_cache = {
+        "k_loc": jnp.stack(new_kl), "v_loc": jnp.stack(new_vl),
+        "len": cache["len"] + 1,
+    }
+    if glob_map:
+        new_cache["k_glob"] = jnp.stack(new_kg)
+        new_cache["v_glob"] = jnp.stack(new_vg)
+    return logits, new_cache
+
+
+def decode_step(params, cache, tokens: Array, cfg: TransformerConfig):
+    """One decode step: tokens (B,) -> (logits (B, vocab), updated cache).
+
+    The new token attends to cache[:len] plus itself; each layer's K/V are
+    written at position ``len``.  O(S) per token — the long_500k and
+    decode_32k shapes lower this function.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    layer_params, rest = _split_layer_params(params)
+    h = rest["embed"].astype(cd)[tokens][:, None, :] * jnp.asarray(
+        np.sqrt(cfg.d_model), cd
+    )  # (B, 1, d)
+    positions = cache["len"][:, None]  # (B, 1)
+    windows = jnp.asarray(cfg.window_by_layer())
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def layer_step(h, xs):
+        lp, w, kc, vc = xs  # kc/vc: (B, S, KV, dh)
+        B, _, d = h.shape
+        a = common.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = a @ lp["wq"].astype(cd)
+        k = a @ lp["wk"].astype(cd)
+        v = a @ lp["wv"].astype(cd)
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = attention.rope(q.reshape(B, 1, H, dh), positions, cfg.rope_theta)
+        k = attention.rope(k.reshape(B, 1, KV, dh), positions, cfg.rope_theta)
+        v = v.reshape(B, 1, KV, dh)
+        # write into the cache at position len (per batch row)
+        bidx = jnp.arange(B)
+        kc = kc.at[bidx, cache["len"]].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[bidx, cache["len"]].set(v[:, 0].astype(vc.dtype))
+        o = attention.decode_attention(q, kc, vc, cache["len"], w)
+        o = o.reshape(B, 1, H * dh) @ lp["wo"].astype(cd)
+        h = h + o
+        m = common.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            mo, _ = moe_lib.apply_moe(
+                {k2: lp[k2] for k2 in ("router", "w_gate", "w_up", "w_down")},
+                m.reshape(B, d),
+                cfg.moe,
+                groups=cfg.moe_groups,
+            )
+            out = mo.reshape(B, 1, d)
+            if cfg.dense_residual:
+                fn = common.ACTIVATIONS[cfg.act]
+                dz = fn(m @ lp["dense_gate"].astype(cd)) * (m @ lp["dense_up"].astype(cd))
+                out = out + dz @ lp["dense_down"].astype(cd)
+        else:
+            fn = common.ACTIVATIONS[cfg.act]
+            z = fn(m @ lp["w_gate"].astype(cd)) * (m @ lp["w_up"].astype(cd))
+            out = z @ lp["w_down"].astype(cd)
+        h = h + out
+        return h, (kc, vc)
+
+    if cfg.unrolled:
+        win_np = cfg.window_by_layer()
+        ks, vs = [], []
+        for li in range(cfg.n_layers):
+            lp = _use_constrain_layer(
+                jax.tree.map(lambda a: a[li], layer_params), cfg)
+            h, (kc_i, vc_i) = layer_step(
+                h, (lp, int(win_np[li]), cache["k"][li], cache["v"][li])
+            )
+            ks.append(kc_i)
+            vs.append(vc_i)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (k_new, v_new) = jax.lax.scan(
+            layer_step, h, (layer_params, windows, cache["k"], cache["v"])
+        )
+    h = common.rms_norm(h[:, 0], rest["ln_f"], cfg.norm_eps)
+    head = rest["head"] if not cfg.tie_embeddings else rest["embed"].T
+    logits = h @ head.astype(cd)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
+    return logits.astype(jnp.float32), new_cache

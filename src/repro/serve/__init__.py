@@ -1,0 +1,1 @@
+from repro.serve import retrieval  # noqa: F401

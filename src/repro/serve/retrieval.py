@@ -1,0 +1,137 @@
+"""ANN retrieval serving: the paper's LGD graph as a production index.
+
+This is the paper's own deployment story (§IV-C e-shopping scenario) wired
+to the MIND recsys arch (DESIGN.md §5): candidate item embeddings are
+indexed once with online LGD construction; at serve time each user's
+interest vectors (from MIND's capsule encoder) query the graph with
+EHC search under the inner-product metric; results from the K interests are
+deduped and re-ranked.
+
+Because construction is online, catalog churn (new items listed, stale items
+withdrawn) maps to ``core.dynamic.insert``/``remove`` — no index rebuilds,
+which is precisely the capability the paper contributes over offline
+builders (NN-Descent / DPG / HNSW).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brute, construct, dynamic
+from repro.core import search as search_lib
+from repro.core.graph import KNNGraph
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class RetrievalIndex:
+    graph: KNNGraph
+    items: Array  # (capacity, d) item embeddings (rows >= n_valid are free)
+    metric: str
+    build_cfg: construct.BuildConfig
+
+    @property
+    def n_items(self) -> int:
+        return int(self.graph.n_valid)
+
+
+def build_index(
+    items: Array,
+    *,
+    k: int = 20,
+    metric: str = "ip",
+    wave: int = 512,
+    capacity: Optional[int] = None,
+    key: Optional[Array] = None,
+    beam: int = 40,
+) -> RetrievalIndex:
+    """Index a candidate bank with online LGD construction."""
+    cfg = construct.BuildConfig(
+        k=k, metric=metric, wave=wave, lgd=True, beam=beam, use_pallas=False
+    )
+    n = items.shape[0]
+    cap = capacity or n
+    g, _ = construct.build(items, cfg, key)  # index the REAL rows only
+    if cap > n:  # headroom for future add_items (rows stay unallocated)
+        from repro.core.graph import grow_graph
+
+        g = grow_graph(g, cap)
+        items = jnp.pad(items, ((0, cap - n), (0, 0)))
+    return RetrievalIndex(graph=g, items=items, metric=metric, build_cfg=cfg)
+
+
+def retrieve(
+    index: RetrievalIndex,
+    interests: Array,  # (K, d) query vectors (MIND interests, or any queries)
+    top_k: int,
+    *,
+    beam: Optional[int] = None,
+    key: Optional[Array] = None,
+):
+    """k-NN retrieval: EHC search per interest + cross-interest dedupe/merge.
+
+    Returns (item_ids (top_k,), scores (top_k,)) — scores are inner products
+    (higher = better) when metric='ip'.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    scfg = search_lib.SearchConfig(
+        k=top_k,
+        beam=max(beam or 2 * top_k, top_k),
+        metric=index.metric,
+        use_lgd_mask=True,
+        use_pallas=False,
+    )
+    res = search_lib.search(index.graph, index.items, interests, key, scfg)
+    ids = res.ids.reshape(-1)
+    dist = res.dists.reshape(-1)
+    # cross-interest dedupe: keep the best (smallest-distance) copy
+    order = jnp.argsort(dist)
+    ids_s = ids[order]
+    seen = jnp.triu((ids_s[None, :] == ids_s[:, None]), k=1)
+    dup = jnp.any(seen, axis=0)
+    dist_s = jnp.where(dup | (ids_s < 0), jnp.inf, dist[order])
+    sel = jnp.argsort(dist_s)[:top_k]
+    out_ids = ids_s[sel]
+    out_dist = dist_s[sel]
+    score = -out_dist if index.metric == "ip" else out_dist
+    return out_ids, score
+
+
+def retrieve_brute(index: RetrievalIndex, interests: Array, top_k: int):
+    """Exact baseline (the retrieval_cand roofline cell): full GEMM + top-k."""
+    ids, dist = brute.brute_force_knn(
+        index.items, interests, top_k, index.metric,
+        n_valid=index.graph.n_valid, use_pallas=False,
+    )
+    flat_i = ids.reshape(-1)
+    flat_d = dist.reshape(-1)
+    order = jnp.argsort(flat_d)
+    ids_s = flat_i[order]
+    dup = jnp.any(jnp.triu(ids_s[None, :] == ids_s[:, None], k=1), axis=0)
+    d_s = jnp.where(dup, jnp.inf, flat_d[order])
+    sel = jnp.argsort(d_s)[:top_k]
+    score = -d_s[sel] if index.metric == "ip" else d_s[sel]
+    return ids_s[sel], score
+
+
+def add_items(index: RetrievalIndex, new_items: Array, key=None) -> RetrievalIndex:
+    """Catalog insert: append rows + online insertion waves (§IV-C)."""
+    n0 = int(index.graph.n_valid)
+    m = new_items.shape[0]
+    items = index.items
+    assert n0 + m <= items.shape[0], "capacity exceeded — grow the index"
+    items = items.at[n0 : n0 + m].set(new_items)
+    g, _ = dynamic.insert(index.graph, items, m, index.build_cfg, key)
+    return dataclasses.replace(index, graph=g, items=items)
+
+
+def remove_items(index: RetrievalIndex, ids: Array) -> RetrievalIndex:
+    """Catalog withdraw: the paper's O(k²/2) removal with λ repair."""
+    g = dynamic.remove(index.graph, index.items, ids, index.metric)
+    return dataclasses.replace(index, graph=g)

@@ -1,0 +1,220 @@
+"""Optimizers in pure JAX: AdamW and (factored) Adafactor.
+
+AdamW is the default.  Adafactor is selected for the >=100B-param configs
+(arctic-480b) where Adam's 8 bytes/param of second-moment state would not fit
+HBM even fully sharded — the factored second moment reduces optimizer state
+to O(rows + cols) per matrix (DESIGN.md §6 memory budget).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # "adamw" | "adafactor" | "sgd"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    min_dim_factored: int = 128  # only factor matrices at least this big
+    decay_offset: int = 0
+
+
+def _global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _adamw_init(params: PyTree) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def _adafactor_init(params: PyTree) -> Dict[str, Any]:
+    def vr(p):
+        if _factorable(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)  # row stats
+        return jnp.zeros((1,), jnp.float32)
+
+    def vc(p):
+        if _factorable(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)  # col stats
+        return jnp.zeros(p.shape, jnp.float32)  # unfactored full second moment
+
+    return {
+        "vr": jax.tree.map(vr, params),
+        "vc": jax.tree.map(vc, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-0.8)  # Adafactor's decay schedule
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if _factorable(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = r[..., None] * vc[..., None, :]
+        else:
+            vc = beta2 * vc + (1 - beta2) * g2
+            vhat = vc
+            vr = vr
+        u = g32 / jnp.sqrt(vhat + 1e-30)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        delta = cfg.lr * u + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    istup = lambda x: isinstance(x, tuple)
+    return (
+        jax.tree.map(lambda o: o[0], out, is_leaf=istup),
+        {
+            "vr": jax.tree.map(lambda o: o[1], out, is_leaf=istup),
+            "vc": jax.tree.map(lambda o: o[2], out, is_leaf=istup),
+            "step": step,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# SGD (tests / toy examples)
+# ---------------------------------------------------------------------------
+
+
+def _sgd_init(params):
+    return {"step": jnp.zeros((), jnp.int32)}
+
+
+def _sgd_update(params, grads, state, cfg: OptConfig):
+    new = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - cfg.lr * g.astype(jnp.float32)).astype(p.dtype),
+        params,
+        grads,
+    )
+    return new, {"step": state["step"] + 1}
+
+
+_OPTS = {
+    "adamw": (_adamw_init, _adamw_update),
+    "adafactor": (_adafactor_init, _adafactor_update),
+    "sgd": (_sgd_init, _sgd_update),
+}
+
+
+def init_opt_state(params: PyTree, cfg: OptConfig) -> PyTree:
+    return _OPTS[cfg.name][0](params)
+
+
+def apply_updates(params: PyTree, grads: PyTree, state: PyTree, cfg: OptConfig):
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = _global_norm(grads)
+    params, state = _OPTS[cfg.name][1](params, grads, state, cfg)
+    return params, state, gnorm
+
+
+def opt_state_pspecs(param_specs: PyTree, params_shape: PyTree, cfg: OptConfig) -> PyTree:
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.name == "adamw":
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "step": P(),
+        }
+    if cfg.name == "adafactor":
+        def vr_spec(spec, p):
+            parts = list(spec) if spec is not None else [None] * p.ndim
+            parts = parts + [None] * (p.ndim - len(parts))
+            if _factorable(p):
+                return P(*parts[:-1])
+            return P(None)
+
+        def vc_spec(spec, p):
+            parts = list(spec) if spec is not None else [None] * p.ndim
+            parts = parts + [None] * (p.ndim - len(parts))
+            if _factorable(p):
+                return P(*(parts[:-2] + parts[-1:]))
+            return P(*parts)
+
+        from jax.sharding import PartitionSpec
+        return {
+            "vr": jax.tree.map(
+                vr_spec, param_specs, params_shape,
+                is_leaf=lambda x: isinstance(x, PartitionSpec),
+            ),
+            "vc": jax.tree.map(
+                vc_spec, param_specs, params_shape,
+                is_leaf=lambda x: isinstance(x, PartitionSpec),
+            ),
+            "step": P(),
+        }
+    return {"step": P()}

@@ -1,0 +1,148 @@
+"""train_step factories: the function every dry-run cell lowers.
+
+``make_train_step(loss_fn, opt_cfg)`` builds the canonical fused step:
+
+    grads = grad(loss); clip; optimizer update      (one jit'd function)
+
+with optional microbatch gradient accumulation (``accum_steps``) — the accum
+loop is a scan whose per-microbatch backward overlaps the previous
+microbatch's gradient reduction under XLA's latency-hiding scheduler
+(DESIGN.md §6 overlap).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+PyTree = Any
+
+
+def make_train_step(
+    loss_fn: Callable[[PyTree, Any], tuple[jax.Array, Dict[str, jax.Array]]],
+    opt_cfg: opt_lib.OptConfig,
+    *,
+    accum_steps: int = 1,
+):
+    """loss_fn(params, batch) -> (loss, metrics). Returns train_step fn."""
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # split the batch leading axis into microbatches and accumulate
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {}
+        params, opt_state, gnorm = opt_lib.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_sharded_train_step(
+    loss_fn: Callable,
+    opt_cfg: opt_lib.OptConfig,
+    mesh,
+    *,
+    data_axes: tuple = ("data",),
+    pod_axis: Optional[str] = "pod",
+    compress_pod: bool = True,
+):
+    """Explicit shard_map DP train step with cross-pod gradient compression.
+
+    The pjit path (make_train_step under in_shardings) lets XLA place one
+    big all-reduce over all data axes; this variant makes the hierarchy
+    explicit so the *pod* hop — DCN, ~10x thinner than ICI — can run the
+    int8 error-feedback compressor (train/compress.py):
+
+        grads --psum(data axes, ICI, full precision)-->
+              --compressed psum(pod axis, DCN, int8+scale)--> update
+
+    Params/optimizer are replicated across the mesh (pure DP); the batch is
+    sharded over (pod, data).  Returns step(params, opt_state, err, batch)
+    -> (params, opt_state, err, metrics).  ``err`` is the error-feedback
+    residual: per-POD state (identical within a pod since grads are pmean'd
+    over the data axes first), so its leaves carry a leading (n_pods,) dim
+    sharded over the pod axis — init via ``init_pod_error_state``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train import compress as compress_lib
+
+    have_pod = pod_axis is not None and pod_axis in mesh.axis_names
+    batch_spec = P(tuple(a for a in (pod_axis, *data_axes) if a in mesh.axis_names))
+    err_spec = P(pod_axis) if have_pod else P(None)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def local_step(params, opt_state, err, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        # intra-pod reduction: full precision over the ICI axes
+        grads = jax.tree.map(
+            lambda g: jax.lax.pmean(g, tuple(a for a in data_axes)), grads)
+        loss = jax.lax.pmean(loss, tuple(a for a in data_axes))
+        if have_pod:
+            if compress_pod:
+                e_local = jax.tree.map(lambda e: e[0], err)
+                grads, e_local = compress_lib.allreduce_compressed(
+                    grads, e_local, pod_axis)
+                err = jax.tree.map(lambda e: e[None], e_local)
+            else:
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, pod_axis), grads)
+            loss = jax.lax.pmean(loss, pod_axis)
+        params, opt_state, gnorm = opt_lib.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, err, metrics
+
+    rep = P()  # params/opt replicated
+    return jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(rep, rep, err_spec, batch_spec),
+        out_specs=(rep, rep, err_spec, rep),
+        check_vma=False,
+    )
+
+
+def init_pod_error_state(params, mesh, pod_axis: str = "pod"):
+    """(n_pods, *shape) zero residuals for make_sharded_train_step."""
+    import jax.numpy as jnp
+
+    n_pods = mesh.shape[pod_axis] if pod_axis in mesh.axis_names else 1
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params)
+
+
+def make_eval_step(loss_fn: Callable):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return metrics
+
+    return eval_step

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates a REDUCED same-family config and runs one
+forward/train step on CPU, asserting output shapes and no NaNs.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import graphs, recsys_data
+from repro.models import mace as mace_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt_lib, train_loop
+
+LM_ARCHS = ["mixtral-8x7b", "arctic-480b", "stablelm-1.6b", "qwen2.5-3b", "gemma3-1b"]
+REC_ARCHS = ["deepfm", "xdeepfm", "bst", "mind"]
+
+
+def _finite(tree):
+    return all(bool(jnp.all(jnp.isfinite(v))) for v in jax.tree.leaves(tree)
+               if jnp.issubdtype(v.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+class TestLMArchSmoke:
+    def test_train_step(self, arch):
+        cfg = configs.get(arch).smoke_config()
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        ocfg = opt_lib.OptConfig(name="adamw", lr=1e-3)
+        opt = opt_lib.init_opt_state(params, ocfg)
+        step = jax.jit(train_loop.make_train_step(
+            lambda p, b: tfm.loss_fn(p, b["tokens"], cfg), ocfg))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+        params, opt, m = step(params, opt, {"tokens": tokens})
+        assert np.isfinite(float(m["loss"])), arch
+        assert _finite(params), arch
+
+    def test_forward_shapes(self, arch):
+        cfg = configs.get(arch).smoke_config()
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jnp.zeros((2, 32), jnp.int32)
+        logits, _ = tfm.forward(params, tokens, cfg)
+        assert logits.shape == (2, 32, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_decode_step(self, arch):
+        cfg = configs.get(arch).smoke_config()
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        cache = tfm.init_cache(cfg, 2, 16)
+        logits, cache2 = tfm.decode_step(params, cache, jnp.zeros((2,), jnp.int32), cfg)
+        assert logits.shape == (2, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert int(cache2["len"][0]) == 1
+
+
+class TestMaceSmoke:
+    def test_molecule(self):
+        cfg = configs.get("mace").smoke_config("molecule")
+        p = mace_lib.init_params(jax.random.PRNGKey(0), cfg)
+        pos, spec = graphs.molecules(jax.random.PRNGKey(1), 4, 10)
+        snds, rcvs = jax.vmap(lambda x: graphs.knn_edges_from_positions(x, 3))(pos)
+        batch = dict(positions=pos, species=spec, senders=snds, receivers=rcvs,
+                     energy=jnp.zeros((4,)))
+        loss, m = mace_lib.energy_loss(p, batch, cfg)
+        assert np.isfinite(float(loss))
+
+    @pytest.mark.parametrize("shape", ["full_graph_sm", "minibatch_lg", "ogb_products"])
+    def test_citation_regimes(self, shape):
+        cfg = configs.get("mace").smoke_config(shape)
+        p = mace_lib.init_params(jax.random.PRNGKey(0), cfg)
+        g = graphs.random_graph(jax.random.PRNGKey(1), 60, 240, cfg.d_node_feat,
+                                n_classes=cfg.n_classes)
+        batch = dict(
+            positions=jnp.zeros((60, 3)), species=jnp.zeros((60,), jnp.int32),
+            senders=g.senders, receivers=g.receivers, node_feat=g.features,
+            labels=g.labels,
+        )
+        loss, m = mace_lib.node_class_loss(p, batch, cfg)
+        assert np.isfinite(float(loss)) and np.isfinite(float(m["acc"]))
+
+
+@pytest.mark.parametrize("arch", REC_ARCHS)
+class TestRecsysArchSmoke:
+    def test_train_and_serve(self, arch):
+        cfg = configs.get(arch).smoke_config()
+        p = recsys_lib.init_params(jax.random.PRNGKey(0), cfg)
+        if arch in ("deepfm", "xdeepfm"):
+            b = recsys_data.ctr_batch(jax.random.PRNGKey(1), 32, cfg.n_sparse,
+                                      cfg.vocab_per_field)
+        else:
+            b = recsys_data.behavior_batch(jax.random.PRNGKey(1), 32, cfg.seq_len,
+                                           cfg.vocab_per_field)
+        loss, m = recsys_lib.loss_fn(p, b, cfg)
+        assert np.isfinite(float(loss)), arch
+        s = recsys_lib.serve_scores(p, b, cfg)
+        assert s.shape == (32,) and bool(jnp.all((s >= 0) & (s <= 1)))
+
+
+class TestKnnArchSmoke:
+    @pytest.mark.parametrize("arch", ["knn-lgd", "knn-olg"])
+    def test_build_and_search(self, arch):
+        from repro.core import brute, construct
+        from repro.core import search as search_lib
+
+        cfg = configs.get(arch).smoke_config()
+        x = jax.random.uniform(jax.random.PRNGKey(0), (400, 12))
+        g, stats = construct.build(x, cfg, jax.random.PRNGKey(1))
+        assert int(g.n_valid) == 400
+        tids, _ = brute.brute_force_knn(x, x[:50], 1, "l2", use_pallas=False)
+        res = search_lib.search(g, x, x[:50], jax.random.PRNGKey(2), cfg.search_config())
+        rec = float(brute.recall_at_k(res.ids[:, :1], tids, 1))
+        assert rec > 0.8, (arch, rec)
+
+
+class TestRegistry:
+    def test_all_cells_enumerates_40(self):
+        cells = configs.all_cells(include_knn=False)
+        assert len(cells) == 40  # 10 archs x 4 shapes
+        skipped = [c for c in cells if c[2]]
+        assert len(skipped) == 3  # full-attention long_500k skips
+
+    def test_every_arch_has_full_and_smoke(self):
+        for arch in configs.names():
+            mod = configs.get(arch)
+            assert callable(mod.full_config) and callable(mod.smoke_config)
+            assert mod.SHAPES and isinstance(mod.SKIP, dict)

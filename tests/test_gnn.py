@@ -1,0 +1,126 @@
+"""MACE tests: E(3) equivariance properties, masking, data regimes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import graphs
+from repro.models import mace
+
+
+def _rot(axis: int, th: float) -> jnp.ndarray:
+    c, s = np.cos(th), np.sin(th)
+    m = np.eye(3)
+    i, j = [(1, 2), (0, 2), (0, 1)][axis]
+    m[i, i] = c; m[i, j] = -s; m[j, i] = s; m[j, j] = c
+    return jnp.asarray(m, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def mol():
+    key = jax.random.PRNGKey(0)
+    cfg = mace.MACEConfig(n_layers=2, d_hidden=16, n_rbf=4, n_species=4, readout_hidden=8)
+    params = mace.init_params(key, cfg)
+    pos, spec = graphs.molecules(key, 1, 12)
+    snd, rcv = graphs.knn_edges_from_positions(pos[0], 4)
+    return cfg, params, pos[0], spec[0], snd, rcv
+
+
+class TestEquivariance:
+    @pytest.mark.parametrize("axis", [0, 1, 2])
+    def test_energy_rotation_invariant(self, mol, axis):
+        cfg, p, pos, spec, snd, rcv = mol
+        R = _rot(axis, 0.83)
+        e1 = mace.energy(p, pos, spec, snd, rcv, cfg)
+        e2 = mace.energy(p, pos @ R.T, spec, snd, rcv, cfg)
+        np.testing.assert_allclose(float(e1), float(e2), rtol=1e-4)
+
+    def test_energy_translation_invariant(self, mol):
+        cfg, p, pos, spec, snd, rcv = mol
+        e1 = mace.energy(p, pos, spec, snd, rcv, cfg)
+        e2 = mace.energy(p, pos + jnp.asarray([1.3, -2.0, 0.4]), spec, snd, rcv, cfg)
+        np.testing.assert_allclose(float(e1), float(e2), rtol=1e-4)
+
+    def test_forces_rotation_equivariant(self, mol):
+        cfg, p, pos, spec, snd, rcv = mol
+        R = _rot(1, 1.1)
+        f1 = mace.forces(p, pos, spec, snd, rcv, cfg)
+        f2 = mace.forces(p, pos @ R.T, spec, snd, rcv, cfg)
+        np.testing.assert_allclose(np.asarray(f2), np.asarray(f1 @ R.T), rtol=1e-3, atol=1e-5)
+
+    def test_energy_not_trivially_constant(self, mol):
+        cfg, p, pos, spec, snd, rcv = mol
+        e1 = mace.energy(p, pos, spec, snd, rcv, cfg)
+        e2 = mace.energy(p, pos * 1.1, spec, snd, rcv, cfg)  # dilation ≠ isometry
+        assert abs(float(e1) - float(e2)) > 1e-6
+
+
+class TestMasking:
+    def test_padded_edges_are_inert(self, mol):
+        cfg, p, pos, spec, snd, rcv = mol
+        e_base = mace.energy(p, pos, spec, snd, rcv, cfg)
+        # append garbage edges under a False mask
+        snd_p = jnp.concatenate([snd, jnp.zeros((8,), jnp.int32)])
+        rcv_p = jnp.concatenate([rcv, jnp.ones((8,), jnp.int32)])
+        mask = jnp.concatenate([jnp.ones_like(snd, bool), jnp.zeros((8,), bool)])
+        e_pad = mace.energy(p, pos, spec, snd_p, rcv_p, cfg, edge_mask=mask)
+        np.testing.assert_allclose(float(e_base), float(e_pad), rtol=1e-5)
+
+    def test_node_mask_zeroes_readout(self):
+        cfg = mace.MACEConfig(n_layers=1, d_hidden=8, n_rbf=4, n_species=2,
+                              d_node_feat=6, n_classes=3, readout_hidden=8)
+        p = mace.init_params(jax.random.PRNGKey(0), cfg)
+        g = graphs.random_graph(jax.random.PRNGKey(1), 20, 60, 6, n_classes=3)
+        mask = jnp.arange(20) < 10
+        out = mace.forward(
+            p, jnp.zeros((20, 3)), jnp.zeros((20,), jnp.int32),
+            g.senders, g.receivers, cfg, node_feat=g.features, node_mask=mask,
+        )
+        np.testing.assert_allclose(np.asarray(out[10:]), 0.0, atol=1e-7)
+
+
+class TestRegimes:
+    def test_node_classification_trains(self):
+        cfg = mace.MACEConfig(n_layers=2, d_hidden=16, n_rbf=4, n_species=1,
+                              d_node_feat=16, n_classes=4, readout_hidden=8)
+        params = mace.init_params(jax.random.PRNGKey(0), cfg)
+        g = graphs.random_graph(jax.random.PRNGKey(1), 80, 400, 16, n_classes=4)
+        batch = dict(
+            positions=jnp.zeros((80, 3)), species=jnp.zeros((80,), jnp.int32),
+            senders=g.senders, receivers=g.receivers, node_feat=g.features,
+            labels=g.labels,
+        )
+        from repro.train import optimizer as opt_lib, train_loop
+        ocfg = opt_lib.OptConfig(name="adamw", lr=3e-3)
+        opt = opt_lib.init_opt_state(params, ocfg)
+        step = jax.jit(train_loop.make_train_step(
+            lambda p, b: mace.node_class_loss(p, b, cfg), ocfg))
+        losses = []
+        for _ in range(10):
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+
+    def test_sampler_shapes_and_membership(self):
+        g = graphs.random_graph(jax.random.PRNGKey(0), 200, 2000, 8)
+        seeds = jnp.arange(16, dtype=jnp.int32)
+        fronts = graphs.khop_sample(jax.random.PRNGKey(1), g.indptr, g.indices, seeds, (5, 3))
+        assert fronts[1].shape == (16, 5) and fronts[2].shape == (16, 5, 3)
+        # sampled neighbors really are neighbors (or self for isolated nodes)
+        ind = np.asarray(g.indices)
+        ptr = np.asarray(g.indptr)
+        f1 = np.asarray(fronts[1])
+        for i, s in enumerate(np.asarray(seeds)):
+            nbrs = set(ind[ptr[s]:ptr[s + 1]].tolist()) | {int(s)}
+            assert set(f1[i].tolist()) <= nbrs
+
+    def test_molecule_batch_loss(self):
+        cfg = mace.MACEConfig(n_layers=1, d_hidden=8, n_rbf=4, n_species=4, readout_hidden=8)
+        p = mace.init_params(jax.random.PRNGKey(0), cfg)
+        pos, spec = graphs.molecules(jax.random.PRNGKey(1), 4, 10)
+        snds, rcvs = jax.vmap(lambda x: graphs.knn_edges_from_positions(x, 3))(pos)
+        batch = dict(positions=pos, species=spec, senders=snds, receivers=rcvs,
+                     energy=jnp.zeros((4,)))
+        loss, m = mace.energy_loss(p, batch, cfg)
+        assert jnp.isfinite(loss) and jnp.isfinite(m["rmse"])

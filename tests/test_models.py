@@ -1,0 +1,154 @@
+"""LM model-zoo tests: attention equivalences, MoE dispatch, decode parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention, moe as moe_lib, transformer as tfm
+
+
+def _cfg(**kw):
+    base = dict(
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+        remat=False, q_chunk=16, kv_chunk=16, compute_dtype="float32",
+    )
+    base.update(kw)
+    return tfm.TransformerConfig(**base)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("window", [tfm.FULL_WINDOW, 8])
+    def test_tiled_equals_chunked(self, window):
+        key = jax.random.PRNGKey(0)
+        b, s, h, kv, dh = 2, 48, 4, 2, 8
+        q = jax.random.normal(key, (b, s, h, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, dh))
+        o1 = attention.chunked_causal_attention(q, k, v, window, q_chunk=16, kv_chunk=16)
+        o2 = attention.tiled_causal_attention(q, k, v, window, q_chunk=16, kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-5, atol=2e-5)
+
+    def test_chunked_equals_reference_softmax(self):
+        key = jax.random.PRNGKey(1)
+        b, s, h, dh = 1, 32, 2, 8
+        q = jax.random.normal(key, (b, s, h, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, dh))
+        o = attention.chunked_causal_attention(q, k, v, tfm.FULL_WINDOW, q_chunk=8, kv_chunk=8)
+        # reference full-softmax causal
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+    def test_window_masks_past(self):
+        key = jax.random.PRNGKey(2)
+        b, s, h, dh = 1, 32, 2, 8
+        q = jax.random.normal(key, (b, s, h, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, dh))
+        o_full = attention.chunked_causal_attention(q, k, v, tfm.FULL_WINDOW, q_chunk=8, kv_chunk=8)
+        o_win = attention.chunked_causal_attention(q, k, v, 4, q_chunk=8, kv_chunk=8)
+        # early positions (< window) agree; late differ
+        np.testing.assert_allclose(np.asarray(o_full[:, :4]), np.asarray(o_win[:, :4]), rtol=1e-5, atol=1e-5)
+        assert not np.allclose(np.asarray(o_full[:, -1]), np.asarray(o_win[:, -1]))
+
+
+class TestTransformer:
+    @pytest.mark.parametrize("moe", [None, moe_lib.MoEConfig(n_experts=4, top_k=2)])
+    def test_forward_and_unrolled_agree(self, moe):
+        cfg = _cfg(moe=moe, moe_d_ff=64)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+        lo1, _ = tfm.forward(params, tokens, cfg)
+        import dataclasses
+        lo2, _ = tfm.forward(params, tokens, dataclasses.replace(cfg, unrolled=True))
+        np.testing.assert_allclose(np.asarray(lo1), np.asarray(lo2), rtol=2e-4, atol=2e-4)
+
+    def test_loss_decreases(self):
+        cfg = _cfg()
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        from repro.train import optimizer as opt_lib, train_loop
+        ocfg = opt_lib.OptConfig(name="adamw", lr=1e-2)
+        opt = opt_lib.init_opt_state(params, ocfg)
+        step = jax.jit(train_loop.make_train_step(
+            lambda p, b: tfm.loss_fn(p, b["tokens"], cfg), ocfg))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+        losses = []
+        for _ in range(8):
+            params, opt, m = step(params, opt, {"tokens": tokens})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_prefill_decode_matches_forward(self):
+        """prefill(S) + decode(1 step) == forward(S+1) at the last logit."""
+        cfg = _cfg(local_global=(1, 1), local_window=8)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 17), 0, cfg.vocab)
+        logits_pre, cache = tfm.prefill(params, toks[:, :16], cfg)
+        # pad cache to allow one more token
+        cache = {
+            "k": jnp.pad(cache["k"], ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0))),
+            "v": jnp.pad(cache["v"], ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0))),
+            "len": cache["len"],
+        }
+        logits_dec, _ = tfm.decode_step(params, cache, toks[:, 16], cfg)
+        logits_full, _ = tfm.forward(params, toks, cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec), np.asarray(logits_full[:, -1]), rtol=2e-3, atol=2e-3
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits_pre), np.asarray(logits_full[:, 15]), rtol=2e-3, atol=2e-3
+        )
+
+    def test_split_cache_decode_matches_full(self):
+        """Ring-buffer windowed cache == dense cache, bit-for-bit semantics,
+        including after the ring wraps (len > window)."""
+        cfg = _cfg(local_global=(2, 1), local_window=6)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 20), 0, cfg.vocab)
+        full = tfm.init_cache(cfg, 2, 24, dtype=jnp.float32)
+        split = tfm.init_split_cache(cfg, 2, 24, dtype=jnp.float32)
+        assert split["k_loc"].shape[2] == 6  # ring = window, not max_seq
+        for t in range(20):  # decode past the wrap point (> 6)
+            lf, full = tfm.decode_step(params, full, toks[:, t], cfg)
+            ls, split = tfm.decode_step_split(params, split, toks[:, t], cfg)
+            np.testing.assert_allclose(
+                np.asarray(lf), np.asarray(ls), rtol=2e-4, atol=2e-4,
+                err_msg=f"step {t}")
+
+    def test_qkv_bias_and_softcap_and_untied(self):
+        cfg = _cfg(qkv_bias=True, logit_softcap=10.0, tie_embeddings=False)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        assert "bq" in params and "head" in params
+        logits, _ = tfm.forward(params, jnp.zeros((1, 8), jnp.int32), cfg)
+        assert float(jnp.max(jnp.abs(logits))) <= 10.0
+
+
+class TestMoE:
+    def test_grouped_dispatch_close_to_global(self):
+        """Per-group dispatch == global dispatch when capacity is ample."""
+        cfg = moe_lib.MoEConfig(n_experts=4, top_k=2, capacity_factor=4.0)
+        key = jax.random.PRNGKey(0)
+        params = moe_lib.init_moe_params(key, 16, 32, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (64, 16))
+        o1, _ = moe_lib.apply_moe(params, x, cfg)
+        o2, _ = moe_lib.apply_moe(params, x, cfg, groups=4)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-5)
+
+    def test_capacity_drops_counted(self):
+        cfg = moe_lib.MoEConfig(n_experts=4, top_k=2, capacity_factor=0.25)
+        key = jax.random.PRNGKey(0)
+        params = moe_lib.init_moe_params(key, 16, 32, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (64, 16))
+        _, aux = moe_lib.apply_moe(params, x, cfg)
+        assert float(aux["moe_drop_rate"]) > 0.0
+
+    def test_identical_tokens_identical_outputs(self):
+        cfg = moe_lib.MoEConfig(n_experts=4, top_k=1, capacity_factor=8.0)
+        params = moe_lib.init_moe_params(jax.random.PRNGKey(0), 16, 32, cfg, jnp.float32)
+        x = jnp.tile(jax.random.normal(jax.random.PRNGKey(1), (1, 16)), (8, 1))
+        o, _ = moe_lib.apply_moe(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(o - o[0]), 0.0, atol=1e-5)

@@ -1,0 +1,155 @@
+"""RecSys tests: embedding-bag oracle, CIN vs naive reference, the four
+models' training signal, retrieval-scorer consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import recsys_data
+from repro.models import embedding, recsys
+from repro.train import optimizer as opt_lib, train_loop
+
+
+class TestEmbeddingBag:
+    def test_sum_mean_vs_manual(self):
+        tbl = jax.random.normal(jax.random.PRNGKey(0), (40, 6))
+        ids = jnp.asarray([[1, 2, 3], [5, -1, -1], [-1, -1, -1]])
+        got_sum = embedding.embedding_bag(tbl, ids, mode="sum")
+        got_mean = embedding.embedding_bag(tbl, ids, mode="mean")
+        np.testing.assert_allclose(np.asarray(got_sum[0]), np.asarray(tbl[1] + tbl[2] + tbl[3]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_mean[1]), np.asarray(tbl[5]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_sum[2]), 0.0, atol=1e-7)
+
+    def test_weights(self):
+        tbl = jax.random.normal(jax.random.PRNGKey(0), (10, 4))
+        ids = jnp.asarray([[0, 1]])
+        w = jnp.asarray([[2.0, 0.5]])
+        got = embedding.embedding_bag(tbl, ids, weights=w)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(2 * tbl[0] + 0.5 * tbl[1]), rtol=1e-6)
+
+    def test_hash_rows_in_range(self):
+        cfg = embedding.TableConfig(rows=10_000, dim=4, hash_rows=64)
+        tbl = embedding.init_table(jax.random.PRNGKey(0), cfg)
+        assert tbl.shape == (64, 4)
+        out = embedding.lookup(tbl, jnp.asarray([0, 9_999, 1234]), cfg)
+        assert out.shape == (3, 4) and bool(jnp.all(jnp.isfinite(out)))
+
+
+class TestCIN:
+    def test_matches_naive(self):
+        """One CIN layer vs the explicit outer-product formula."""
+        B, F, D, H = 3, 4, 5, 6
+        key = jax.random.PRNGKey(0)
+        emb = jax.random.normal(key, (B, F, D))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (H, F, F))
+        got = recsys.cin(emb, {"w0": w}, (H,))
+        # naive: x1[b,h,d] = sum_ij w[h,i,j] emb[b,i,d] emb[b,j,d]; pool over d
+        naive = np.zeros((B, H))
+        e = np.asarray(emb)
+        wn = np.asarray(w)
+        for b in range(B):
+            for h in range(H):
+                acc = 0.0
+                for i in range(F):
+                    for j in range(F):
+                        acc += wn[h, i, j] * np.sum(e[b, i] * e[b, j])
+                naive[b, h] = acc
+        np.testing.assert_allclose(np.asarray(got), naive, rtol=1e-4)
+
+
+class TestFM:
+    def test_matches_naive(self):
+        B, F, D = 4, 5, 3
+        emb = jax.random.normal(jax.random.PRNGKey(0), (B, F, D))
+        got = np.asarray(recsys.fm_second_order(emb))
+        e = np.asarray(emb)
+        naive = np.zeros(B)
+        for b in range(B):
+            for i in range(F):
+                for j in range(i + 1, F):
+                    naive[b] += float(np.dot(e[b, i], e[b, j]))
+        np.testing.assert_allclose(got, naive, rtol=1e-4)
+
+
+def _train(cfg, batch_fn, steps=12, lr=1e-2):
+    params = recsys.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt_lib.OptConfig(name="adamw", lr=lr)
+    opt = opt_lib.init_opt_state(params, ocfg)
+    step = jax.jit(train_loop.make_train_step(
+        lambda p, b: recsys.loss_fn(p, b, cfg), ocfg))
+    losses = []
+    for i in range(steps):
+        params, opt, m = step(params, opt, batch_fn(i))
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+@pytest.mark.parametrize("name", ["deepfm", "xdeepfm", "bst", "mind"])
+def test_models_learn(name):
+    if name in ("deepfm", "xdeepfm"):
+        cfg = recsys.RecsysConfig(
+            name=name, n_sparse=6, vocab_per_field=200, embed_dim=8,
+            mlp=(32, 16), cin_layers=(8, 8) if name == "xdeepfm" else (),
+        )
+        bf = lambda i: recsys_data.ctr_batch(jax.random.PRNGKey(i), 256, 6, 200)
+    else:
+        cfg = recsys.RecsysConfig(
+            name=name, vocab_per_field=300, embed_dim=16, seq_len=8,
+            n_heads=4, n_interests=2, capsule_iters=2, mlp=(32,),
+        )
+        bf = lambda i: recsys_data.behavior_batch(jax.random.PRNGKey(i), 256, 8, 300)
+    _, losses = _train(cfg, bf)
+    assert losses[-1] < losses[0], (name, losses)
+    assert all(np.isfinite(losses)), (name, losses)
+
+
+class TestRetrieval:
+    def test_ctr_retrieval_matches_pointwise(self):
+        """ctr_retrieval_scores == ctr_logits on the expanded batch."""
+        cfg = recsys.RecsysConfig(name="deepfm", n_sparse=5, vocab_per_field=100,
+                                  embed_dim=8, mlp=(16,))
+        p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+        key = jax.random.PRNGKey(1)
+        user = recsys_data.ctr_batch(key, 1, 5, 100)
+        cand = jax.random.randint(jax.random.fold_in(key, 2), (32,), 0, 100)
+        got = recsys.ctr_retrieval_scores(
+            p, {"dense": user["dense"], "sparse": user["sparse"], "cand": cand}, cfg)
+        # expand: batch of 32 with item field replaced
+        sparse = jnp.tile(user["sparse"], (32, 1)).at[:, 0].set(cand)
+        dense = jnp.tile(user["dense"], (32, 1))
+        want = recsys.ctr_logits(p, {"dense": dense, "sparse": sparse}, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_bst_retrieval_matches_pointwise(self):
+        cfg = recsys.RecsysConfig(name="bst", vocab_per_field=100, embed_dim=16,
+                                  seq_len=6, n_heads=4, mlp=(16,))
+        p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+        hist = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 100)
+        cand = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 100)
+        got = recsys.bst_retrieval_scores(p, {"hist": hist, "cand": cand}, cfg)
+        want = recsys.bst_logits(
+            p, {"hist": jnp.tile(hist, (16, 1)), "target": cand}, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_mind_retrieval_shapes(self):
+        cfg = recsys.RecsysConfig(name="mind", vocab_per_field=100, embed_dim=8,
+                                  n_interests=3, capsule_iters=2, mlp=(16,), seq_len=6)
+        p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+        hist = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 100)
+        cands = jax.random.normal(jax.random.PRNGKey(2), (500, 8))
+        s = recsys.retrieval_scores(p, hist, cands, cfg)
+        assert s.shape == (500,) and bool(jnp.all(jnp.isfinite(s)))
+
+    def test_capsule_routing_mask(self):
+        """Padded history items must not contribute to interests."""
+        cfg = recsys.RecsysConfig(name="mind", vocab_per_field=100, embed_dim=8,
+                                  n_interests=2, capsule_iters=2, mlp=(16,), seq_len=6)
+        p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+        h1 = jnp.asarray([[3, 7, 11, -1, -1, -1]])
+        h2 = jnp.asarray([[3, 7, 11, 50, 60, 70]])
+        i1 = recsys.mind_interests(p, h1, cfg)
+        i2 = recsys.mind_interests(p, h2, cfg)
+        i1b = recsys.mind_interests(p, jnp.asarray([[3, 7, 11, -1, -1, -1]]), cfg)
+        np.testing.assert_allclose(np.asarray(i1), np.asarray(i1b), rtol=1e-6)
+        assert not np.allclose(np.asarray(i1), np.asarray(i2))

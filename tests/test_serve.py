@@ -1,0 +1,63 @@
+"""Retrieval serving tests: LGD index vs brute, catalog churn (§IV-C)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import retrieval
+
+
+@pytest.fixture(scope="module")
+def bank():
+    key = jax.random.PRNGKey(0)
+    items = jax.random.normal(key, (2000, 16))
+    items = items / jnp.linalg.norm(items, axis=1, keepdims=True)
+    return items
+
+
+@pytest.fixture(scope="module")
+def index(bank):
+    return retrieval.build_index(
+        bank, k=10, metric="ip", wave=256, capacity=2300,
+        key=jax.random.PRNGKey(1),
+    )
+
+
+class TestRetrieve:
+    def test_recall_vs_brute(self, index, bank):
+        q = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+        got_ids, got_scores = retrieval.retrieve(index, q, 10, beam=40)
+        want_ids, _ = retrieval.retrieve_brute(index, q, 10)
+        inter = len(set(np.asarray(got_ids).tolist()) & set(np.asarray(want_ids).tolist()))
+        assert inter / 10 >= 0.7, (got_ids, want_ids)
+        # scores descending (inner product: higher = better)
+        s = np.asarray(got_scores)
+        assert np.all(np.diff(s) <= 1e-5)
+
+    def test_no_duplicates(self, index):
+        q = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+        ids, _ = retrieval.retrieve(index, q, 20, beam=40)
+        real = [int(i) for i in np.asarray(ids) if i >= 0]
+        assert len(real) == len(set(real))
+
+
+class TestCatalogChurn:
+    def test_add_items_found(self, index):
+        new = jax.random.normal(jax.random.PRNGKey(5), (64, 16))
+        new = new / jnp.linalg.norm(new, axis=1, keepdims=True)
+        idx2 = retrieval.add_items(index, new, key=jax.random.PRNGKey(6))
+        assert idx2.n_items == index.n_items + 64
+        # querying exactly a new item should retrieve it
+        ids, _ = retrieval.retrieve(idx2, new[:4], 5, beam=40)
+        got = set(np.asarray(ids).tolist())
+        expect = set(range(index.n_items, index.n_items + 4))
+        assert got & expect, (got, expect)
+
+    def test_remove_items_not_returned(self, index, bank):
+        victims = jnp.arange(0, 100, dtype=jnp.int32)
+        idx2 = retrieval.remove_items(index, victims)
+        q = jax.random.normal(jax.random.PRNGKey(7), (8, 16))
+        ids, _ = retrieval.retrieve(idx2, q, 10, beam=40)
+        real = [int(i) for i in np.asarray(ids) if i >= 0]
+        assert not (set(real) & set(range(100))), real
