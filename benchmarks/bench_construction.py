@@ -1,27 +1,69 @@
 """Paper Fig. 6/7 + Table II: graph quality vs dimension at matched scanning
-rates, OLG / LGD / NN-Descent, l1 and l2.
+rates, OLG / LGD / NN-Descent, l1 and l2 — plus wave throughput of the fused
+jit pipeline.
 
 Synthetic uniform data (intrinsic dim == d), the paper's Rand100K protocol at
 CPU-scale n (default 10k; --n scales up).
+
+The construction timing runs on the fused ``construct.wave_step`` loop: the
+whole build executes as one compiled call per wave with a device-side stats
+carry, so the host syncs at most once per ``wave_callback`` stride (default:
+no callback, i.e. a single sync when the final stats are read).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import construct, nndescent
+from repro.core import brute, construct, nndescent
 
 DIMS = (2, 5, 10, 20)
+
+
+def timed_build(x, cfg, seed: int, callback_stride: int = 0):
+    """Build on the fused wave pipeline; returns (graph, stats, seconds,
+    waves/sec).  ``callback_stride > 0`` installs a progress callback at that
+    stride — the only per-stride host sync; 0 syncs once, at the end."""
+    n = x.shape[0]
+    kwargs = {}
+    if callback_stride > 0:
+        kwargs = {
+            "wave_callback": lambda i, g: jax.block_until_ready(g.n_valid),
+            "callback_stride": callback_stride,
+        }
+    # warm the jit caches at the REAL shapes (jit keys on shapes, so a small
+    # prefix would not hit): one seed graph + one wave_step over the full x,
+    # then the timed run measures steady-state wave throughput
+    n_seed = min(cfg.n_seed_init, n)
+    g0 = brute.exact_seed_graph(
+        x, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap,
+        use_pallas=cfg.use_pallas,
+    )
+    jax.block_until_ready(
+        construct.wave_step(
+            g0, x, jnp.asarray(n_seed, jnp.int32), jax.random.PRNGKey(seed),
+            construct.zero_stats(), cfg,
+        )[0]
+    )
+    t0 = time.perf_counter()
+    g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed), **kwargs)
+    jax.block_until_ready(g)
+    dt = time.perf_counter() - t0
+    n_waves = int(stats.n_waves)
+    return g, stats, dt, (n_waves / dt if dt > 0 else float("inf"))
 
 
 def run(n: int = 10_000, dims=DIMS, metrics=("l2", "l1"), k: int = 10, seed: int = 0):
     tbl = common.Table(
         "construction: recall vs dim at matched scanning rate (Fig 6/7, Table II)",
-        ["metric", "d", "algo", "recall@1", "recall@10", "scan_rate"],
+        ["metric", "d", "algo", "recall@1", "recall@10", "scan_rate",
+         "build_s", "waves_per_s", "pts_per_s"],
     )
     for metric in metrics:
         for d in dims:
@@ -35,19 +77,30 @@ def run(n: int = 10_000, dims=DIMS, metrics=("l2", "l1"), k: int = 10, seed: int
             )
             for name, lgd in (("OLG", False), ("LGD", True)):
                 cfg = construct.BuildConfig(**{**bcfg.__dict__, "lgd": lgd})
-                g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
+                g, stats, dt, wps = timed_build(x, cfg, seed)
                 c = construct.scanning_rate(stats, n)
                 r1 = common.graph_recall(g, true_ids, 1)
                 r10 = common.graph_recall(g, true_ids, min(10, kk))
-                tbl.add(metric, d, name, r1, r10, c)
+                tbl.add(metric, d, name, r1, r10, c, dt, wps, wps * cfg.wave)
 
             ncfg = nndescent.NNDescentConfig(
                 k=kk, metric=metric, max_iters=10, use_pallas=False, node_chunk=1024
             )
+            # one-iteration warm-up at the same shapes compiles the join round
+            jax.block_until_ready(
+                nndescent.build(
+                    x, dataclasses.replace(ncfg, max_iters=1),
+                    jax.random.PRNGKey(seed),
+                )[0]
+            )
+            t0 = time.perf_counter()
             g, st = nndescent.build(x, ncfg, jax.random.PRNGKey(seed))
+            jax.block_until_ready(g)
+            dt = time.perf_counter() - t0
             r1 = common.graph_recall(g, true_ids, 1)
             r10 = common.graph_recall(g, true_ids, min(10, kk))
-            tbl.add(metric, d, "NN-Desc", r1, r10, st["scanning_rate"])
+            tbl.add(metric, d, "NN-Desc", r1, r10, st["scanning_rate"],
+                    dt, float("nan"), n / dt if dt > 0 else float("inf"))
     tbl.show()
     return tbl
 

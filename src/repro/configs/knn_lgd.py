@@ -22,7 +22,10 @@ def full_config() -> BuildConfig:
 
 
 def smoke_config() -> BuildConfig:
+    # k close to the smoke set's dim (d=12, the paper's guidance) and enough
+    # search budget for EHC to converge under the LGD expansion filter —
+    # k=5/beam=12 leaves the occlusion-pruned graph too sparse to navigate.
     return BuildConfig(
-        k=5, metric="l2", wave=64, lgd=True, beam=12, n_seeds=4,
-        n_seed_init=32, hash_slots=256, max_iters=12,
+        k=8, metric="l2", wave=64, lgd=True, beam=16, n_seeds=4,
+        n_seed_init=32, hash_slots=512, max_iters=24,
     )

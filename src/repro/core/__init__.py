@@ -9,9 +9,20 @@ Public API:
   * ``nndescent``     — NN-Descent baseline + §IV-D refinement
   * ``dynamic``       — online insert / remove (§IV-C)
   * ``distributed``   — shard_map sharded build & scatter-gather search
+  * ``segments``      — segmented-scan / group-by primitives (shared core)
 """
 
-from repro.core import brute, construct, dynamic, graph, merge, metrics, nndescent, search
+from repro.core import (
+    brute,
+    construct,
+    dynamic,
+    graph,
+    merge,
+    metrics,
+    nndescent,
+    search,
+    segments,
+)
 
 from repro.core.construct import BuildConfig, build
 from repro.core.graph import KNNGraph, empty_graph
@@ -27,6 +38,7 @@ __all__ = [
     "metrics",
     "nndescent",
     "search",
+    "segments",
     "BuildConfig",
     "build",
     "KNNGraph",

@@ -35,7 +35,7 @@ from repro.core import brute, merge
 from repro.core import search as search_lib
 from repro.core.graph import KNNGraph
 from repro.core.search import SearchConfig
-from repro.kernels import ops
+from repro.kernels import compat, ops
 
 Array = jax.Array
 
@@ -72,9 +72,27 @@ class BuildConfig:
 
 
 class BuildStats(NamedTuple):
-    n_comps: Array  # () int64-ish float — total distance computations
-    n_waves: Array
-    n_inserted_edges: Array
+    """Device-side build counters — the carry of the fused wave loop.
+
+    All leaves are scalars living on device; the build loop folds each wave's
+    contribution in *inside* the jitted step, so reading any field (e.g. via
+    ``float``) is the only host sync and happens once, after the loop.
+    ``n_comps``/``n_inserted_edges`` accumulate in float32 (counts are
+    monitoring stats; exact integers up to 2^24 per increment).
+    """
+
+    n_comps: Array  # () float32 — total distance computations
+    n_waves: Array  # () int32
+    n_inserted_edges: Array  # () float32
+
+
+def zero_stats(n_comps: float = 0.0) -> BuildStats:
+    """Fresh stats carry (optionally pre-charged with seed-graph comps)."""
+    return BuildStats(
+        n_comps=jnp.asarray(n_comps, jnp.float32),
+        n_waves=jnp.zeros((), jnp.int32),
+        n_inserted_edges=jnp.zeros((), jnp.float32),
+    )
 
 
 def scanning_rate(stats: BuildStats, n: int) -> float:
@@ -227,8 +245,57 @@ def commit_wave(
 
 
 # ---------------------------------------------------------------------------
-# Driver
+# Fused wave step + driver
 # ---------------------------------------------------------------------------
+
+
+def wave_core(
+    g: KNNGraph,
+    x: Array,
+    pos: Array,  # () int32 — wave rows are [pos, pos + W)
+    key: Array,
+    stats: BuildStats,
+    cfg: BuildConfig,
+    *,
+    n_real: Optional[Array] = None,
+) -> tuple[KNNGraph, BuildStats]:
+    """Traceable fused search+commit: one wave of W insertions, no host sync.
+
+    This is the single implementation behind the jitted ``wave_step`` (local
+    builds) and the shard-local step of ``core.distributed`` — both paths run
+    the identical wave semantics.  ``n_real`` defaults to the in-range tail
+    ``min(W, n - pos)``; distributed callers pass their shard-local count.
+    """
+    W = cfg.wave
+    n = x.shape[0]
+    pos = pos.astype(jnp.int32)
+    if n_real is None:
+        n_real = jnp.minimum(W, n - pos).astype(jnp.int32)
+    q_ids = jnp.minimum(pos + jnp.arange(W, dtype=jnp.int32), n - 1)
+    q = x[q_ids]
+    res = search_lib.search(g, x, q, key, cfg.search_config())
+    res = res._replace(
+        n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
+    )
+    g2, edges = commit_wave(g, x, pos, n_real, res, cfg)
+    comps = jnp.sum(res.n_comps).astype(jnp.float32)
+    if cfg.intra_wave and W > 1:
+        nr = n_real.astype(jnp.float32)
+        comps = comps + nr * (nr - 1.0) / 2.0
+    stats2 = BuildStats(
+        n_comps=stats.n_comps + comps,
+        n_waves=stats.n_waves + 1,
+        n_inserted_edges=stats.n_inserted_edges + edges.astype(jnp.float32),
+    )
+    return g2, stats2
+
+
+# The production wave step: one compiled call per wave with the graph and the
+# stats carry donated (TPU/GPU update the ~O(cap*k) graph buffers in place;
+# CPU skips donation — see compat.donating_jit).
+wave_step = compat.donating_jit(
+    wave_core, static_argnames=("cfg",), donate_argnums=(0, 4)
+)
 
 
 def build(
@@ -237,28 +304,45 @@ def build(
     key: Optional[Array] = None,
     *,
     wave_callback: Optional[Callable[[int, KNNGraph], None]] = None,
+    callback_stride: int = 1,
     initial: Optional[tuple[KNNGraph, int]] = None,
 ) -> tuple[KNNGraph, BuildStats]:
     """Build the k-NN graph over x with OLG (cfg.lgd=False) or LGD (True).
+
+    The loop is host-round-trip free: each iteration is one fused jitted
+    ``wave_step`` (search + commit + stats fold) and the Python side only
+    advances an integer cursor.  The only host syncs are the optional
+    ``wave_callback`` (every ``callback_stride`` waves) and whatever the
+    caller reads from the returned device-side ``BuildStats``.
 
     Args:
       x: (n, d) dataset.
       cfg: build configuration.
       key: PRNG key (entry-point sampling).
-      wave_callback: called as f(wave_index, graph) after each commit —
-        checkpoint / progress hook (fault tolerance: construction resumes
-        from any wave boundary, see train.checkpoint).
+      wave_callback: called as f(wave_index, graph) every ``callback_stride``
+        committed waves — checkpoint / progress hook (fault tolerance:
+        construction resumes from any wave boundary, see train.checkpoint).
+        Touching the graph inside the callback synchronizes the device.
+        On TPU/GPU the graph's buffers are donated to the NEXT wave step:
+        read/serialize it inside the callback, but copy it
+        (``jax.device_get`` / ``jnp.copy``) before retaining it.
+      callback_stride: waves between callback invocations (>= 1).
       initial: optional (graph, next_row) to resume from a checkpoint.
 
-    Returns: (graph, stats).
+    Returns: (graph, stats) — stats leaves are device scalars.
     """
     n = x.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
-    scfg = cfg.search_config()
+    if callback_stride < 1:
+        raise ValueError(f"callback_stride must be >= 1, got {callback_stride}")
 
     if initial is not None:
         g, start = initial
+        if compat.donation_enabled():
+            # wave_step donates its graph argument; copy so the caller's
+            # graph (e.g. dynamic.insert's input index) survives the build
+            g = jax.tree.map(jnp.copy, g)
     else:
         n_seed = min(cfg.n_seed_init, n)
         g = brute.exact_seed_graph(
@@ -268,36 +352,17 @@ def build(
         start = n_seed
     # seed-graph comparisons count toward the scanning rate
     n_seed0 = int(start)
-    total_comps = n_seed0 * (n_seed0 - 1) / 2.0 if initial is None else 0.0
-    total_edges = 0.0
+    stats = zero_stats(n_seed0 * (n_seed0 - 1) / 2.0 if initial is None else 0.0)
     W = cfg.wave
-    n_waves = 0
 
-    pos = start
+    pos = int(start)
+    n_waves = 0
     while pos < n:
-        n_real = min(W, n - pos)
-        q_ids = jnp.minimum(pos + jnp.arange(W), n - 1)
-        q = x[q_ids]
         key, sk = jax.random.split(key)
-        res = search_lib.search(g, x, q, sk, scfg)
-        res = res._replace(
-            n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
-        )
-        g, edges = commit_wave(
-            g, x, jnp.asarray(pos, jnp.int32), jnp.asarray(n_real, jnp.int32), res, cfg
-        )
-        total_comps += float(jnp.sum(res.n_comps))
-        if cfg.intra_wave and W > 1:
-            total_comps += n_real * (n_real - 1) / 2.0
-        total_edges += float(edges)
-        pos += n_real
+        g, stats = wave_step(g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg)
+        pos += min(W, n - pos)
         n_waves += 1
-        if wave_callback is not None:
+        if wave_callback is not None and n_waves % callback_stride == 0:
             wave_callback(n_waves, g)
 
-    stats = BuildStats(
-        n_comps=jnp.asarray(total_comps),
-        n_waves=jnp.asarray(n_waves),
-        n_inserted_edges=jnp.asarray(total_edges),
-    )
     return g, stats

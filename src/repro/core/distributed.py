@@ -20,23 +20,33 @@ merge boundary, so callers see one logical id space.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import construct as construct_lib
 from repro.core import search as search_lib
-from repro.core.graph import KNNGraph, empty_graph
-from repro.kernels import ops
+from repro.core.graph import KNNGraph
+from repro.kernels import compat, ops
 
 Array = jax.Array
 
 
 def _flat_axes(mesh: Mesh) -> tuple:
     return tuple(mesh.axis_names)
+
+
+def _shard_index(ax: tuple, mesh: Mesh) -> Array:
+    """Linearized shard index over ``ax`` (row-major, shapes from the mesh —
+    static, so no dependence on the newer ``jax.lax.axis_size``)."""
+    idx = jnp.int32(0)
+    stride = 1
+    for a in reversed(ax):
+        idx = idx + jax.lax.axis_index(a) * stride
+        stride = stride * mesh.shape[a]
+    return idx
 
 
 def graph_pspec(axes) -> KNNGraph:
@@ -63,20 +73,14 @@ def wave_step(
 ) -> tuple[KNNGraph, Array]:
     """One fused search+commit insertion wave (the unit the dry-run lowers).
 
-    The wave's vectors already live at rows [pos, pos+W) of x (append-only
-    data region); returns (updated graph, distance computations spent).
+    Thin shard-local adapter over ``construct.wave_core`` — the single
+    implementation of wave semantics; returns (updated graph, distance
+    computations spent).
     """
-    W = cfg.wave
-    n = x.shape[0]
-    q_ids = jnp.minimum(pos + jnp.arange(W, dtype=jnp.int32), n - 1)
-    q = x[q_ids]
-    scfg = cfg.search_config()
-    res = search_lib.search(g, x, q, key, scfg)
-    res = res._replace(
-        n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
+    g2, stats = construct_lib.wave_core(
+        g, x, pos, key, construct_lib.zero_stats(), cfg, n_real=n_real
     )
-    g2, _ = construct_lib.commit_wave(g, x, pos, n_real, res, cfg)
-    return g2, jnp.sum(res.n_comps)
+    return g2, stats.n_comps
 
 
 def make_distributed_build_step(
@@ -93,20 +97,15 @@ def make_distributed_build_step(
 
     def local(g, x, pos, n_real, key):
         # per-shard PRNG: fold in the linearized shard index
-        idx = jnp.int32(0)
-        stride = 1
-        for a in reversed(ax):
-            idx = idx + jax.lax.axis_index(a) * stride
-            stride = stride * jax.lax.axis_size(a)
+        idx = _shard_index(ax, mesh)
         g2, comps = wave_step(g, x, pos, n_real, jax.random.fold_in(key, idx), cfg)
         return g2, jax.lax.psum(comps, ax)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(gspec, P(ax, None), P(), P(), P(None)),
         out_specs=(gspec, P()),
-        check_vma=False,
     )
 
 
@@ -125,11 +124,7 @@ def make_distributed_search(
     gspec = graph_pspec(ax)
 
     def local(g, x, q, key):
-        idx = jnp.int32(0)
-        stride = 1
-        for a in reversed(ax):
-            idx = idx + jax.lax.axis_index(a) * stride
-            stride = stride * jax.lax.axis_size(a)
+        idx = _shard_index(ax, mesh)
         n_local = x.shape[0]
         res = search_lib.search(g, x, q, jax.random.fold_in(key, idx), scfg)
         gids = jnp.where(res.ids >= 0, res.ids + idx * n_local, -1)
@@ -143,12 +138,11 @@ def make_distributed_search(
         d, i = ops.topk_smallest(cat_d, cat_i, scfg.k)
         return i, d
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(gspec, P(ax, None), P(None, None), P(None)),
         out_specs=(P(None, None), P(None, None)),
-        check_vma=False,
     )
 
 
@@ -187,15 +181,10 @@ def init_sharded_state(
         return g, x
 
     def shard_init():
-        idx = jnp.int32(0)
-        stride = 1
-        for a in reversed(ax):
-            idx = idx + jax.lax.axis_index(a) * stride
-            stride = stride * jax.lax.axis_size(a)
+        idx = _shard_index(ax, mesh)
         return init_local(jax.random.fold_in(jax.random.PRNGKey(seed), idx))
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_init, mesh=mesh, in_specs=(), out_specs=(gspec, P(ax, None)),
-        check_vma=False,
     )
     return jax.jit(fn)()

@@ -31,6 +31,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import segments
+
 Array = jax.Array
 
 
@@ -104,19 +106,11 @@ def rebuild_reverse(g: KNNGraph) -> KNNGraph:
     order = jnp.argsort(flat_member, stable=True)
     sm = flat_member[order]
     so = flat_owner[order]
-    # rank within each member segment
-    idx = jnp.arange(sm.shape[0])
-    is_start = jnp.concatenate([jnp.array([True]), sm[1:] != sm[:-1]])
-    seg_start = jnp.maximum.accumulate(jnp.where(is_start, idx, 0))
-    rank = idx - seg_start
-    keep = (sm < cap) & (rank < R)
-    rev_ids = jnp.full((cap + 1, R), -1, jnp.int32)
-    rev_ids = rev_ids.at[jnp.where(keep, sm, cap), jnp.where(keep, rank, 0)].set(
-        jnp.where(keep, so, -1), mode="drop"
+    # group owners by member, keep each member's first R (most recent) owners
+    (rev_ids,), counts = segments.grouped_top_r(sm, [so], [-1], cap, R)
+    return g._replace(
+        rev_ids=rev_ids, rev_ptr=jnp.minimum(counts, R).astype(jnp.int32)
     )
-    rev_ids = rev_ids[:cap]
-    counts = jax.ops.segment_sum(keep.astype(jnp.int32), sm, num_segments=cap + 1)[:cap]
-    return g._replace(rev_ids=rev_ids, rev_ptr=counts.astype(jnp.int32))
 
 
 def graph_invariants_ok(g: KNNGraph) -> dict:

@@ -22,6 +22,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import segments
+
 Array = jax.Array
 
 
@@ -34,16 +36,6 @@ class MergeResult(NamedTuple):
     cand_ids: Array  # (cap, k) int32 — per-row qualified candidates (post rank-filter)
     cand_dist: Array  # (cap, k) float32
     n_inserted: Array  # () int32 — number of slots that changed
-
-
-def _segment_rank(sorted_keys: Array) -> Array:
-    """Rank of each element within its run of equal keys (keys sorted)."""
-    idx = jnp.arange(sorted_keys.shape[0])
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]]
-    )
-    seg_start = jnp.maximum.accumulate(jnp.where(is_start, idx, 0))
-    return (idx - seg_start).astype(jnp.int32)
 
 
 def merge_candidates(
@@ -96,17 +88,9 @@ def merge_candidates(
     sv = vv[order2]
     sq = q[order2]
     sd = d[order2]
-    rank = _segment_rank(sv)
-    keep = (sv < cap) & (rank < k)
-
-    cand_ids = jnp.full((cap + 1, k), -1, jnp.int32)
-    cand_dist = jnp.full((cap + 1, k), jnp.inf, jnp.float32)
-    rrow = jnp.where(keep, sv, cap)
-    rcol = jnp.where(keep, rank, 0)
-    cand_ids = cand_ids.at[rrow, rcol].max(jnp.where(keep, sq, -1), mode="drop")
-    cand_dist = cand_dist.at[rrow, rcol].min(jnp.where(keep, sd, jnp.inf), mode="drop")
-    cand_ids = cand_ids[:cap]
-    cand_dist = cand_dist[:cap]
+    (cand_ids, cand_dist), _ = segments.grouped_top_r(
+        sv, [sq, sd], [-1, jnp.inf], cap, k
+    )
 
     # --- row-wise merge: top-k of (old ‖ candidates) ------------------------
     all_ids = jnp.concatenate([nbr_ids, cand_ids], axis=1)  # (cap, 2k)
@@ -155,14 +139,11 @@ def append_reverse(
     order = jnp.argsort(m)
     sm = m[order]
     so = jnp.where(valid, owner, -1)[order]
-    rank = _segment_rank(sm)
+    rank = segments.segment_rank(sm)
     # If more than R appends hit one member in a single wave, keep the last R
     # (FIFO overwrite — matches ring semantics of sequential appends).
-    counts_all = jax.ops.segment_sum(
-        (sm < cap).astype(jnp.int32), sm, num_segments=cap + 1
-    )
-    counts = counts_all[:cap]
-    cnt_e = counts_all[jnp.minimum(sm, cap)]
+    counts = segments.segment_counts(sm, cap)
+    cnt_e = jnp.where(sm < cap, counts[jnp.minimum(sm, cap - 1)], 0)
     # keep only the last R appends per member so ring slots are unique within
     # one batch (deterministic FIFO overwrite)
     ok = (sm < cap) & (rank >= cnt_e - R)

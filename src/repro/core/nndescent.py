@@ -21,7 +21,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import merge
+from repro.core import merge, segments
 from repro.core.graph import KNNGraph, rebuild_reverse
 from repro.kernels import ops
 
@@ -68,18 +68,10 @@ def _reverse_sample(ids: Array, is_new: Array, r: int):
     flat_f = is_new.reshape(-1)
     order = jnp.argsort(flat_m, stable=True)
     sm, so, sf = flat_m[order], flat_o[order], flat_f[order]
-    idx = jnp.arange(sm.shape[0])
-    start = jnp.concatenate([jnp.ones((1,), bool), sm[1:] != sm[:-1]])
-    seg = jnp.maximum.accumulate(jnp.where(start, idx, 0))
-    rank = idx - seg
-    keep = (sm < n) & (rank < r)
-    rev_ids = jnp.full((n + 1, r), -1, jnp.int32)
-    rev_new = jnp.zeros((n + 1, r), bool)
-    rr = jnp.where(keep, sm, n)
-    cc = jnp.where(keep, rank, 0)
-    rev_ids = rev_ids.at[rr, cc].set(jnp.where(keep, so, -1), mode="drop")
-    rev_new = rev_new.at[rr, cc].set(jnp.where(keep, sf, False), mode="drop")
-    return rev_ids[:n], rev_new[:n]
+    (rev_ids, rev_new), _ = segments.grouped_top_r(
+        sm, [so, sf], [-1, False], n, r
+    )
+    return rev_ids, rev_new
 
 
 def _local_join_chunk(x, cand_ids, cand_new, metric, use_pallas):

@@ -1,0 +1,135 @@
+"""Version-portability shim for the Pallas/TPU surface (and adjacent JAX
+API drift).
+
+JAX renames and moves things between minor versions; every breakage the seed
+suffered traced back to a call site touching a moved attribute directly
+(``pltpu.CompilerParams`` vs ``pltpu.TPUCompilerParams``, ``jax.shard_map``
+vs ``jax.experimental.shard_map.shard_map``, ``jax.sharding.AxisType``).
+This module is the single point of truth: kernel and parallelism code imports
+*only* from here, so the next rename is a one-line fix instead of a red
+test suite.
+
+Everything is resolved by feature detection at import time — no version
+string parsing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# ---------------------------------------------------------------------------
+# Pallas TPU surface
+# ---------------------------------------------------------------------------
+
+# Memory spaces / DMA helpers — re-exported so kernel modules never touch
+# pltpu attributes directly.
+VMEM = pltpu.VMEM
+SMEM = pltpu.SMEM
+ANY = getattr(pltpu, "ANY", getattr(pl, "ANY", None))
+SemaphoreType = pltpu.SemaphoreType
+make_async_copy = pltpu.make_async_copy
+PrefetchScalarGridSpec = pltpu.PrefetchScalarGridSpec
+
+# Renamed in newer JAX: TPUCompilerParams -> CompilerParams.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def compiler_params(
+    *, dimension_semantics: Optional[Sequence[str]] = None, **kwargs
+):
+    """TPU compiler params under whichever class name this JAX exposes."""
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+def on_tpu() -> bool:
+    """True when the default backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run compiled on TPU, interpreted everywhere else."""
+    return not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# shard_map / mesh drift
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):  # newer JAX: top-level, check_vma kwarg
+    _shard_map_impl = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # older JAX: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across its experimental -> stable migration.
+
+    ``check`` maps to ``check_vma`` (new) / ``check_rep`` (old); both default
+    off here because the k-NN wave step intentionally mixes replicated and
+    sharded outputs.
+    """
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check},
+    )
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        axis_types=(AxisType.Auto,) * len(tuple(axis_names)),
+    )
+
+
+def donation_enabled() -> bool:
+    """True where jax buffer donation actually takes effect (TPU/GPU)."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def donating_jit(fun=None, *, static_argnames=(), donate_argnums=()):
+    """``jax.jit`` that only donates where donation is implemented.
+
+    Buffer donation is a no-op (plus a warning per compile) on CPU; dropping
+    the donation there keeps logs clean and lets tests reuse inputs, while
+    TPU/GPU get the in-place graph update the fused wave pipeline relies on.
+    """
+    if fun is None:
+        return functools.partial(
+            donating_jit,
+            static_argnames=static_argnames,
+            donate_argnums=donate_argnums,
+        )
+
+    # Resolved on first call, not at decoration time: deciding needs
+    # ``jax.default_backend()``, and module import must never initialize
+    # device state (the dry-run sets XLA_FLAGS after imports).
+    cache: dict = {}
+
+    @functools.wraps(fun)
+    def wrapper(*args, **kwargs):
+        if "jitted" not in cache:
+            donate = donate_argnums if donation_enabled() else ()
+            cache["jitted"] = jax.jit(
+                fun, static_argnames=static_argnames, donate_argnums=donate
+            )
+        return cache["jitted"](*args, **kwargs)
+
+    wrapper.clear_cache = cache.clear  # test hook
+    return wrapper

@@ -29,7 +29,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 Array = jax.Array
 
@@ -158,16 +159,16 @@ def pairwise_distance(
     if kernel_metric in MXU_METRICS:
         kern = functools.partial(_dist_kernel_mxu, metric=kernel_metric, nd=grid[2])
         scratch = [
-            pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((bm, 1), jnp.float32),
-            pltpu.VMEM((1, bn), jnp.float32),
+            compat.VMEM((bm, bn), jnp.float32),
+            compat.VMEM((bm, 1), jnp.float32),
+            compat.VMEM((1, bn), jnp.float32),
         ]
     elif kernel_metric in VPU_METRICS:
         rows = min(8, bn)
         kern = functools.partial(
             _dist_kernel_vpu, metric=kernel_metric, nd=grid[2], rows_per_step=rows
         )
-        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+        scratch = [compat.VMEM((bm, bn), jnp.float32)]
     else:
         raise KeyError(f"metric {metric!r} has no Pallas path")
 
@@ -181,7 +182,7 @@ def pairwise_distance(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -29,7 +29,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 Array = jax.Array
 
@@ -50,14 +51,14 @@ def _gather_dist_kernel(
 
     def start_fetch(c, slot):
         rid = jnp.maximum(idx_ref[b, c], 0)
-        cp = pltpu.make_async_copy(
+        cp = compat.make_async_copy(
             x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
         )
         cp.start()
 
     def wait_fetch(c, slot):
         rid = jnp.maximum(idx_ref[b, c], 0)
-        cp = pltpu.make_async_copy(
+        cp = compat.make_async_copy(
             x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
         )
         cp.wait()
@@ -115,17 +116,17 @@ def gather_distance(
     b, d = q.shape
     c = idx.shape[1]
     kern = functools.partial(_gather_dist_kernel, n_cand=c, metric=metric)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b,),
         in_specs=[
             pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
-            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=compat.ANY),
         ],
         out_specs=pl.BlockSpec((1, c), lambda i, idx_ref: (i, 0)),
         scratch_shapes=[
-            pltpu.VMEM((2, 1, d), jnp.float32),
-            pltpu.SemaphoreType.DMA((2,)),
+            compat.VMEM((2, 1, d), jnp.float32),
+            compat.SemaphoreType.DMA((2,)),
         ],
     )
     out = pl.pallas_call(

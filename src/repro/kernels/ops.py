@@ -14,15 +14,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compat
 from repro.kernels import distance as _distance
 from repro.kernels import gather_dist as _gather_dist
 from repro.kernels import ref as _ref
 
 Array = jax.Array
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+_on_tpu = compat.on_tpu
 
 
 def pairwise_distance(

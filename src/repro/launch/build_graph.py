@@ -52,13 +52,16 @@ def main():
         print(f"resumed with {int(g0.n_valid)} rows already committed")
 
     def cb(widx, g):
-        if args.ckpt and widx % args.ckpt_every == 0:
-            ckpt_lib.save_graph(args.ckpt, g, int(g.n_valid), cfg.__dict__)
-            print(f"  wave {widx}: checkpointed at row {int(g.n_valid)}", flush=True)
+        ckpt_lib.save_graph(args.ckpt, g, int(g.n_valid), cfg.__dict__)
+        print(f"  wave {widx}: checkpointed at row {int(g.n_valid)}", flush=True)
 
     t0 = time.time()
-    g, stats = construct.build(x, cfg, jax.random.PRNGKey(1),
-                               wave_callback=cb, initial=initial)
+    g, stats = construct.build(
+        x, cfg, jax.random.PRNGKey(1),
+        wave_callback=cb if args.ckpt else None,
+        callback_stride=args.ckpt_every,
+        initial=initial,
+    )
     dt = time.time() - t0
     c = construct.scanning_rate(stats, args.n)
     print(f"built {args.algo.upper()} graph: n={args.n} d={args.d} k={args.k} "

@@ -1,19 +1,22 @@
 """Production mesh definitions (TPU v5e-256 pods).
 
 A FUNCTION, not a module constant — importing this module never touches jax
-device state (the dry-run must set XLA_FLAGS before any device query)."""
+device state (the dry-run must set XLA_FLAGS before any device query).
+Mesh creation goes through ``kernels.compat.make_mesh`` so the
+``axis_types`` API drift is handled in one place."""
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.kernels import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) data x model single pod; (2, 16, 16) pod x data x model for 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -21,4 +24,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     n = len(jax.devices())
     if shape is None:
         shape = (n // 2, 2) if n % 2 == 0 and n > 1 else (n, 1)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

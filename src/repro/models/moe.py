@@ -25,6 +25,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import segments
 from repro.models import common
 
 Array = jax.Array
@@ -47,13 +48,6 @@ def init_moe_params(key, d_model: int, d_ff: int, cfg: MoEConfig, dtype) -> Dict
         "w_up": common.dense_init(ks[2], (E, d_model, d_ff), dtype),
         "w_down": common.dense_init(ks[3], (E, d_ff, d_model), dtype),
     }
-
-
-def _segment_rank(sorted_keys: Array) -> Array:
-    idx = jnp.arange(sorted_keys.shape[0])
-    start = jnp.concatenate([jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]])
-    seg = jnp.maximum.accumulate(jnp.where(start, idx, 0))
-    return idx - seg
 
 
 def apply_moe(
@@ -103,19 +97,14 @@ def apply_moe(
     flat_g = gate_vals.reshape(-1)
     order = jnp.argsort(flat_e, stable=True)
     se, st, sg = flat_e[order], flat_t[order], flat_g[order]
-    rank = _segment_rank(se)
-    keep = rank < C
-    drop_rate = 1.0 - jnp.mean(keep.astype(jnp.float32))
 
     # ---- gather tokens into (E, C, d) ---------------------------------------
-    slot_e = jnp.where(keep, se, E)
-    slot_c = jnp.where(keep, rank, 0)
-    buf_tok = jnp.full((E + 1, C), T, jnp.int32)  # T = sentinel -> zero row
-    buf_tok = buf_tok.at[slot_e, slot_c].set(jnp.where(keep, st, T), mode="drop")
-    buf_gate = jnp.zeros((E + 1, C), jnp.float32)
-    buf_gate = buf_gate.at[slot_e, slot_c].set(jnp.where(keep, sg, 0.0), mode="drop")
-    buf_tok = buf_tok[:E]
-    buf_gate = buf_gate[:E]
+    # T is the token sentinel -> zero row of xz
+    (buf_tok, buf_gate), counts = segments.grouped_top_r(
+        se, [st, sg], [T, 0.0], E, C
+    )
+    dropped = jnp.sum(jnp.maximum(counts - C, 0))
+    drop_rate = dropped.astype(jnp.float32) / se.shape[0]
     xz = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
     xe = xz[buf_tok]  # (E, C, d)
 

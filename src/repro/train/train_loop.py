@@ -120,12 +120,13 @@ def make_sharded_train_step(
         return params, opt_state, err, metrics
 
     rep = P()  # params/opt replicated
-    return jax.shard_map(
+    from repro.kernels import compat
+
+    return compat.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(rep, rep, err_spec, batch_spec),
         out_specs=(rep, rep, err_spec, rep),
-        check_vma=False,
     )
 
 

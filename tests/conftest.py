@@ -1,0 +1,26 @@
+"""Shared test fixtures: deterministic PRNG seeding for every test.
+
+Tier-1 runs ``pytest -x -q`` (optionally ``-m "not slow"``); determinism
+comes from re-seeding NumPy's global PRNG before each test so that module
+order / ``-x`` early exits / ``-k`` selections never change what any single
+test sees.  JAX keys are explicit everywhere (``jax.random.PRNGKey``), so
+they need no fixture.
+"""
+
+import numpy as np
+import pytest
+
+GLOBAL_SEED = 0
+
+
+@pytest.fixture(autouse=True)
+def fixed_seed():
+    """Reset the global NumPy PRNG before every test (autouse)."""
+    np.random.seed(GLOBAL_SEED)
+    yield
+
+
+@pytest.fixture
+def rng():
+    """A fresh, fixed-seed Generator for tests that want a local PRNG."""
+    return np.random.RandomState(GLOBAL_SEED)

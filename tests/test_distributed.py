@@ -19,10 +19,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 from repro.core import brute, construct, distributed
+from repro.kernels import compat
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 cfg = construct.BuildConfig(k=4, wave=16, n_seed_init=16, beam=8, n_seeds=4,
                             hash_slots=256, max_iters=10, use_pallas=False)
 g, x = distributed.init_sharded_state(mesh, 8 * 64, 16, cfg)
@@ -88,10 +88,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.kernels import compat
 from repro.train import optimizer as opt_lib, train_loop
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 
 def loss_fn(params, batch):
     pred = batch["x"] @ params["w"]
@@ -133,11 +133,13 @@ def compress_result():
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_compressed_dp_converges(compress_result):
     r = compress_result
     assert r["loss_compressed"] < 1e-2, r
 
 
+@pytest.mark.slow
 def test_compressed_tracks_uncompressed(compress_result):
     r = compress_result
     # int8 error feedback: same optimum, small transient deviation

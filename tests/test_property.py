@@ -8,6 +8,9 @@ wave commit, NN-Descent round and refinement pass goes through them.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import merge

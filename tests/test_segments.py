@@ -1,0 +1,196 @@
+"""Unit tests for core.segments — the shared segmented-scan/group-by core.
+
+Every batched commit in the system (wave merge, reverse ring buffers,
+NN-Descent reverse sampling, MoE dispatch) sits on these primitives, so they
+are cross-checked against a transparent pure-NumPy reference over randomized
+cases including ties, empty segments, all-padding inputs and single-element
+runs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import segments
+
+
+# ---------------------------------------------------------------------------
+# NumPy references
+# ---------------------------------------------------------------------------
+
+
+def ref_segment_rank(sorted_keys):
+    out, prev, r = [], None, 0
+    for k in sorted_keys:
+        r = r + 1 if k == prev else 0
+        out.append(r)
+        prev = k
+    return np.asarray(out, np.int32)
+
+
+def ref_grouped_top_r(sorted_keys, payloads, fills, num_segments, r):
+    bufs = [np.full((num_segments, r), f, np.asarray(p).dtype)
+            for p, f in zip(payloads, fills)]
+    counts = np.zeros((num_segments,), np.int32)
+    rank = ref_segment_rank(sorted_keys)
+    for i, key in enumerate(sorted_keys):
+        if key >= num_segments:
+            continue
+        counts[key] += 1
+        if rank[i] < r:
+            for buf, p in zip(bufs, payloads):
+                buf[key, rank[i]] = p[i]
+    return bufs, counts
+
+
+def ref_segment_max(values, starts):
+    out = np.empty_like(values)
+    cur = None
+    for i, (v, s) in enumerate(zip(values, starts)):
+        cur = v if (s or cur is None) else max(cur, v)
+        out[i] = cur
+    return out
+
+
+CASES = [np.random.RandomState(s).randint(0, 9, size=t)
+         for s, t in [(0, 1), (1, 7), (2, 40), (3, 200), (4, 513)]]
+
+
+# ---------------------------------------------------------------------------
+# segment_rank / starts / scans
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", range(len(CASES)))
+def test_segment_rank_matches_reference(case):
+    keys = np.sort(CASES[case])
+    got = np.asarray(segments.segment_rank(jnp.asarray(keys)))
+    np.testing.assert_array_equal(got, ref_segment_rank(keys))
+
+
+def test_segment_rank_all_equal_and_all_distinct():
+    same = np.zeros(17, np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(segments.segment_rank(jnp.asarray(same))), np.arange(17)
+    )
+    distinct = np.arange(17, dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(segments.segment_rank(jnp.asarray(distinct))), np.zeros(17)
+    )
+
+
+def test_segment_starts():
+    keys = jnp.asarray([0, 0, 2, 2, 2, 5, 7, 7])
+    got = np.asarray(segments.segment_starts(keys))
+    np.testing.assert_array_equal(
+        got, [True, False, True, False, False, True, True, False]
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_segment_max_min_reset_at_starts(seed):
+    rng = np.random.RandomState(seed)
+    n = 64
+    vals = rng.randn(n).astype(np.float32)
+    starts = rng.rand(n) < 0.25
+    starts[0] = True
+    got_max = np.asarray(segments.segment_max(jnp.asarray(vals), jnp.asarray(starts)))
+    got_min = np.asarray(segments.segment_min(jnp.asarray(vals), jnp.asarray(starts)))
+    np.testing.assert_allclose(got_max, ref_segment_max(vals, starts))
+    np.testing.assert_allclose(got_min, -ref_segment_max(-vals, starts))
+
+
+def test_running_max_is_prefix_max():
+    v = jnp.asarray([3.0, 1.0, 4.0, 1.0, 5.0, 0.0])
+    np.testing.assert_allclose(
+        np.asarray(segments.running_max(v)), [3, 3, 4, 4, 5, 5]
+    )
+
+
+# ---------------------------------------------------------------------------
+# grouped_top_r
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_grouped_top_r_matches_reference(seed):
+    rng = np.random.RandomState(seed)
+    num_segments = rng.randint(1, 12)
+    t = rng.randint(1, 60)
+    r = rng.randint(1, 6)
+    # sentinel num_segments marks padding; sorted ascending as required
+    keys = np.sort(rng.randint(0, num_segments + 1, size=t)).astype(np.int32)
+    ids = rng.randint(0, 1000, size=t).astype(np.int32)
+    dist = rng.rand(t).astype(np.float32)
+    (got_ids, got_dist), got_counts = segments.grouped_top_r(
+        jnp.asarray(keys), [jnp.asarray(ids), jnp.asarray(dist)],
+        [-1, np.inf], num_segments, r,
+    )
+    (want_ids, want_dist), want_counts = ref_grouped_top_r(
+        keys, [ids, dist], [-1, np.inf], num_segments, r
+    )
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(got_dist), want_dist)
+    np.testing.assert_array_equal(np.asarray(got_counts), want_counts)
+
+
+def test_grouped_top_r_empty_segments():
+    """Segments with no elements stay at the fill value, count 0."""
+    keys = jnp.asarray([2, 2, 5], jnp.int32)  # segments 0,1,3,4 empty
+    (ids,), counts = segments.grouped_top_r(
+        keys, [jnp.asarray([7, 8, 9], jnp.int32)], [-1], 6, 2
+    )
+    want = np.full((6, 2), -1, np.int32)
+    want[2, :2] = [7, 8]
+    want[5, 0] = 9
+    np.testing.assert_array_equal(np.asarray(ids), want)
+    np.testing.assert_array_equal(np.asarray(counts), [0, 0, 2, 0, 0, 1])
+
+
+def test_grouped_top_r_all_padding():
+    """All-padding input: buffers untouched, counts all zero."""
+    keys = jnp.full((8,), 4, jnp.int32)  # == num_segments sentinel
+    (ids,), counts = segments.grouped_top_r(
+        keys, [jnp.arange(8, dtype=jnp.int32)], [-1], 4, 3
+    )
+    assert np.all(np.asarray(ids) == -1)
+    assert np.all(np.asarray(counts) == 0)
+
+
+def test_grouped_top_r_overflow_truncates_but_counts_all():
+    """More than r elements in a segment: first r kept, count uncapped."""
+    keys = jnp.zeros((5,), jnp.int32)
+    (ids,), counts = segments.grouped_top_r(
+        keys, [jnp.asarray([10, 11, 12, 13, 14], jnp.int32)], [-1], 2, 3
+    )
+    np.testing.assert_array_equal(np.asarray(ids)[0], [10, 11, 12])
+    np.testing.assert_array_equal(np.asarray(counts), [5, 0])
+
+
+def test_grouped_top_r_ties_keep_sort_order():
+    """Equal keys: payload order (the caller's sort order) is preserved."""
+    keys = jnp.asarray([1, 1, 1], jnp.int32)
+    dist = jnp.asarray([0.5, 0.5, 0.5], jnp.float32)  # exact ties
+    ids = jnp.asarray([3, 1, 2], jnp.int32)
+    (got_ids, got_dist), _ = segments.grouped_top_r(
+        keys, [ids, dist], [-1, np.inf], 3, 3
+    )
+    np.testing.assert_array_equal(np.asarray(got_ids)[1], [3, 1, 2])
+
+
+def test_grouped_top_r_keep_mask():
+    keys = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    payload = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    keep = jnp.asarray([True, False, True, True])
+    (ids,), counts = segments.grouped_top_r(
+        keys, [payload], [-1], 2, 2, keep=keep
+    )
+    np.testing.assert_array_equal(np.asarray(ids), [[5, -1], [7, 8]])
+    # counts ignore the keep mask (occurrence counts, not kept counts)
+    np.testing.assert_array_equal(np.asarray(counts), [2, 2])
+
+
+def test_segment_counts_drops_sentinel():
+    keys = jnp.asarray([0, 0, 1, 3, 3, 3, 4, 4], jnp.int32)
+    got = np.asarray(segments.segment_counts(keys, 4))
+    np.testing.assert_array_equal(got, [2, 1, 0, 3])

@@ -1,0 +1,159 @@
+"""Wave-pipeline equivalence tests.
+
+Three claims the fused construction loop must keep honest:
+
+1. the fused jitted ``wave_step`` (search + commit in one compiled call,
+   device-side stats fold) produces **bit-identical** graphs to running the
+   unfused search -> commit_wave path with the same inputs;
+2. ``build(W=1)`` keeps the paper's sequential Alg. 2/3 semantics (one sample
+   per wave, no intra-wave tile) and still reaches high recall;
+3. the production wave width (W=64) holds recall@10 >= 0.90 on a 2k-point
+   synthetic set.
+
+Plus: the host-sync discipline — ``build`` returns device-side stats and
+invokes ``wave_callback`` only at the configured stride.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import brute, construct
+from repro.core import search as search_lib
+
+N, D, K = 2000, 8, 10
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.RandomState(0)
+    return jnp.asarray(rng.rand(N, D).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def truth(data):
+    ids, _ = brute.brute_force_knn(
+        data, data, K, "l2", exclude_ids=jnp.arange(N, dtype=jnp.int32)
+    )
+    return ids
+
+
+class TestFusedEqualsUnfused:
+    @pytest.mark.parametrize("lgd", [False, True])
+    def test_wave_step_bit_identical_to_search_plus_commit(self, data, lgd):
+        """Regression: fusing search+commit must not change a single bit."""
+        cfg = construct.BuildConfig(
+            k=K, wave=64, lgd=lgd, beam=16, n_seeds=4, hash_slots=512,
+            max_iters=24,
+        )
+        g = brute.exact_seed_graph(data, 256, K, "l2")
+        pos = jnp.asarray(256, jnp.int32)
+        key = jax.random.PRNGKey(7)
+
+        # unfused reference: standalone search, then standalone commit
+        W = cfg.wave
+        q = data[pos + jnp.arange(W)]
+        res = search_lib.search(g, data, q, key, cfg.search_config())
+        n_real = jnp.asarray(W, jnp.int32)
+        g_ref, edges_ref = construct.commit_wave(g, data, pos, n_real, res, cfg)
+
+        # fused path (donates g on accelerators — run it last)
+        g_fused, stats = construct.wave_step(
+            g, data, pos, key, construct.zero_stats(), cfg
+        )
+
+        for name, a, b in zip(g_ref._fields, g_ref, g_fused):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"field {name}"
+            )
+        assert int(stats.n_waves) == 1
+        assert float(stats.n_inserted_edges) == float(edges_ref)
+
+    def test_wave_step_stats_fold(self, data):
+        """The stats carry accumulates across chained fused steps."""
+        cfg = construct.BuildConfig(
+            k=K, wave=32, lgd=False, beam=16, n_seeds=4, hash_slots=512,
+            max_iters=16,
+        )
+        g = brute.exact_seed_graph(data, 128, K, "l2")
+        stats = construct.zero_stats(5.0)
+        pos = 128
+        for i in range(3):
+            g, stats = construct.wave_step(
+                g, data, jnp.asarray(pos, jnp.int32), jax.random.PRNGKey(i),
+                stats, cfg,
+            )
+            pos += cfg.wave
+        assert int(stats.n_waves) == 3
+        # seed charge + per-wave comps (searches + intra-wave tiles)
+        min_intra = 3 * (32 * 31) / 2.0
+        assert float(stats.n_comps) >= 5.0 + min_intra
+
+
+class TestWaveSemantics:
+    def test_w1_matches_sequential_semantics(self, data):
+        """W=1 is the paper's sequential Alg. 2/3: each wave inserts exactly
+        one sample against the graph so far, and the result is a high-quality
+        graph (the sequential limit the batched waves must degenerate to)."""
+        small = data[:400]
+        tids, _ = brute.brute_force_knn(
+            small, small, K, "l2", exclude_ids=jnp.arange(400, dtype=jnp.int32)
+        )
+        cfg = construct.BuildConfig(
+            k=K, wave=1, lgd=True, beam=16, n_seeds=4, hash_slots=512,
+            max_iters=32, intra_wave=False, n_seed_init=256,
+        )
+        waves = []
+        g, stats = construct.build(
+            small, cfg, jax.random.PRNGKey(0),
+            wave_callback=lambda i, gg: waves.append(int(gg.n_valid)),
+        )
+        # one sample per wave, graph grows by exactly 1 each commit
+        assert int(stats.n_waves) == 400 - 256
+        assert waves == list(range(257, 401))
+        rec = float(brute.recall_at_k(g.nbr_ids, tids, K))
+        assert rec > 0.85, rec
+
+    @pytest.mark.parametrize("lgd", [False, True])
+    def test_w64_recall_at_10(self, data, truth, lgd):
+        """Acceptance: build(W=64) recall@10 >= 0.90 on the 2k synthetic set."""
+        cfg = construct.BuildConfig(
+            k=K, wave=64, lgd=lgd, beam=24, n_seeds=4, hash_slots=1024,
+            max_iters=40,
+        )
+        g, _ = construct.build(data, cfg, jax.random.PRNGKey(1))
+        rec = float(brute.recall_at_k(g.nbr_ids, truth, 10))
+        assert rec >= 0.90, (lgd, rec)
+
+
+class TestCallbackStride:
+    def test_stride_controls_sync_points(self, data):
+        cfg = construct.BuildConfig(
+            k=K, wave=128, lgd=False, beam=16, n_seeds=4, hash_slots=512,
+            max_iters=16,
+        )
+        calls = []
+        g, stats = construct.build(
+            data[:1280], cfg, jax.random.PRNGKey(0),
+            wave_callback=lambda i, gg: calls.append(i),
+            callback_stride=4,
+        )
+        n_waves = int(stats.n_waves)
+        assert calls == [i for i in range(1, n_waves + 1) if i % 4 == 0]
+
+    def test_stride_validation(self, data):
+        cfg = construct.BuildConfig(k=K, wave=64)
+        with pytest.raises(ValueError):
+            construct.build(data[:512], cfg, callback_stride=0)
+
+    def test_stats_are_device_side(self, data):
+        """No host round trip is forced on the caller: stats leaves are
+        jax Arrays (syncing is the caller's choice, once, at the end)."""
+        cfg = construct.BuildConfig(
+            k=K, wave=128, lgd=False, beam=16, n_seeds=4, hash_slots=512,
+            max_iters=16,
+        )
+        _, stats = construct.build(data[:640], cfg, jax.random.PRNGKey(0))
+        for leaf in stats:
+            assert isinstance(leaf, jax.Array), type(leaf)
