@@ -59,6 +59,25 @@ def timed_build(x, cfg, seed: int, callback_stride: int = 0):
     return g, stats, dt, (n_waves / dt if dt > 0 else float("inf"))
 
 
+def quality_gate(n: int = 2000, d: int = 20, seed: int = 0) -> dict:
+    """The canonical CI quality measurement: LGD build recall@10 on uniform
+    data at a fixed shape.  ``benchmarks.ci_gate`` fails the benchmark-smoke
+    job when this regresses below the committed baseline
+    (benchmarks/baseline_ci.json)."""
+    x = common.dataset("uniform", n, d, seed)
+    true_ids = common.ground_truth(x, x, 11, "l2")[:, 1:]  # drop self
+    cfg = construct.BuildConfig(
+        k=20, metric="l2", wave=256, beam=40, n_seeds=8, lgd=True,
+        use_pallas=False,
+    )
+    g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
+    return {
+        "n": n, "d": d, "k": 10,
+        "recall_at_10": common.graph_recall(g, true_ids, 10),
+        "scanning_rate": construct.scanning_rate(stats, n),
+    }
+
+
 def run(n: int = 10_000, dims=DIMS, metrics=("l2", "l1"), k: int = 10, seed: int = 0):
     tbl = common.Table(
         "construction: recall vs dim at matched scanning rate (Fig 6/7, Table II)",

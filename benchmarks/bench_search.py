@@ -1,8 +1,16 @@
-"""Paper Fig. 9/10: NN-search recall vs speed-up over brute force.
+"""Paper Fig. 9/10: NN-search recall vs speed-up over brute force — plus the
+fused-vs-unfused EHC expansion-step microbenchmark.
 
 OLG / LGD (update ops off — the paper's protocol) vs NN-Descent-graph search,
 sweeping the beam width to trace the recall/speed-up curve.  Speed-up
 denominator is brute force timed on the SAME machine (Table IV protocol).
+
+``expansion_bench`` isolates the Alg. 1/3 inner loop the fused Pallas kernel
+targets: one EHC expansion per iteration, fused (a single compiled call —
+the Pallas kernel on TPU, the XLA-fused reference elsewhere) vs unfused (the
+same op chain as six separately-compiled stages with host dispatch between
+them, i.e. the pre-fusion execution shape).  Its record lands in
+``BENCH_ci.json`` and gates CI (benchmarks.ci_gate).
 """
 
 from __future__ import annotations
@@ -15,6 +23,8 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.core import brute, construct, nndescent
 from repro.core import search as search_lib
+from repro.kernels import expand as expand_lib
+from repro.kernels import ops
 
 DATASETS = [
     ("SIFT-like", "clustered", 128, "l2"),
@@ -62,13 +72,230 @@ def run(n: int = 10_000, n_q: int = 256, k: int = 20, seed: int = 0, datasets=DA
     return tbl
 
 
+# ---------------------------------------------------------------------------
+# Fused-vs-unfused expansion-step throughput (the tentpole measurement)
+# ---------------------------------------------------------------------------
+
+
+def expansion_bench(
+    n: int = 5000,
+    d: int = 20,
+    B: int = 16,
+    k: int = 20,
+    steps: int = 6,
+    metric: str = "l2",
+    seed: int = 0,
+) -> dict:
+    """Measure EHC expansion-step throughput, fused vs unfused.
+
+    Both paths run the identical op chain from the same initial state:
+      * fused — the production execution shape: the whole expansion loop as
+        one compiled call with the carry updated in place (on TPU the step
+        is the Pallas kernel; elsewhere XLA fuses the reference chain);
+      * unfused — candidate gather, hash probe, distance gather, hash
+        record, beam merge, and convergence as separately-jitted calls,
+        every intermediate (including the (B, H) visited tables) allocated
+        and round-tripped through device memory per stage.
+
+    The default ``B=16`` is the serving shape: ``serve.retrieval.retrieve``
+    searches one user's MIND interest vectors (a handful of queries), which
+    is where per-step dispatch/materialization overhead — the thing fusion
+    removes — dominates.  Construction waves (B=256+) amortize dispatch
+    across the wave, so the CPU fused-vs-unfused gap narrows there; pass
+    ``B=256`` to measure that regime (the CI record carries both).
+
+    Timings use min-of-iters: CI runners are contended, and the minimum is
+    the least-noisy estimate of true step cost.  Returns a machine-readable
+    record incl. an arithmetic-intensity estimate for the roofline report.
+    """
+    x, q = common.dataset_with_queries("uniform", n, B, d, seed)
+    g = brute.exact_seed_graph(x, n, k, metric, use_pallas=False)
+    cfg = search_lib.SearchConfig(
+        k=k, beam=2 * k, n_seeds=8, hash_slots=2048, max_iters=steps,
+        metric=metric, use_pallas=None,
+    )
+    key = jax.random.PRNGKey(seed)
+    st0 = jax.block_until_ready(search_lib.init_state(g, x, q, key, cfg))
+
+    # fused: the production execution shape — the whole expansion loop is one
+    # compiled call (exactly what search's lax.while_loop runs, with the
+    # convergence predicate replaced by a fixed trip count so both paths do
+    # identical work), carry updated in place.
+    step = search_lib._make_step(g, x, q, cfg)
+
+    @jax.jit
+    def fused_loop(st):
+        return jax.lax.fori_loop(0, steps, lambda i, s: step(s), st)
+
+    # -- unfused: the pre-fusion op chain — every stage its own compiled
+    # call (one dispatch + a device-memory round trip of its intermediates):
+    # select-r, candidate gather (G[r] ∪ Ḡ[r] + masking), hash probe,
+    # distance gather, hash record, beam top-k merge, dedupe, convergence.
+    probes = cfg.hash_probes
+    e, H = cfg.beam, cfg.hash_slots
+
+    def _select_r(st):
+        sel_dist = jnp.where(st.beam_exp, jnp.inf, st.beam_dist)
+        r_slot = jnp.argmin(sel_dist, axis=1)
+        r_best = jnp.take_along_axis(sel_dist, r_slot[:, None], axis=1)[:, 0]
+        has_r = jnp.isfinite(r_best) & ~st.done
+        r_id = jnp.where(
+            has_r,
+            jnp.take_along_axis(st.beam_ids, r_slot[:, None], axis=1)[:, 0],
+            -1,
+        )
+        beam_exp = st.beam_exp.at[jnp.arange(B), r_slot].set(
+            st.beam_exp[jnp.arange(B), r_slot] | has_r
+        )
+        return r_id, has_r, beam_exp
+
+    s_select = jax.jit(_select_r)
+    s_cands = jax.jit(
+        lambda r_id, has_r: search_lib._candidates_from_expansion(
+            g, r_id, has_r, cfg
+        )
+    )
+    s_probe = jax.jit(
+        lambda vis_ids, cands: expand_lib.hash_probe_state(vis_ids, cands, probes)
+    )
+    # pre-fusion dispatch: auto (Pallas gather kernel on TPU, ref elsewhere),
+    # so the baseline is the op chain as it actually ran before fusion
+    s_dist = jax.jit(
+        lambda qq, cand_ids: ops.gather_distance(
+            qq, x, cand_ids, cfg.metric, use_pallas=cfg.use_pallas
+        )
+    )
+
+    def _record(vis_ids, vis_dist, do_ins, cand_ids, dists, insert_slot):
+        B_idx = jnp.broadcast_to(jnp.arange(B)[:, None], cand_ids.shape)
+        slot = jnp.where(do_ins, insert_slot, H)
+        vis_ids = vis_ids.at[B_idx, slot].set(
+            jnp.where(do_ins, cand_ids, -1), mode="drop"
+        )
+        vis_dist = vis_dist.at[B_idx, slot].set(
+            jnp.where(do_ins, dists, jnp.inf), mode="drop"
+        )
+        return vis_ids, vis_dist
+
+    s_record = jax.jit(_record)
+
+    def _beam_merge(bi, bd, be, cand_ids, dists):
+        cat_ids = jnp.concatenate([bi, cand_ids], axis=1)
+        cat_dist = jnp.concatenate([bd, dists], axis=1)
+        cat_exp = jnp.concatenate(
+            [be, jnp.zeros_like(cand_ids, bool) | (cand_ids < 0)], axis=1
+        )
+        neg, sel = jax.lax.top_k(-cat_dist, e)
+        return (
+            jnp.take_along_axis(cat_ids, sel, axis=1),
+            -neg,
+            jnp.take_along_axis(cat_exp, sel, axis=1),
+        )
+
+    s_beam_merge = jax.jit(_beam_merge)
+    s_dedupe = jax.jit(
+        lambda bi, bd, be: expand_lib.dedupe_beam(bi, bd, be)
+    )
+
+    def _converge(st, bi, bd, be, vi, vd, comps):
+        best_unexp = jnp.min(jnp.where(be, jnp.inf, bd), axis=1)
+        newly_done = ~(best_unexp < bd[:, cfg.k - 1])
+        return st._replace(
+            beam_ids=bi, beam_dist=bd, beam_exp=be, vis_ids=vi, vis_dist=vd,
+            n_comps=st.n_comps + comps,
+            n_iters=st.n_iters + (~st.done).astype(jnp.int32),
+            done=st.done | newly_done, it=st.it + 1,
+        )
+
+    s_converge = jax.jit(_converge)
+
+    def unfused_step(st):
+        r_id, has_r, beam_exp = s_select(st)
+        cands = s_cands(r_id, has_r)
+        present, insert_ok, insert_slot = s_probe(st.vis_ids, cands)
+        fresh = (cands >= 0) & ~present
+        cand_ids = jnp.where(fresh, cands, -1)
+        dists = s_dist(q, cand_ids)
+        vi, vd = s_record(
+            st.vis_ids, st.vis_dist, fresh & insert_ok, cand_ids, dists,
+            insert_slot,
+        )
+        bi, bd, be = s_beam_merge(
+            st.beam_ids, st.beam_dist, beam_exp, cand_ids, dists
+        )
+        bi, bd, be = s_dedupe(bi, bd, be)
+        comps = jnp.sum(fresh, axis=1).astype(jnp.int32)
+        return s_converge(st, bi, bd, be, vi, vd, comps)
+
+    def drive_unfused():
+        st = st0
+        for _ in range(steps):
+            st = unfused_step(st)
+        return st.beam_dist
+
+    t_fused = common.timeit(lambda: fused_loop(st0), iters=7, reduce="min")
+    t_unfused = common.timeit(drive_unfused, iters=7, reduce="min")
+
+    # arithmetic-intensity estimate of one expansion step (l2):
+    # distances dominate flops; candidate rows + both hash tables dominate
+    # bytes (read+write for the tables, read-only for the rows).
+    C = k + g.rev_capacity
+    H, e = cfg.hash_slots, cfg.beam
+    flops = B * C * 3 * d
+    bytes_moved = (
+        B * C * d * 4  # candidate rows
+        + B * 2 * H * 8 * 2  # vis_ids/vis_dist read + write
+        + B * 3 * e * 4 * 2  # beam triple read + write
+    )
+    spf = B * steps / t_fused
+    spu = B * steps / t_unfused
+    return {
+        "n": n, "d": d, "B": B, "k": k, "steps": steps, "metric": metric,
+        "t_fused_s": t_fused,
+        "t_unfused_s": t_unfused,
+        "fused_expansions_per_s": spf,
+        "unfused_expansions_per_s": spu,
+        "speedup": t_unfused / t_fused,
+        "flops_per_step": flops,
+        "bytes_per_step": bytes_moved,
+        "arith_intensity": flops / bytes_moved,
+    }
+
+
+def run_expansion(batches=(16, 256), **kw):
+    """Expansion microbench at the serving batch (gated) and the
+    construction-wave batch (recorded).  Returns {B: record}."""
+    tbl = common.Table(
+        "EHC expansion step: fused kernel vs unfused op chain",
+        ["B", "path", "expansions/s", "ms/step", "speedup", "arith_int"],
+    )
+    recs = {}
+    for B in batches:
+        rec = expansion_bench(B=B, **kw)
+        recs[B] = rec
+        steps = rec["steps"]
+        tbl.add(B, "fused", rec["fused_expansions_per_s"],
+                1e3 * rec["t_fused_s"] / steps, rec["speedup"],
+                rec["arith_intensity"])
+        tbl.add(B, "unfused", rec["unfused_expansions_per_s"],
+                1e3 * rec["t_unfused_s"] / steps, 1.0, rec["arith_intensity"])
+    tbl.show()
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=10_000)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--expansion", action="store_true",
+                    help="only the fused-vs-unfused expansion microbench")
     args = ap.parse_args()
+    if args.expansion:
+        run_expansion()
+        return
     run(2000 if args.quick else args.n,
         datasets=DATASETS[:1] if args.quick else DATASETS)
+    run_expansion()
 
 
 if __name__ == "__main__":

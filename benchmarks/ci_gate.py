@@ -1,0 +1,65 @@
+"""Benchmark regression gate for CI.
+
+    PYTHONPATH=src python -m benchmarks.ci_gate BENCH_ci.json [baseline.json]
+
+Reads the machine-readable record ``benchmarks.run --ci-out`` emitted and
+compares it against the committed floors in ``benchmarks/baseline_ci.json``:
+
+  * ``recall_at_10_min`` — LGD build quality at the canonical shape
+    (bench_construction.quality_gate); drops mean the construction path
+    regressed;
+  * ``expansion_speedup_min`` — fused-vs-unfused EHC expansion throughput
+    (bench_search.expansion_bench); drops mean the fused step lost its edge.
+
+Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
+BENCH_ci.json artifact is uploaded either way so regressions come with data.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks import common
+
+_DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline_ci.json")
+
+
+def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
+    """Returns (name, measured, floor, ok) per gated metric."""
+    results = []
+    rec = float(bench["quality"]["recall_at_10"])
+    results.append(
+        ("recall_at_10", rec, float(baseline["recall_at_10_min"]),
+         rec >= float(baseline["recall_at_10_min"]))
+    )
+    spd = float(bench["expansion"]["speedup"])
+    results.append(
+        ("expansion_speedup", spd, float(baseline["expansion_speedup_min"]),
+         spd >= float(baseline["expansion_speedup_min"]))
+    )
+    return results
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    bench = common.load_json(sys.argv[1])
+    baseline = common.load_json(
+        sys.argv[2] if len(sys.argv) > 2 else _DEFAULT_BASELINE
+    )
+    failed = False
+    for name, measured, floor, ok in check(bench, baseline):
+        status = "OK  " if ok else "FAIL"
+        print(f"[{status}] {name}: {measured:.4g} (floor {floor:.4g})")
+        failed |= not ok
+    if failed:
+        print("benchmark regression gate FAILED")
+        return 1
+    print("benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,12 @@
-"""Render the §Roofline table from dry-run JSON records.
+"""Render the §Roofline table from dry-run JSON records — and the
+fused-expansion roofline from a BENCH_ci.json benchmark record.
 
     PYTHONPATH=src python -m benchmarks.roofline_report dryrun_single.json
+    PYTHONPATH=src python -m benchmarks.roofline_report BENCH_ci.json
+
+The input kind is sniffed: a list is a dry-run record set; a dict with an
+``expansion`` key is a ``benchmarks.run --ci-out`` emit, rendered as the
+fused-vs-unfused expansion throughput + arithmetic-intensity table.
 """
 
 from __future__ import annotations
@@ -53,10 +59,43 @@ def render(records: list[dict]) -> str:
     return "\n".join(rows)
 
 
+def render_expansion(rec: dict) -> str:
+    """Roofline view of the fused EHC expansion step (bench_search
+    .expansion_bench record): throughput per path, the fused speed-up, and
+    the step's arithmetic intensity — at ~0.05 flop/byte the expansion is
+    deeply memory-bound, which is exactly why fusing away the per-stage HBM
+    round trips (not adding flops) is the lever on scanning rate."""
+    rows = [
+        "### Fused expansion step "
+        f"(n={rec['n']}, d={rec['d']}, B={rec['B']}, {rec['metric']})",
+        "| path | expansions/s | ms/step | speedup | flops/step | bytes/step | arith intensity |",
+        "|" + "---|" * 7,
+    ]
+    steps = rec["steps"]
+    for path_name, t_key, tp_key, spd in (
+        ("fused (one kernel/step)", "t_fused_s", "fused_expansions_per_s",
+         rec["speedup"]),
+        ("unfused op chain", "t_unfused_s", "unfused_expansions_per_s", 1.0),
+    ):
+        rows.append(
+            f"| {path_name} | {rec[tp_key]:.3g} "
+            f"| {1e3 * rec[t_key] / steps:.3f} | {spd:.2f}x "
+            f"| {rec['flops_per_step']:.3g} | {rec['bytes_per_step']:.3g} "
+            f"| {rec['arith_intensity']:.4f} |"
+        )
+    return "\n".join(rows)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.json"
     with open(path) as f:
         records = json.load(f)
+    if isinstance(records, dict) and "expansion" in records:
+        print(render_expansion(records["expansion"]))
+        if "expansion_wave" in records:
+            print()
+            print(render_expansion(records["expansion_wave"]))
+        return
     print(render(records))
 
 

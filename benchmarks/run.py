@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--n", type=int, default=5_000,
                     help="dataset size (paper scale: 100k+; default fits CI)")
     ap.add_argument("--quick", action="store_true", help="tiny sizes, smoke only")
+    ap.add_argument("--ci-out", type=str, default=None, metavar="PATH",
+                    help="write the machine-readable benchmark record "
+                         "(BENCH_ci.json) for benchmarks.ci_gate")
     args = ap.parse_args()
     n = 2000 if args.quick else args.n
 
@@ -36,15 +39,40 @@ def main():
         bench_refine,
         bench_search,
         bench_search_baseline,
+        common,
     )
 
     t0 = time.time()
-    bench_brute.run(n, datasets=bench_brute.DATASETS[: 2 if args.quick else 4])
-    bench_search_baseline.run(n)
-    bench_construction.run(n, dims=(2, 5) if args.quick else (2, 5, 10, 20))
-    bench_datasets.run(n, datasets=bench_datasets.DATASETS[: 2 if args.quick else 4])
-    bench_search.run(n, datasets=bench_search.DATASETS[: 1 if args.quick else 3])
-    bench_refine.run(n, rounds=1 if args.quick else 3)
+    tables = {}
+    tables["brute"] = bench_brute.run(
+        n, datasets=bench_brute.DATASETS[: 2 if args.quick else 4])
+    tables["search_baseline"] = bench_search_baseline.run(n)
+    tables["construction"] = bench_construction.run(
+        n, dims=(2, 5) if args.quick else (2, 5, 10, 20))
+    tables["datasets"] = bench_datasets.run(
+        n, datasets=bench_datasets.DATASETS[: 2 if args.quick else 4])
+    tables["search"] = bench_search.run(
+        n, datasets=bench_search.DATASETS[: 1 if args.quick else 3])
+    tables["refine"] = bench_refine.run(n, rounds=1 if args.quick else 3)
+
+    if args.ci_out:
+        # gate metrics run at their FIXED canonical shapes (n=5k/d=20 for the
+        # expansion kernel, n=2k/d=20 for build quality), independent of --n,
+        # so the committed baseline stays comparable across runs
+        expansion = bench_search.run_expansion()
+        quality = bench_construction.quality_gate()
+        payload = {
+            "expansion": expansion[16],  # serving batch — the gated record
+            "expansion_wave": expansion[256],  # construction wave — recorded
+            "quality": quality,
+            "sections": {
+                name: t.records()
+                for name, t in tables.items()
+                if hasattr(t, "records")
+            },
+        }
+        common.emit_json(args.ci_out, payload)
+        print(f"wrote {args.ci_out}")
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s (n={n})")
 
 

@@ -10,11 +10,13 @@ Public API:
   * ``dynamic``       — online insert / remove (§IV-C)
   * ``distributed``   — shard_map sharded build & scatter-gather search
   * ``segments``      — segmented-scan / group-by primitives (shared core)
+  * ``counters``      — exact 64-bit device-side counters (BuildStats)
 """
 
 from repro.core import (
     brute,
     construct,
+    counters,
     dynamic,
     graph,
     merge,
@@ -25,6 +27,7 @@ from repro.core import (
 )
 
 from repro.core.construct import BuildConfig, build
+from repro.core.counters import Counter64
 from repro.core.graph import KNNGraph, empty_graph
 from repro.core.search import SearchConfig
 from repro.core.brute import brute_force_knn, recall_at_k
@@ -32,6 +35,8 @@ from repro.core.brute import brute_force_knn, recall_at_k
 __all__ = [
     "brute",
     "construct",
+    "counters",
+    "Counter64",
     "dynamic",
     "graph",
     "merge",

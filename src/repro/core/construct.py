@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import brute, merge
 from repro.core import search as search_lib
+from repro.core.counters import Counter64
 from repro.core.graph import KNNGraph
 from repro.core.search import SearchConfig
 from repro.kernels import compat, ops
@@ -74,24 +75,25 @@ class BuildConfig:
 class BuildStats(NamedTuple):
     """Device-side build counters — the carry of the fused wave loop.
 
-    All leaves are scalars living on device; the build loop folds each wave's
-    contribution in *inside* the jitted step, so reading any field (e.g. via
-    ``float``) is the only host sync and happens once, after the loop.
-    ``n_comps``/``n_inserted_edges`` accumulate in float32 (counts are
-    monitoring stats; exact integers up to 2^24 per increment).
+    All leaves live on device; the build loop folds each wave's contribution
+    in *inside* the jitted step, so reading a field (``float()`` / ``int()``)
+    is the only host sync and happens once, after the loop.
+    ``n_comps``/``n_inserted_edges`` are exact 64-bit ``Counter64`` pairs
+    (two int32 words with explicit carry) — float32 accumulation was only
+    exact to 2^24, far below production comparison counts.
     """
 
-    n_comps: Array  # () float32 — total distance computations
+    n_comps: Counter64  # total distance computations (Eq. 2 numerator)
     n_waves: Array  # () int32
-    n_inserted_edges: Array  # () float32
+    n_inserted_edges: Counter64
 
 
 def zero_stats(n_comps: float = 0.0) -> BuildStats:
     """Fresh stats carry (optionally pre-charged with seed-graph comps)."""
     return BuildStats(
-        n_comps=jnp.asarray(n_comps, jnp.float32),
+        n_comps=Counter64.of(n_comps),
         n_waves=jnp.zeros((), jnp.int32),
-        n_inserted_edges=jnp.zeros((), jnp.float32),
+        n_inserted_edges=Counter64.zero(),
     )
 
 
@@ -278,14 +280,14 @@ def wave_core(
         n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
     )
     g2, edges = commit_wave(g, x, pos, n_real, res, cfg)
-    comps = jnp.sum(res.n_comps).astype(jnp.float32)
+    comps = jnp.sum(res.n_comps)  # int32; bounded by W * C * max_iters << 2^31
     if cfg.intra_wave and W > 1:
-        nr = n_real.astype(jnp.float32)
-        comps = comps + nr * (nr - 1.0) / 2.0
+        nr = n_real.astype(jnp.int32)
+        comps = comps + nr * (nr - 1) // 2
     stats2 = BuildStats(
-        n_comps=stats.n_comps + comps,
+        n_comps=stats.n_comps.add(comps),
         n_waves=stats.n_waves + 1,
-        n_inserted_edges=stats.n_inserted_edges + edges.astype(jnp.float32),
+        n_inserted_edges=stats.n_inserted_edges.add(edges),
     )
     return g2, stats2
 
@@ -352,7 +354,7 @@ def build(
         start = n_seed
     # seed-graph comparisons count toward the scanning rate
     n_seed0 = int(start)
-    stats = zero_stats(n_seed0 * (n_seed0 - 1) / 2.0 if initial is None else 0.0)
+    stats = zero_stats(n_seed0 * (n_seed0 - 1) // 2 if initial is None else 0)
     W = cfg.wave
 
     pos = int(start)

@@ -1,0 +1,73 @@
+"""Exact device-side event counters.
+
+``BuildStats`` used to accumulate comparison/edge counts in float32, which is
+exact only up to 2^24 — a production build (n=10^8, k=40) performs ~10^12
+comparisons, so every wave past the first few thousand silently stopped
+counting (flagged in the ROADMAP PR-1 notes).  JAX disables int64 by default
+(x64 mode is a global flag we don't own), so the fix is a carried int32/uint32
+pair: a ``Counter64`` is an exact 64-bit unsigned counter that lives on device
+as two 32-bit words and folds new counts in with an explicit carry.
+
+It is a NamedTuple, hence a pytree: it jits, donates, and carries through
+``lax``-loops like any other ``BuildStats`` leaf.  Reading it (``int()`` /
+``float()``) is the host sync, same discipline as before.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_WORD = 1 << 32
+
+
+class Counter64(NamedTuple):
+    """Exact 64-bit counter as (hi int32, lo uint32) device scalars.
+
+    ``add`` folds in a non-negative per-step count (anything below 2^32 —
+    wave-level counts are bounded by W * C * max_iters << 2^31); the uint32
+    low word wraps naturally and the carry bumps the high word.
+    """
+
+    hi: Array  # () int32 — high 32 bits
+    lo: Array  # () uint32 — low 32 bits
+
+    @classmethod
+    def zero(cls) -> "Counter64":
+        return cls(jnp.zeros((), jnp.int32), jnp.zeros((), jnp.uint32))
+
+    @classmethod
+    def of(cls, value: Union[int, float]) -> "Counter64":
+        """Host-side constructor; floats are truncated (counts are integers)."""
+        v = int(value)
+        if v < 0:
+            raise ValueError(f"Counter64 holds non-negative counts, got {v}")
+        return cls(
+            jnp.asarray(v // _WORD, jnp.int32),
+            jnp.asarray(v % _WORD, jnp.uint32),
+        )
+
+    def add(self, amount: Array) -> "Counter64":
+        """Fold in a traced scalar count (int dtype, 0 <= amount < 2^32)."""
+        amt = jnp.asarray(amount).astype(jnp.uint32)
+        lo = self.lo + amt  # wraps mod 2^32
+        hi = self.hi + (lo < amt).astype(jnp.int32)  # wrapped iff lo < amt
+        return Counter64(hi, lo)
+
+    def to_float(self) -> Array:
+        """Traced float32 view — for monitoring reductions (e.g. the psum in
+        ``core.distributed``) where float rounding is acceptable."""
+        return self.hi.astype(jnp.float32) * jnp.float32(_WORD) + self.lo.astype(
+            jnp.float32
+        )
+
+    # host reads (each is the one device sync, as with any stats leaf)
+    def __int__(self) -> int:
+        return (int(self.hi) << 32) + int(self.lo)
+
+    def __float__(self) -> float:
+        return float(int(self))

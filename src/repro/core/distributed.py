@@ -80,7 +80,9 @@ def wave_step(
     g2, stats = construct_lib.wave_core(
         g, x, pos, key, construct_lib.zero_stats(), cfg, n_real=n_real
     )
-    return g2, stats.n_comps
+    # monitoring-only float view: the cross-shard psum tolerates rounding,
+    # and the per-wave count (< W * C * max_iters) is far below 2^24 anyway
+    return g2, stats.n_comps.to_float()
 
 
 def make_distributed_build_step(

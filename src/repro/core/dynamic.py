@@ -41,7 +41,10 @@ def insert(
 
     ``x`` is the full (capacity, d) data array with the new samples already
     written at their rows (the framework's data region grows append-only,
-    which is also what the sharded serving path assumes).
+    which is also what the sharded serving path assumes).  The insertion
+    waves run the same fused expansion step as the initial build —
+    ``cfg.use_pallas`` selects the kernel/reference path exactly as in
+    ``construct.build``.
     """
     start = int(g.n_valid)
     if key is None:

@@ -22,6 +22,11 @@ LGD-aware expansion (Alg. 3 lines 15/19): neighbors whose occlusion factor λ
 exceeds the mean λ of the expanded row are skipped; for reverse edges the λ
 of the forward twin (r's slot inside G[j]) is looked up.  ``hard_diversify``
 gives the FANNG/DPG-style λ>0 ablation the paper argues against.
+
+The per-iteration hot path (hash probe → candidate-row gather + distance →
+hash record → beam top-k merge) is one fused call, ``kernels.ops
+.expand_step``: a single Pallas kernel on TPU, the XLA-fused pure-JAX
+reference elsewhere — see ``SearchConfig.use_pallas`` for the dispatch.
 """
 
 from __future__ import annotations
@@ -34,15 +39,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import KNNGraph
+from repro.kernels import expand as expand_lib
 from repro.kernels import ops
 
 Array = jax.Array
 
-_KNUTH = jnp.uint32(2654435761)
-
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
+    """Static EHC search configuration.
+
+    ``use_pallas`` selects the execution path of the fused expansion step
+    (``kernels.ops.expand_step`` — one call per EHC iteration covering hash
+    probe, candidate-row gather + distance, hash record, and beam top-k
+    merge).  Three-way dispatch:
+
+      * ``None`` (default): auto — the compiled fused Pallas kernel on TPU,
+        the pure-JAX reference elsewhere (XLA fuses it into the jitted
+        search loop; the fast CPU path);
+      * ``True``: always the fused kernel — compiled on TPU, interpret mode
+        off-TPU (slow, but bit-identical to compiled semantics; what the
+        parity tests sweep);
+      * ``False``: always the pure-JAX reference (``kernels.expand
+        .expand_reference``).
+
+    The same flag also selects the seed-distance gather kernel
+    (``kernels.ops.gather_distance``).
+    """
+
     k: int = 10  # result size; also the improvement-termination horizon
     beam: int = 64  # beam width e >= k
     n_seeds: int = 8  # p random entry points
@@ -71,65 +95,12 @@ class SearchResult(NamedTuple):
     converged: Array  # (B,) bool — False = stopped by max_iters cap
 
 
-def _probe_slots(ids: Array, hash_slots: int, probes: int) -> Array:
-    """(...,) ids -> (..., P) linear-probe slot sequence."""
-    h = (ids.astype(jnp.uint32) * _KNUTH) >> jnp.uint32(16)
-    h = h.astype(jnp.int32) & (hash_slots - 1)
-    return (h[..., None] + jnp.arange(probes, dtype=jnp.int32)) & (hash_slots - 1)
-
-
-def hash_lookup(vis_ids: Array, vis_dist: Array, ids: Array, probes: int) -> tuple[Array, Array]:
-    """Batch lookup ids (B, C) in per-lane tables (B, H).
-
-    Returns (found (B, C) bool, dist (B, C) f32 — +inf where not found).
-    The paper's D[i] with default ∞ (Alg. 3 line 3) is exactly this.
-    """
-    B, H = vis_ids.shape
-    C = ids.shape[1]
-    slots = _probe_slots(ids, H, probes)  # (B, C, P)
-    flat = slots.reshape(B, C * probes)
-    got_ids = jnp.take_along_axis(vis_ids, flat, axis=1).reshape(B, C, probes)
-    got_dist = jnp.take_along_axis(vis_dist, flat, axis=1).reshape(B, C, probes)
-    hit = got_ids == ids[..., None]
-    found = jnp.any(hit, axis=-1)
-    dist = jnp.min(jnp.where(hit, got_dist, jnp.inf), axis=-1)
-    return found, dist
-
-
-def _hash_probe_state(vis_ids: Array, ids: Array, probes: int):
-    """Classify ids against tables: (present, insert_ok, insert_slot)."""
-    B, H = vis_ids.shape
-    C = ids.shape[1]
-    slots = _probe_slots(ids, H, probes)
-    flat = slots.reshape(B, C * probes)
-    got = jnp.take_along_axis(vis_ids, flat, axis=1).reshape(B, C, probes)
-    is_hit = got == ids[..., None]
-    is_empty = got == -1
-    pidx = jnp.arange(probes, dtype=jnp.int32)
-    first_hit = jnp.min(jnp.where(is_hit, pidx, probes), axis=-1)
-    first_empty = jnp.min(jnp.where(is_empty, pidx, probes), axis=-1)
-    present = first_hit < first_empty
-    insert_ok = (~present) & (first_empty < probes)
-    insert_slot = jnp.take_along_axis(
-        slots, jnp.minimum(first_empty, probes - 1)[..., None], axis=-1
-    )[..., 0]
-    return present, insert_ok, insert_slot
-
-
-def _dedupe_beam(ids: Array, dist: Array, exp: Array):
-    """Mask later copies of duplicate beam ids (rows sorted by distance).
-
-    Duplicates are rare — they only arise when a hash insert failed (probe
-    exhaustion) and the same vertex was re-compared later — but they must not
-    survive into results/new graph rows.
-    """
-    dup = jnp.triu((ids[:, None, :] == ids[:, :, None]) & (ids[:, None, :] >= 0), k=1)
-    dup = jnp.any(dup, axis=1)
-    return (
-        jnp.where(dup, -1, ids),
-        jnp.where(dup, jnp.inf, dist),
-        exp | dup,
-    )
+# The hash/beam primitives live next to the fused kernel that consumes them
+# (kernels.expand); these aliases keep the established core-layer surface.
+_probe_slots = expand_lib.probe_slots
+hash_lookup = expand_lib.hash_lookup
+_hash_probe_state = expand_lib.hash_probe_state
+_dedupe_beam = expand_lib.dedupe_beam
 
 
 def _row_mean_lambda(lam_row: Array, ids_row: Array) -> Array:
@@ -196,52 +167,48 @@ def _candidates_from_expansion(
     return cands
 
 
+def _prepare_expansion(
+    g: KNNGraph, st: _LoopState, cfg: SearchConfig
+) -> tuple[Array, Array]:
+    """Select r (closest unexpanded beam entry per lane), mark it expanded,
+    and emit its masked candidate ids.  Returns (cands (B, C), beam_exp)."""
+    B = st.beam_ids.shape[0]
+    sel_dist = jnp.where(st.beam_exp, jnp.inf, st.beam_dist)
+    r_slot = jnp.argmin(sel_dist, axis=1)
+    r_best = jnp.take_along_axis(sel_dist, r_slot[:, None], axis=1)[:, 0]
+    has_r = jnp.isfinite(r_best) & ~st.done
+    r_id = jnp.where(
+        has_r, jnp.take_along_axis(st.beam_ids, r_slot[:, None], axis=1)[:, 0], -1
+    )
+    beam_exp = st.beam_exp.at[jnp.arange(B), r_slot].set(
+        st.beam_exp[jnp.arange(B), r_slot] | has_r
+    )
+    cands = _candidates_from_expansion(g, r_id, has_r, cfg)
+    return cands, beam_exp
+
+
+def _expand(
+    x: Array, q: Array, cands: Array, beam_exp: Array, st: _LoopState,
+    cfg: SearchConfig,
+):
+    """The fused expansion: probe the visited hash, compute surviving
+    distances, record them, merge into the beam.  One ``ops.expand_step``
+    call — Pallas kernel or pure-JAX reference per ``cfg.use_pallas``."""
+    return ops.expand_step(
+        q, x, cands, st.beam_ids, st.beam_dist, beam_exp,
+        st.vis_ids, st.vis_dist,
+        metric=cfg.metric, hash_probes=cfg.hash_probes,
+        use_pallas=cfg.use_pallas,
+    )
+
+
 def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
     def step(st: _LoopState) -> _LoopState:
-        B, e = st.beam_ids.shape
-        # -- select r: closest unexpanded beam entry per lane ----------------
-        sel_dist = jnp.where(st.beam_exp, jnp.inf, st.beam_dist)
-        r_slot = jnp.argmin(sel_dist, axis=1)
-        r_best = jnp.take_along_axis(sel_dist, r_slot[:, None], axis=1)[:, 0]
-        has_r = jnp.isfinite(r_best) & ~st.done
-        r_id = jnp.where(
-            has_r, jnp.take_along_axis(st.beam_ids, r_slot[:, None], axis=1)[:, 0], -1
+        cands, beam_exp = _prepare_expansion(g, st, cfg)
+        beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps = _expand(
+            x, q, cands, beam_exp, st, cfg
         )
-        beam_exp = st.beam_exp.at[jnp.arange(B), r_slot].set(
-            st.beam_exp[jnp.arange(B), r_slot] | has_r
-        )
-        # -- expand ----------------------------------------------------------
-        cands = _candidates_from_expansion(g, r_id, has_r, cfg)
-        present, insert_ok, insert_slot = _hash_probe_state(
-            st.vis_ids, cands, cfg.hash_probes
-        )
-        fresh = (cands >= 0) & ~present  # compare these (probe-full: compare anyway)
-        cand_ids = jnp.where(fresh, cands, -1)
-        dists = ops.gather_distance(
-            q, x, cand_ids, cfg.metric, use_pallas=cfg.use_pallas
-        )  # (B, C) +inf at -1
-        n_comps = st.n_comps + jnp.sum(fresh, axis=1).astype(jnp.int32)
-        # -- record into hash (the D array) -----------------------------------
-        do_ins = fresh & insert_ok
-        B_idx = jnp.broadcast_to(jnp.arange(B)[:, None], cand_ids.shape)
-        slot = jnp.where(do_ins, insert_slot, cfg.hash_slots)  # OOB -> dropped
-        vis_ids = st.vis_ids.at[B_idx, slot].set(
-            jnp.where(do_ins, cand_ids, -1), mode="drop"
-        )
-        vis_dist = st.vis_dist.at[B_idx, slot].set(
-            jnp.where(do_ins, dists, jnp.inf), mode="drop"
-        )
-        # -- beam merge --------------------------------------------------------
-        cat_ids = jnp.concatenate([st.beam_ids, cand_ids], axis=1)
-        cat_dist = jnp.concatenate([st.beam_dist, dists], axis=1)
-        cat_exp = jnp.concatenate(
-            [beam_exp, jnp.zeros_like(cand_ids, bool) | (cand_ids < 0)], axis=1
-        )
-        neg, sel = jax.lax.top_k(-cat_dist, e)
-        beam_ids = jnp.take_along_axis(cat_ids, sel, axis=1)
-        beam_dist = -neg
-        beam_exp = jnp.take_along_axis(cat_exp, sel, axis=1)
-        beam_ids, beam_dist, beam_exp = _dedupe_beam(beam_ids, beam_dist, beam_exp)
+        n_comps = st.n_comps + comps
         # -- convergence: best unexpanded cannot improve current top-k --------
         best_unexp = jnp.min(jnp.where(beam_exp, jnp.inf, beam_dist), axis=1)
         kth = beam_dist[:, cfg.k - 1]
@@ -262,25 +229,16 @@ def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
     return step
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def search(
+def init_state(
     g: KNNGraph,
     x: Array,
     q: Array,
     key: Array,
     cfg: SearchConfig,
-) -> SearchResult:
-    """Batched EHC search of queries q against graph g over dataset x.
-
-    Args:
-      g: the (possibly under-construction) graph.
-      x: (n, d) dataset backing the graph rows.
-      q: (B, d) queries.
-      key: PRNG key for the p random entry points.
-      cfg: static search configuration.
-
-    Returns: SearchResult (top-k per lane + the comparison log).
-    """
+) -> _LoopState:
+    """Pre-loop search state: p random seeds scored, hashed, and merged into
+    an otherwise-empty beam (Alg. 1 line 5).  Public so benchmarks and the
+    expansion parity suite can drive single EHC iterations directly."""
     B = q.shape[0]
     e, H = cfg.beam, cfg.hash_slots
 
@@ -319,7 +277,7 @@ def search(
     beam_dist = -neg
     beam_exp = jnp.take_along_axis(cat_exp, sel, axis=1)
 
-    st = _LoopState(
+    return _LoopState(
         beam_ids=beam_ids,
         beam_dist=beam_dist,
         beam_exp=beam_exp,
@@ -330,6 +288,28 @@ def search(
         done=jnp.zeros((B,), bool),
         it=jnp.zeros((), jnp.int32),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def search(
+    g: KNNGraph,
+    x: Array,
+    q: Array,
+    key: Array,
+    cfg: SearchConfig,
+) -> SearchResult:
+    """Batched EHC search of queries q against graph g over dataset x.
+
+    Args:
+      g: the (possibly under-construction) graph.
+      x: (n, d) dataset backing the graph rows.
+      q: (B, d) queries.
+      key: PRNG key for the p random entry points.
+      cfg: static search configuration.
+
+    Returns: SearchResult (top-k per lane + the comparison log).
+    """
+    st = init_state(g, x, q, key, cfg)
     step = _make_step(g, x, q, cfg)
     st = jax.lax.while_loop(
         lambda s: (~jnp.all(s.done)) & (s.it < cfg.max_iters), step, st

@@ -11,10 +11,14 @@ Kernels:
   * ``distance``    — tiled pairwise distances (MXU GEMM for l2/ip/cosine,
                       VPU strips for l1/chi2).
   * ``gather_dist`` — fused gather+distance with scalar-prefetched candidate
-                      ids and double-buffered HBM→VMEM row DMAs (the EHC
-                      expansion hot loop).
+                      ids and double-buffered HBM→VMEM row DMAs.
+  * ``expand``      — the fused EHC expansion step (Alg. 1/3 inner loop):
+                      candidate-row DMAs + visited-hash probe/record + beam
+                      top-k merge in one kernel, with the bit-identical
+                      pure-jnp ``expand_reference`` beside it
+                      (``ops.expand_step`` is the three-way dispatcher).
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import expand, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["expand", "ops", "ref"]

@@ -1,0 +1,396 @@
+"""Fused EHC expansion step — the hot loop of Alg. 1/3 as ONE Pallas kernel.
+
+One EHC iteration per query lane is: take the candidate ids produced by
+expanding the best unexpanded beam vertex r (``G[r] ∪ Ḡ[r]`` after LGD/alive
+masking), drop the ones the per-query open-addressing hash table (the paper's
+D array) has already seen, compute distances to the survivors, record them
+into the hash, and merge them into the beam top-k.  Unfused, that is ~6
+separate XLA ops per iteration with every intermediate round-tripping HBM;
+here the whole chain runs per query inside one kernel:
+
+  * candidate data rows are moved HBM->VMEM with double-buffered async copies
+    driven by the scalar-prefetched candidate ids (same discipline as
+    ``kernels.gather_dist``, whose ``row_distance`` formula is shared so the
+    two kernels are bit-identical per comparison);
+  * the (1, H) visited-hash rows and the (1, e) beam rows live in VMEM for
+    the whole step — probe, insert, and top-k merge never touch HBM;
+  * one (1, 1) scalar output returns the lane's comparison count (the
+    scanning-rate numerator, Eq. 2).
+
+This module also hosts the *pure-jnp expansion primitives* (probe-slot
+computation, hash probe/lookup, beam dedupe) and ``expand_reference`` — the
+unfused op chain.  Both implementations consume the same helpers; the parity
+suite (``tests/test_expand_parity.py``) pins them bit-identical in interpret
+mode.  Dispatch between them is ``kernels.ops.expand_step``:
+
+  * TPU (``use_pallas`` unset or True): compiled fused kernel;
+  * ``use_pallas=True`` off-TPU: the same kernel, interpret mode (the
+    correctness net the tests sweep);
+  * ``use_pallas=False`` / unset off-TPU: ``expand_reference`` (XLA fuses the
+    whole step into the jitted search loop — the fast CPU path).
+
+Candidate *generation* (graph-row gathers + λ/alive masking,
+``core.search._candidates_from_expansion``) stays outside the kernel: it is a
+handful of dense row gathers XLA already handles well, and keeping it shared
+between both paths means the kernel boundary is exactly the memory-bound
+probe/distance/merge chain the ROADMAP's scanning-rate numbers depend on.
+
+Compiled-mode note: the vector phase leans on in-VMEM gather/scatter and a
+row-wise ``lax.top_k`` — Mosaic support for these lowers with recent JAX; the
+interpret fallback (selected automatically off-TPU) is the portability net.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import compat
+from repro.kernels import gather_dist as _gather_dist
+
+# NOTE: kernels.ref is imported lazily inside expand_reference — ref pulls in
+# core.metrics, and core.search imports this module at class-body time, so a
+# module-level import would close an import cycle through repro.core.
+
+Array = jax.Array
+
+# numpy scalars, not jnp: probe_slots runs inside the fused kernel's trace,
+# where module-level jax Arrays would be captured constants (rejected by
+# pallas_call); numpy scalars fold into the jaxpr as literals.
+_KNUTH = np.uint32(2654435761)
+_SHIFT = np.uint32(16)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp expansion primitives (shared by the kernel and the reference)
+# ---------------------------------------------------------------------------
+
+
+def probe_slots(ids: Array, hash_slots: int, probes: int) -> Array:
+    """(...,) ids -> (..., P) linear-probe slot sequence (Knuth hash)."""
+    h = (ids.astype(jnp.uint32) * _KNUTH) >> _SHIFT
+    h = h.astype(jnp.int32) & (hash_slots - 1)
+    return (h[..., None] + jnp.arange(probes, dtype=jnp.int32)) & (hash_slots - 1)
+
+
+def hash_lookup(
+    vis_ids: Array, vis_dist: Array, ids: Array, probes: int
+) -> tuple[Array, Array]:
+    """Batch lookup ids (B, C) in per-lane tables (B, H).
+
+    Returns (found (B, C) bool, dist (B, C) f32 — +inf where not found).
+    The paper's D[i] with default ∞ (Alg. 3 line 3) is exactly this.
+    """
+    B, H = vis_ids.shape
+    C = ids.shape[1]
+    slots = probe_slots(ids, H, probes)  # (B, C, P)
+    flat = slots.reshape(B, C * probes)
+    got_ids = jnp.take_along_axis(vis_ids, flat, axis=1).reshape(B, C, probes)
+    got_dist = jnp.take_along_axis(vis_dist, flat, axis=1).reshape(B, C, probes)
+    hit = got_ids == ids[..., None]
+    found = jnp.any(hit, axis=-1)
+    dist = jnp.min(jnp.where(hit, got_dist, jnp.inf), axis=-1)
+    return found, dist
+
+
+def hash_probe_state(vis_ids: Array, ids: Array, probes: int):
+    """Classify ids against tables: (present, insert_ok, insert_slot)."""
+    B, H = vis_ids.shape
+    C = ids.shape[1]
+    slots = probe_slots(ids, H, probes)
+    flat = slots.reshape(B, C * probes)
+    got = jnp.take_along_axis(vis_ids, flat, axis=1).reshape(B, C, probes)
+    is_hit = got == ids[..., None]
+    is_empty = got == -1
+    pidx = jnp.arange(probes, dtype=jnp.int32)
+    first_hit = jnp.min(jnp.where(is_hit, pidx, probes), axis=-1)
+    first_empty = jnp.min(jnp.where(is_empty, pidx, probes), axis=-1)
+    present = first_hit < first_empty
+    insert_ok = (~present) & (first_empty < probes)
+    insert_slot = jnp.take_along_axis(
+        slots, jnp.minimum(first_empty, probes - 1)[..., None], axis=-1
+    )[..., 0]
+    return present, insert_ok, insert_slot
+
+
+def dedupe_beam(ids: Array, dist: Array, exp: Array):
+    """Mask later copies of duplicate beam ids (rows sorted by distance).
+
+    Duplicates are rare — they only arise when a hash insert failed (probe
+    exhaustion) and the same vertex was re-compared later — but they must not
+    survive into results/new graph rows.
+    """
+    dup = jnp.triu((ids[:, None, :] == ids[:, :, None]) & (ids[:, None, :] >= 0), k=1)
+    dup = jnp.any(dup, axis=1)
+    return (
+        jnp.where(dup, -1, ids),
+        jnp.where(dup, jnp.inf, dist),
+        exp | dup,
+    )
+
+
+def _probe_mask_record_merge(
+    cands: Array,  # (B, C) candidate ids, -1 masked
+    dists_all: Array,  # (B, C) m(q, cand) for every id >= 0 (rest: anything)
+    beam_ids: Array,  # (B, e)
+    beam_dist: Array,  # (B, e)
+    beam_exp: Array,  # (B, e) bool (r already marked expanded)
+    vis_ids: Array,  # (B, H)
+    vis_dist: Array,  # (B, H)
+    probes: int,
+):
+    """The op chain downstream of the distance gather, shared verbatim by the
+    kernel's vector phase (B=1 blocks) and ``expand_reference`` — one body,
+    two execution sites, zero drift."""
+    B, e = beam_ids.shape
+    H = vis_ids.shape[1]
+    present, insert_ok, insert_slot = hash_probe_state(vis_ids, cands, probes)
+    fresh = (cands >= 0) & ~present  # compare these (probe-full: compare anyway)
+    cand_ids = jnp.where(fresh, cands, -1)
+    dists = jnp.where(fresh, dists_all, jnp.inf)
+    comps = jnp.sum(fresh, axis=1).astype(jnp.int32)
+    # -- record into the hash (the D array) ----------------------------------
+    do_ins = fresh & insert_ok
+    B_idx = jnp.broadcast_to(jnp.arange(B)[:, None], cand_ids.shape)
+    slot = jnp.where(do_ins, insert_slot, H)  # OOB -> dropped
+    vis_ids = vis_ids.at[B_idx, slot].set(
+        jnp.where(do_ins, cand_ids, -1), mode="drop"
+    )
+    vis_dist = vis_dist.at[B_idx, slot].set(
+        jnp.where(do_ins, dists, jnp.inf), mode="drop"
+    )
+    # -- beam merge ----------------------------------------------------------
+    cat_ids = jnp.concatenate([beam_ids, cand_ids], axis=1)
+    cat_dist = jnp.concatenate([beam_dist, dists], axis=1)
+    cat_exp = jnp.concatenate(
+        [beam_exp, jnp.zeros_like(cand_ids, bool) | (cand_ids < 0)], axis=1
+    )
+    neg, sel = jax.lax.top_k(-cat_dist, e)
+    beam_ids = jnp.take_along_axis(cat_ids, sel, axis=1)
+    beam_dist = -neg
+    beam_exp = jnp.take_along_axis(cat_exp, sel, axis=1)
+    beam_ids, beam_dist, beam_exp = dedupe_beam(beam_ids, beam_dist, beam_exp)
+    return beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps
+
+
+# ---------------------------------------------------------------------------
+# Unfused reference (the pre-fusion op chain)
+# ---------------------------------------------------------------------------
+
+
+def expand_reference(
+    q: Array,  # (B, d) queries
+    x: Array,  # (n, d) dataset
+    cands: Array,  # (B, C) masked candidate ids (-1 = skip)
+    beam_ids: Array,  # (B, e)
+    beam_dist: Array,  # (B, e) f32
+    beam_exp: Array,  # (B, e) bool
+    vis_ids: Array,  # (B, H)
+    vis_dist: Array,  # (B, H) f32
+    *,
+    metric: str = "l2",
+    probes: int = 8,
+    pallas_distances: bool = False,
+    interpret: bool = True,
+):
+    """Unfused EHC expansion: probe -> gather-distance -> record -> merge.
+
+    With ``pallas_distances=False`` (default) this is the pure-JAX execution
+    path — XLA fuses it into the surrounding jitted search loop.  With
+    ``pallas_distances=True`` the distance gather runs the
+    ``kernels.gather_dist`` Pallas kernel instead, giving the exact per-row
+    numerics of the fused kernel — that variant is what the parity suite
+    diffs ``fused_expand`` against bit-for-bit.
+    """
+    present, _, _ = hash_probe_state(vis_ids, cands, probes)
+    fresh = (cands >= 0) & ~present
+    cand_ids = jnp.where(fresh, cands, -1)
+    if pallas_distances:
+        dists = _gather_dist.gather_distance(
+            q, x, cand_ids, metric=metric, interpret=interpret
+        )
+    else:
+        from repro.kernels import ref as _ref  # lazy: see module note
+
+        dists = _ref.gather_distance(q, x, cand_ids, metric)
+    return _probe_mask_record_merge(
+        cands, dists, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, probes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_expand_kernel(
+    idx_ref,  # (B, C) int32, SMEM (scalar prefetch) — drives the row DMAs
+    cand_ref,  # (1, C) int32 VMEM — same ids, vector phase operand
+    q_ref,  # (1, d) VMEM
+    bi_ref,  # (1, e) int32 beam ids
+    bd_ref,  # (1, e) f32 beam dists
+    be_ref,  # (1, e) int32 beam expanded flags (bool cast at the boundary)
+    vi_ref,  # (1, H) int32 visited-hash ids
+    vd_ref,  # (1, H) f32 visited-hash dists
+    x_ref,  # (n, d) ANY (HBM)
+    obi_ref,  # (1, e) int32 out
+    obd_ref,  # (1, e) f32 out
+    obe_ref,  # (1, e) int32 out
+    ovi_ref,  # (1, H) int32 out
+    ovd_ref,  # (1, H) f32 out
+    oc_ref,  # (1, 1) int32 out — comparisons charged this step
+    dist_buf,  # (1, C) f32 VMEM scratch
+    row_buf,  # (2, 1, d) VMEM scratch (double buffer)
+    sems,  # (2,) DMA semaphores
+    *,
+    n_cand: int,
+    metric: str,
+    probes: int,
+):
+    b = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+
+    # -- phase 1: candidate rows HBM->VMEM, distances into dist_buf ----------
+    # Identical double-buffering discipline (and row_distance formula) to
+    # kernels.gather_dist: slot (c+1) % 2 is in flight while c % 2 reduces.
+    # Distances are computed for every id >= 0 and masked against the hash in
+    # the vector phase — trading a few discarded reductions for a DMA loop
+    # with no data-dependent control flow.  Counted comps (phase 2) only
+    # charge fresh candidates, matching the unfused path.
+    def start_fetch(c, slot):
+        rid = jnp.maximum(idx_ref[b, c], 0)
+        compat.make_async_copy(
+            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
+        ).start()
+
+    def wait_fetch(c, slot):
+        rid = jnp.maximum(idx_ref[b, c], 0)
+        compat.make_async_copy(
+            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
+        ).wait()
+
+    start_fetch(0, 0)
+
+    def body(c, _):
+        slot = jax.lax.rem(c, 2)
+
+        @pl.when(c + 1 < n_cand)
+        def _prefetch_next():
+            start_fetch(c + 1, jax.lax.rem(c + 1, 2))
+
+        wait_fetch(c, slot)
+        row = row_buf[slot].astype(jnp.float32)  # (1, d)
+        dist = _gather_dist.row_distance(q, row, metric)
+        dist_buf[0, c] = jnp.where(idx_ref[b, c] >= 0, dist, jnp.inf)
+        return ()
+
+    jax.lax.fori_loop(0, n_cand, body, (), unroll=False)
+
+    # -- phase 2: probe / record / merge, all VMEM-resident ------------------
+    beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps = (
+        _probe_mask_record_merge(
+            cand_ref[...],
+            dist_buf[...],
+            bi_ref[...],
+            bd_ref[...],
+            be_ref[...] > 0,
+            vi_ref[...],
+            vd_ref[...],
+            probes,
+        )
+    )
+    obi_ref[...] = beam_ids
+    obd_ref[...] = beam_dist
+    obe_ref[...] = beam_exp.astype(jnp.int32)
+    ovi_ref[...] = vis_ids
+    ovd_ref[...] = vis_dist
+    oc_ref[0, 0] = comps[0]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "probes", "interpret"))
+def fused_expand(
+    q: Array,
+    x: Array,
+    cands: Array,
+    beam_ids: Array,
+    beam_dist: Array,
+    beam_exp: Array,
+    vis_ids: Array,
+    vis_dist: Array,
+    *,
+    metric: str = "l2",
+    probes: int = 8,
+    interpret: bool = True,
+):
+    """One fused EHC expansion step for a batch of queries.
+
+    Same signature and return contract as ``expand_reference``:
+    (beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps (B,) int32).
+    """
+    if metric == "cosine":
+        # Pre-normalize once (exactly as kernels.gather_dist does) and let the
+        # kernel apply the 1 - <q, x> step per row.
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        return fused_expand(
+            qn, xn, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
+            metric="cos", probes=probes, interpret=interpret,
+        )
+
+    B, d = q.shape
+    C = cands.shape[1]
+    e = beam_ids.shape[1]
+    H = vis_ids.shape[1]
+    kern = functools.partial(
+        _fused_expand_kernel, n_cand=C, metric=metric, probes=probes
+    )
+    row = lambda w: pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0))
+    grid_spec = compat.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            row(C),  # cands (vector phase)
+            row(d),  # q
+            row(e),  # beam_ids
+            row(e),  # beam_dist
+            row(e),  # beam_exp
+            row(H),  # vis_ids
+            row(H),  # vis_dist
+            pl.BlockSpec(memory_space=compat.ANY),  # x
+        ],
+        out_specs=[row(e), row(e), row(e), row(H), row(H), row(1)],
+        scratch_shapes=[
+            compat.VMEM((1, C), jnp.float32),
+            compat.VMEM((2, 1, d), jnp.float32),
+            compat.SemaphoreType.DMA((2,)),
+        ],
+    )
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, e), jnp.int32),
+            jax.ShapeDtypeStruct((B, e), jnp.float32),
+            jax.ShapeDtypeStruct((B, e), jnp.int32),
+            jax.ShapeDtypeStruct((B, H), jnp.int32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        cands.astype(jnp.int32),
+        cands.astype(jnp.int32),
+        q,
+        beam_ids,
+        beam_dist,
+        beam_exp.astype(jnp.int32),
+        vis_ids,
+        vis_dist,
+        x,
+    )
+    bi, bd, be, vi, vd, comps = outs
+    return bi, bd, be > 0, vi, vd, comps[:, 0]

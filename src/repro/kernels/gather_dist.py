@@ -35,6 +35,33 @@ from repro.kernels import compat
 Array = jax.Array
 
 
+def row_distance(q, row, metric: str):
+    """Distance between one query and one candidate row, both (1, d) f32.
+
+    The single in-kernel distance formula shared by this kernel and the fused
+    expansion kernel (``kernels.expand``) — keeping it in one place is what
+    makes the two bit-identical, which the expansion parity suite pins.
+    ``"dot"`` is the raw inner product (cosine pre-normalizes and finishes
+    outside); ``"cos"`` is the fused-kernel variant that applies the
+    ``1 - <q, x>`` step in place.
+    """
+    if metric == "l2":
+        diff = q - row
+        return jnp.sum(diff * diff)
+    if metric in ("ip", "dot"):
+        dist = jnp.sum(q * row)
+        return -dist if metric == "ip" else dist
+    if metric == "cos":
+        return 1.0 - jnp.sum(q * row)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(q - row))
+    if metric == "chi2":
+        num = (q - row) ** 2
+        den = q + row
+        return jnp.sum(jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), 0.0))
+    raise KeyError(metric)
+
+
 def _gather_dist_kernel(
     idx_ref,  # (B, C) int32, SMEM (scalar prefetch)
     q_ref,  # (1, d) VMEM
@@ -75,21 +102,7 @@ def _gather_dist_kernel(
 
         wait_fetch(c, slot)
         row = row_buf[slot].astype(jnp.float32)  # (1, d)
-        if metric == "l2":
-            diff = q - row
-            dist = jnp.sum(diff * diff)
-        elif metric in ("ip", "dot"):
-            dist = jnp.sum(q * row)
-            if metric == "ip":
-                dist = -dist
-        elif metric == "l1":
-            dist = jnp.sum(jnp.abs(q - row))
-        elif metric == "chi2":
-            num = (q - row) ** 2
-            den = q + row
-            dist = jnp.sum(jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), 0.0))
-        else:
-            raise KeyError(metric)
+        dist = row_distance(q, row, metric)
         valid = idx_ref[b, c] >= 0
         o_ref[0, c] = jnp.where(valid, dist, jnp.inf)
         return ()
@@ -135,6 +148,4 @@ def gather_distance(
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
         interpret=interpret,
     )(idx.astype(jnp.int32), q, x)
-    if metric == "dot":
-        return out  # caller (cosine path) applies masking itself
-    return out
+    return out  # "dot" callers (the cosine path) apply masking themselves

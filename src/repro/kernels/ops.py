@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import compat
 from repro.kernels import distance as _distance
+from repro.kernels import expand as _expand
 from repro.kernels import gather_dist as _gather_dist
 from repro.kernels import ref as _ref
 
@@ -65,3 +66,46 @@ def gather_distance(
 def topk_smallest(dists: Array, ids: Array, k: int):
     """Row-wise smallest-k selection; see ref.topk_smallest."""
     return _ref.topk_smallest(dists, ids, k)
+
+
+def expand_step(
+    q: Array,
+    x: Array,
+    cands: Array,
+    beam_ids: Array,
+    beam_dist: Array,
+    beam_exp: Array,
+    vis_ids: Array,
+    vis_dist: Array,
+    *,
+    metric: str = "l2",
+    hash_probes: int = 8,
+    use_pallas: Optional[bool] = None,
+):
+    """One EHC expansion step (Alg. 1/3 inner loop) for a batch of queries.
+
+    Given masked candidate ids (``core.search._candidates_from_expansion``
+    output), dedups them against the per-query visited hash, computes the
+    surviving distances, records them into the hash, and merges them into the
+    beam top-k.  Returns
+    ``(beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps)``.
+
+    Three-way dispatch (the policy ``SearchConfig.use_pallas`` documents):
+      * on TPU (``use_pallas`` None or True): the compiled fused Pallas
+        kernel (``kernels.expand.fused_expand``);
+      * ``use_pallas=True`` off-TPU: the same kernel in interpret mode (what
+        the parity/correctness tests sweep);
+      * otherwise: ``kernels.expand.expand_reference``, the pure-JAX op chain
+        XLA fuses into the surrounding jitted search loop.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _expand.fused_expand(
+            q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
+            metric=metric, probes=hash_probes, interpret=not _on_tpu(),
+        )
+    return _expand.expand_reference(
+        q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
+        metric=metric, probes=hash_probes,
+    )

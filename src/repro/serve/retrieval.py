@@ -49,10 +49,18 @@ def build_index(
     capacity: Optional[int] = None,
     key: Optional[Array] = None,
     beam: int = 40,
+    use_pallas: Optional[bool] = None,
 ) -> RetrievalIndex:
-    """Index a candidate bank with online LGD construction."""
+    """Index a candidate bank with online LGD construction.
+
+    ``use_pallas`` follows the three-way dispatch of ``SearchConfig``: the
+    default ``None`` rides the fused Pallas expansion kernel on TPU and the
+    pure-JAX reference elsewhere; the choice is stored in ``build_cfg`` so
+    serving (``retrieve``) and catalog churn (``add_items``, via
+    ``dynamic.insert``) run the same path as the build.
+    """
     cfg = construct.BuildConfig(
-        k=k, metric=metric, wave=wave, lgd=True, beam=beam, use_pallas=False
+        k=k, metric=metric, wave=wave, lgd=True, beam=beam, use_pallas=use_pallas
     )
     n = items.shape[0]
     cap = capacity or n
@@ -85,7 +93,7 @@ def retrieve(
         beam=max(beam or 2 * top_k, top_k),
         metric=index.metric,
         use_lgd_mask=True,
-        use_pallas=False,
+        use_pallas=index.build_cfg.use_pallas,  # serve on the build's kernel path
     )
     res = search_lib.search(index.graph, index.items, interests, key, scfg)
     ids = res.ids.reshape(-1)

@@ -1,0 +1,94 @@
+"""Counter64 / BuildStats counter-exactness regression tests.
+
+The bug class being pinned: float32 accumulation stalls at 2^24 (adding 1 to
+16777216.0 returns 16777216.0), which silently froze ``BuildStats.n_comps``
+on production-scale builds.  ``Counter64`` must keep exact counts across the
+float32 limit and across the uint32 word boundary, under jit and inside
+lax-loop carries (how the build loop actually uses it).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import construct
+from repro.core.counters import Counter64
+
+
+class TestCounter64:
+    def test_float32_actually_loses_counts(self):
+        """Documents the failure mode this type exists to fix."""
+        c = jnp.float32(2**24)
+        assert float(c + 1.0) == float(c)  # the old BuildStats behavior
+
+    def test_exact_past_float32_limit(self):
+        c = Counter64.of(2**24)
+        for _ in range(5):
+            c = c.add(jnp.asarray(1, jnp.int32))
+        assert int(c) == 2**24 + 5
+
+    def test_carry_across_word_boundary(self):
+        c = Counter64.of(2**32 - 3)
+        c = c.add(jnp.asarray(10, jnp.int32))
+        assert int(c) == 2**32 + 7
+
+    def test_large_single_increments(self):
+        c = Counter64.zero()
+        big = np.uint32(2**31 + 12345)  # > int32 range, < 2^32
+        c = c.add(jnp.asarray(big, jnp.uint32))
+        c = c.add(jnp.asarray(big, jnp.uint32))
+        assert int(c) == 2 * (2**31 + 12345)
+
+    def test_fold_inside_jitted_loop(self):
+        """The build-loop usage pattern: a lax.fori_loop carry under jit."""
+
+        @jax.jit
+        def fold(c0):
+            def body(_, c):
+                return c.add(jnp.asarray(3, jnp.int32))
+
+            return jax.lax.fori_loop(0, 1000, body, c0)
+
+        c = fold(Counter64.of(2**32 - 1500))
+        assert int(c) == 2**32 - 1500 + 3000
+
+    def test_of_round_trip_and_views(self):
+        v = (7 << 32) + 123456789
+        c = Counter64.of(v)
+        assert int(c) == v
+        assert float(c) == float(v)
+        np.testing.assert_allclose(float(c.to_float()), float(v), rtol=1e-7)
+
+    def test_rejects_negative(self):
+        with pytest.raises(ValueError):
+            Counter64.of(-1)
+
+    def test_is_a_pytree_of_arrays(self):
+        leaves = jax.tree.leaves(Counter64.of(42))
+        assert len(leaves) == 2
+        assert all(isinstance(l, jax.Array) for l in leaves)
+
+
+class TestBuildStatsCounters:
+    def test_zero_stats_prefill_exact(self):
+        stats = construct.zero_stats(2**24 + 1)
+        assert int(stats.n_comps) == 2**24 + 1  # float32 would round this
+
+    def test_scanning_rate_reads_counter(self):
+        stats = construct.zero_stats(4950)  # 100 * 99 / 2
+        assert construct.scanning_rate(stats, 100) == pytest.approx(1.0)
+
+    def test_build_counts_survive_donated_carry(self):
+        """A real (tiny) build: counters fold across jitted wave steps."""
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.rand(400, 4).astype(np.float32))
+        cfg = construct.BuildConfig(
+            k=8, wave=64, lgd=False, beam=16, n_seeds=4, hash_slots=512,
+            max_iters=16,
+        )
+        _, stats = construct.build(x, cfg, jax.random.PRNGKey(0))
+        n_seed = 256 * 255 // 2
+        assert int(stats.n_comps) > n_seed  # seed charge + wave comps
+        assert int(stats.n_inserted_edges) > 0
+        assert int(stats.n_waves) == (400 - 256 + 63) // 64

@@ -148,12 +148,13 @@ class TestCallbackStride:
             construct.build(data[:512], cfg, callback_stride=0)
 
     def test_stats_are_device_side(self, data):
-        """No host round trip is forced on the caller: stats leaves are
-        jax Arrays (syncing is the caller's choice, once, at the end)."""
+        """No host round trip is forced on the caller: every stats pytree
+        leaf is a jax Array (syncing is the caller's choice, once, at the
+        end — ``Counter64`` fields sync only when read via int()/float())."""
         cfg = construct.BuildConfig(
             k=K, wave=128, lgd=False, beam=16, n_seeds=4, hash_slots=512,
             max_iters=16,
         )
         _, stats = construct.build(data[:640], cfg, jax.random.PRNGKey(0))
-        for leaf in stats:
+        for leaf in jax.tree.leaves(stats):
             assert isinstance(leaf, jax.Array), type(leaf)
