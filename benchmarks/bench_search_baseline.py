@@ -15,22 +15,26 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.core import brute, nndescent
 from repro.core import search as search_lib
-from repro.core.graph import KNNGraph, rebuild_reverse
+from repro.core.graph import KNNGraph, rebuild_reverse, squared_norms
 
 
 def true_graph(x, k: int, metric: str) -> KNNGraph:
     n = x.shape[0]
+    sq = squared_norms(x)
     ids, dists = brute.brute_force_knn(
-        x, x, k, metric, exclude_ids=jnp.arange(n, dtype=jnp.int32), use_pallas=False
+        x, x, k, metric, exclude_ids=jnp.arange(n, dtype=jnp.int32),
+        use_pallas=False, sq_norms=sq,
     )
     g = KNNGraph(
         nbr_ids=ids,
         nbr_dist=dists,
         nbr_lam=jnp.zeros_like(ids),
         rev_ids=jnp.full((n, 2 * k), -1, jnp.int32),
+        rev_lam=jnp.zeros((n, 2 * k), jnp.int32),
         rev_ptr=jnp.zeros((n,), jnp.int32),
         alive=jnp.ones((n,), bool),
         n_valid=jnp.asarray(n, jnp.int32),
+        sq_norms=sq,
     )
     return rebuild_reverse(g)
 

@@ -9,7 +9,11 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
     (bench_construction.quality_gate); drops mean the construction path
     regressed;
   * ``expansion_speedup_min`` — fused-vs-unfused EHC expansion throughput
-    (bench_search.expansion_bench); drops mean the fused step lost its edge.
+    (bench_search.expansion_bench); drops mean the fused step lost its edge;
+  * ``gather_engine_speedup_min`` — blocked (norms-decomposed) vs rowwise
+    gather-distance at d=256/C=512 (bench_search.gather_engine_bench); drops
+    mean the blocked MXU engine lost its edge over the per-row formula it
+    replaced.
 
 Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
 BENCH_ci.json artifact is uploaded either way so regressions come with data.
@@ -37,6 +41,12 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
     results.append(
         ("expansion_speedup", spd, float(baseline["expansion_speedup_min"]),
          spd >= float(baseline["expansion_speedup_min"]))
+    )
+    gspd = float(bench["gather_engine"]["gated"]["speedup"])
+    results.append(
+        ("gather_engine_speedup", gspd,
+         float(baseline["gather_engine_speedup_min"]),
+         gspd >= float(baseline["gather_engine_speedup_min"]))
     )
     return results
 

@@ -86,6 +86,31 @@ def render_expansion(rec: dict) -> str:
     return "\n".join(rows)
 
 
+def render_gather_engine(rec: dict) -> str:
+    """Blocked-vs-rowwise gather-distance table (bench_search
+    .gather_engine_bench records): the norms-decomposed GEMM engine against
+    the per-row difference reduction it replaced, across d x C.  The blocked
+    engine's flops are the same order — the win is doing them in GEMM shape
+    (MXU-eligible, one reduction pass per block) with the ‖x‖² term served
+    from the graph-resident cache instead of re-reduced per candidate."""
+    rows = [
+        "### Gather-distance engine: blocked (norms decomposition) vs rowwise",
+        "| d | C | blocked | rowwise | speedup |",
+        "|" + "---|" * 5,
+    ]
+    for r in rec["records"]:
+        rows.append(
+            f"| {r['d']} | {r['C']} | {fmt_t(r['t_blocked_s'])} "
+            f"| {fmt_t(r['t_rowwise_s'])} | {r['speedup']:.2f}x |"
+        )
+    g = rec["gated"]
+    rows.append(
+        f"\nGated record (d={g['d']}, C={g['C']}): "
+        f"{g['speedup']:.2f}x blocked-vs-rowwise."
+    )
+    return "\n".join(rows)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.json"
     with open(path) as f:
@@ -95,6 +120,9 @@ def main():
         if "expansion_wave" in records:
             print()
             print(render_expansion(records["expansion_wave"]))
+        if "gather_engine" in records:
+            print()
+            print(render_gather_engine(records["gather_engine"]))
         return
     print(render(records))
 

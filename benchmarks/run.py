@@ -57,14 +57,17 @@ def main():
 
     if args.ci_out:
         # gate metrics run at their FIXED canonical shapes (n=5k/d=20 for the
-        # expansion kernel, n=2k/d=20 for build quality), independent of --n,
-        # so the committed baseline stays comparable across runs
+        # expansion kernel, n=2k/d=20 for build quality, n=8192 with
+        # d∈{16,64,256} x C∈{32,128,512} for the distance engine),
+        # independent of --n, so the committed baseline stays comparable
         expansion = bench_search.run_expansion()
         quality = bench_construction.quality_gate()
+        gather_engine = bench_search.run_gather_engine()
         payload = {
             "expansion": expansion[16],  # serving batch — the gated record
             "expansion_wave": expansion[256],  # construction wave — recorded
             "quality": quality,
+            "gather_engine": gather_engine,  # blocked-vs-rowwise (gated)
             "sections": {
                 name: t.records()
                 for name, t in tables.items()

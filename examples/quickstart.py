@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import BuildConfig, SearchConfig, brute, build, dynamic, search
-from repro.core.graph import empty_graph
+from repro.core.graph import grow_graph
 from repro.data import synthetic
 
 N, D, K = 5000, 32, 10
@@ -51,16 +51,8 @@ def main():
 
     # -- 3. dynamic updates ----------------------------------------------------
     extra = synthetic.clustered(jax.random.PRNGKey(9), 500, D)
-    grown = empty_graph(N + 500, K, g.rev_capacity)
-    grown = grown._replace(
-        nbr_ids=grown.nbr_ids.at[:N].set(g.nbr_ids),
-        nbr_dist=grown.nbr_dist.at[:N].set(g.nbr_dist),
-        nbr_lam=grown.nbr_lam.at[:N].set(g.nbr_lam),
-        rev_ids=grown.rev_ids.at[:N].set(g.rev_ids),
-        rev_ptr=grown.rev_ptr.at[:N].set(g.rev_ptr),
-        alive=grown.alive.at[:N].set(True),
-        n_valid=jnp.asarray(N, jnp.int32),
-    )
+    # grow_graph carries every field — incl. the ‖x‖² cache — forward
+    grown = grow_graph(g, N + 500)
     x2 = jnp.concatenate([x, extra])
     g2, _ = dynamic.insert(grown, x2, 500, cfg, jax.random.PRNGKey(2))
     print(f"inserted 500 new samples online -> n_valid={int(g2.n_valid)}")

@@ -434,9 +434,11 @@ def _knn_plan(arch: str, shape: str, mesh: Mesh, mod) -> CellPlan:
         nbr_dist=SDS((n_total, cfg.k), jnp.float32),
         nbr_lam=SDS((n_total, cfg.k), jnp.int32),
         rev_ids=SDS((n_total, R), jnp.int32),
+        rev_lam=SDS((n_total, R), jnp.int32),
         rev_ptr=SDS((n_total,), jnp.int32),
         alive=SDS((n_total,), jnp.bool_),
         n_valid=SDS((), jnp.int32),
+        sq_norms=SDS((n_total,), jnp.float32),
     )
     g_sh = _ns(mesh, dist.graph_pspec(fa))
     x_dtype = jnp.bfloat16 if getattr(cfg, "data_bf16", False) else jnp.float32

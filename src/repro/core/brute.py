@@ -36,6 +36,7 @@ def brute_force_knn(
     n_valid: Optional[Array] = None,
     tile: int = 8192,
     use_pallas: Optional[bool] = None,
+    sq_norms: Optional[Array] = None,
 ):
     """Exact top-k nearest neighbors of q among rows of x.
 
@@ -46,6 +47,9 @@ def brute_force_knn(
       exclude_ids: optional (m,) id per query to exclude (self-match when the
         queries are dataset rows).
       n_valid: optional scalar — only rows [0, n_valid) participate.
+      sq_norms: optional (n,) cached ``‖x‖²`` (the graph-resident norm
+        cache); each x tile's norms ride along to the distance engine
+        instead of being re-reduced per tile.
 
     Returns:
       ids (m, k) int32, dists (m, k) float32 sorted ascending.
@@ -56,6 +60,9 @@ def brute_force_knn(
     ntiles = -(-n // tile)
     npad = ntiles * tile
     xp = jnp.pad(x, ((0, npad - n), (0, 0)))
+    snp = None if sq_norms is None else jnp.pad(
+        sq_norms.astype(jnp.float32), (0, npad - n)
+    )
     if n_valid is None:
         n_valid = jnp.asarray(n, jnp.int32)
 
@@ -65,7 +72,12 @@ def brute_force_knn(
     def body(t, carry):
         best_d, best_i = carry
         xt = jax.lax.dynamic_slice_in_dim(xp, t * tile, tile, 0)
-        dt = ops.pairwise_distance(q, xt, metric, use_pallas=use_pallas)
+        xn_t = None if snp is None else jax.lax.dynamic_slice_in_dim(
+            snp, t * tile, tile, 0
+        )
+        dt = ops.pairwise_distance(
+            q, xt, metric, use_pallas=use_pallas, x_sq_norms=xn_t
+        )
         ids = t * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
         mask = (ids < n_valid)
         if exclude_ids is not None:
@@ -98,6 +110,7 @@ def exact_seed_graph(
         capacity = x.shape[0]
     g = graph_lib.empty_graph(capacity, k, rev_capacity)
     seeds = x[:n_seed]
+    seed_sq = graph_lib.squared_norms(seeds)  # seeds the graph norm cache
     ids, dists = brute_force_knn(
         seeds,
         seeds,
@@ -105,6 +118,7 @@ def exact_seed_graph(
         metric,
         exclude_ids=jnp.arange(n_seed, dtype=jnp.int32),
         use_pallas=use_pallas,
+        sq_norms=seed_sq,
     )
     kk = ids.shape[1]
     nbr_ids = g.nbr_ids.at[:n_seed, :kk].set(ids)
@@ -114,6 +128,7 @@ def exact_seed_graph(
         nbr_dist=nbr_dist,
         alive=g.alive.at[:n_seed].set(True),
         n_valid=jnp.asarray(n_seed, jnp.int32),
+        sq_norms=g.sq_norms.at[:n_seed].set(seed_sq),
     )
     return graph_lib.rebuild_reverse(g)
 

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.core import brute, merge
 from repro.core import search as search_lib
 from repro.core.counters import Counter64
-from repro.core.graph import KNNGraph
+from repro.core.graph import KNNGraph, squared_norms
 from repro.core.search import SearchConfig
 from repro.kernels import compat, ops
 
@@ -139,11 +139,18 @@ def commit_wave(
     q_ids = q_start + lanes
     q_mask = lanes < n_real
     xq = x[jnp.minimum(q_ids, cap - 1)]
+    # wave-row ‖x‖²: computed ONCE here, reused by the intra-wave tile and
+    # written into the graph-resident norm cache at commit (step 4) — the
+    # cache's incremental maintenance point for insertions
+    xq_sq = squared_norms(xq)
 
     # ---- 1. new-row lists: search results ‖ intra-wave candidates ----------
     new_ids, new_dist = res.ids, res.dists
     if cfg.intra_wave and W > 1:
-        tile = ops.pairwise_distance(xq, xq, cfg.metric, use_pallas=cfg.use_pallas)
+        tile = ops.pairwise_distance(
+            xq, xq, cfg.metric, use_pallas=cfg.use_pallas,
+            x_sq_norms=xq_sq if cfg.metric == "l2" else None,
+        )
         off = ~(q_mask[None, :] & q_mask[:, None]) | jnp.eye(W, dtype=bool)
         tile = jnp.where(off, jnp.inf, tile)
         wave_ids = jnp.broadcast_to(q_ids[None, :], (W, W))
@@ -221,16 +228,25 @@ def commit_wave(
     nbr_lam = m_lam.at[safe_q].set(
         jnp.where(q_mask[:, None], 0, m_lam[safe_q])  # λ init 0 on join (Alg. 3)
     )
+    sq_norms = g.sq_norms.at[safe_q].set(
+        jnp.where(q_mask, xq_sq, g.sq_norms[safe_q])  # norm-cache maintenance
+    )
 
     # ---- 5. reverse-list appends --------------------------------------------
     # (a) new rows list their members; (b) inserted queries join target rows.
+    # rev_lam snapshots the forward twin's λ at append time: 0 for (a) — new
+    # rows join with λ = 0 (Alg. 3) — and the Rule-2 λ(q) for (b).
     own_a = jnp.broadcast_to(q_ids[:, None], (W, k)).reshape(-1)
     mem_a = jnp.where(q_mask[:, None], new_ids, -1).reshape(-1)
     own_b = jnp.where(inserted, v_flat, -1)
     mem_b = jnp.where(inserted, q_flat, -1)
     owners = jnp.concatenate([own_a, own_b])
     members = jnp.concatenate([mem_a, mem_b])
-    rev_ids, rev_ptr = merge.append_reverse(g.rev_ids, g.rev_ptr, owners, members)
+    lam_b = jnp.where(inserted, lam_q, 0) if cfg.lgd else jnp.zeros_like(own_b)
+    lams = jnp.concatenate([jnp.zeros_like(own_a), lam_b])
+    rev_ids, rev_lam, rev_ptr = merge.append_reverse(
+        g.rev_ids, g.rev_lam, g.rev_ptr, owners, members, lams
+    )
 
     alive = g.alive.at[safe_q].set(q_mask | g.alive[safe_q])
     n_valid = jnp.minimum(g.n_valid + n_real, cap).astype(jnp.int32)
@@ -239,9 +255,11 @@ def commit_wave(
         nbr_dist=nbr_dist,
         nbr_lam=nbr_lam,
         rev_ids=rev_ids,
+        rev_lam=rev_lam,
         rev_ptr=rev_ptr,
         alive=alive,
         n_valid=n_valid,
+        sq_norms=sq_norms,
     )
     return g2, mres.n_inserted
 

@@ -57,9 +57,11 @@ def graph_pspec(axes) -> KNNGraph:
         nbr_dist=P(axes, None),
         nbr_lam=P(axes, None),
         rev_ids=P(axes, None),
+        rev_lam=P(axes, None),
         rev_ptr=P(axes),
         alive=P(axes),
         n_valid=P(),
+        sq_norms=P(axes),
     )
 
 

@@ -124,10 +124,13 @@ def remove(
     nbr_dist = nbr_dist.at[rid].set(jnp.inf)
     nbr_lam2 = nbr_lam2.at[rid].set(0)
 
-    # purge from reverse lists (ring buffers keep their ptr; holes are -1)
+    # purge from reverse lists (ring buffers keep their ptr; holes are -1);
+    # the rev_lam snapshots travel with their edges
     rev_hit = jnp.where(g.rev_ids >= 0, removed[jnp.maximum(g.rev_ids, 0)], False)
     rev_ids = jnp.where(rev_hit, -1, g.rev_ids)
     rev_ids = rev_ids.at[rid].set(-1)
+    rev_lam = jnp.where(rev_hit, 0, g.rev_lam)
+    rev_lam = rev_lam.at[rid].set(0)
     rev_ptr = g.rev_ptr.at[rid].set(0)
 
     alive = g.alive.at[rid].set(False)
@@ -136,7 +139,10 @@ def remove(
         nbr_dist=nbr_dist,
         nbr_lam=nbr_lam2,
         rev_ids=rev_ids,
+        rev_lam=rev_lam,
         rev_ptr=rev_ptr,
         alive=alive,
         n_valid=g.n_valid,
+        # norm-cache invariant: removed rows drop back to 0
+        sq_norms=jnp.where(removed, 0.0, g.sq_norms),
     )

@@ -18,6 +18,20 @@ as vectorized gathers/scatters:
   candidates during search, never as correctness hazards.
 * ``alive``: removal support (§IV-C) — dead rows are masked out of search
   rather than compacted, matching the paper's O(1)-ish delete.
+* ``sq_norms``: (cap,) graph-resident cache of ``‖x_i‖²`` backing the blocked
+  MXU distance engine (``‖q‖² + ‖x‖² − 2 q·x``).  Invariant: valid for every
+  allocated row, 0 for unallocated/removed rows.  Owners: ``brute
+  .exact_seed_graph`` (seed rows), ``construct.commit_wave`` (wave rows),
+  ``dynamic.remove`` (zeroes victims); hand-built graphs attach it with
+  ``attach_sq_norms``.  No search/construction path recomputes norms per
+  iteration.
+* ``rev_lam``: (cap, R) snapshot of the forward twin's λ for each reverse
+  edge — Ḡ[i] entry j means i ∈ G[j], and ``rev_lam[i, slot]`` is λ of i
+  inside G[j] at append/rebuild time.  Search's LGD reverse-edge filter
+  (Alg. 3 line 19) reads this flat table instead of gathering the (R, k)
+  twin rows per expansion.  Like ``rev_ids`` it may go stale (λ updates on
+  the forward side do not propagate); stale values only perturb the
+  expansion *filter*, never distances or results ordering.
 
 Everything is int32/float32; the graph for n=10^8, k=40, R=80 is ~50 GB —
 sharded over a pod it is ~200 MB/device, which is why this layout scales
@@ -41,9 +55,11 @@ class KNNGraph(NamedTuple):
     nbr_dist: Array  # (cap, k) float32, sorted ascending per row
     nbr_lam: Array  # (cap, k) int32  (LGD occlusion factor)
     rev_ids: Array  # (cap, R) int32 ring buffer
+    rev_lam: Array  # (cap, R) int32 — forward-twin λ snapshot per rev edge
     rev_ptr: Array  # (cap,) int32 — total appends (mod R = write slot)
     alive: Array  # (cap,) bool
     n_valid: Array  # () int32 — rows [0, n_valid) are allocated
+    sq_norms: Array  # (cap,) float32 — ‖x_i‖² cache (0 where unallocated)
 
     @property
     def capacity(self) -> int:
@@ -66,9 +82,37 @@ def empty_graph(capacity: int, k: int, rev_capacity: int | None = None) -> KNNGr
         nbr_dist=jnp.full((capacity, k), jnp.inf, jnp.float32),
         nbr_lam=jnp.zeros((capacity, k), jnp.int32),
         rev_ids=jnp.full((capacity, rev_capacity), -1, jnp.int32),
+        rev_lam=jnp.zeros((capacity, rev_capacity), jnp.int32),
         rev_ptr=jnp.zeros((capacity,), jnp.int32),
         alive=jnp.zeros((capacity,), bool),
         n_valid=jnp.zeros((), jnp.int32),
+        sq_norms=jnp.zeros((capacity,), jnp.float32),
+    )
+
+
+def squared_norms(x: Array) -> Array:
+    """(n, d) data -> (n,) float32 ‖x_i‖² (the norm-cache values).
+
+    The one place the cache contents are defined; every owner of
+    ``KNNGraph.sq_norms`` computes its entries through here.
+    """
+    xf = x.astype(jnp.float32)
+    return jnp.sum(xf * xf, axis=-1)
+
+
+def attach_sq_norms(g: KNNGraph, x: Array) -> KNNGraph:
+    """Populate the norm cache of a hand-built graph from its backing data.
+
+    Rows at or beyond ``n_valid`` — and dead rows — keep 0 per the cache
+    invariant.
+    """
+    cap = g.capacity
+    sq = squared_norms(x[:cap])
+    if sq.shape[0] < cap:
+        sq = jnp.pad(sq, (0, cap - sq.shape[0]))
+    row = jnp.arange(cap, dtype=jnp.int32)
+    return g._replace(
+        sq_norms=jnp.where((row < g.n_valid) & g.alive, sq, 0.0)
     )
 
 
@@ -83,9 +127,11 @@ def grow_graph(g: KNNGraph, new_capacity: int) -> KNNGraph:
         nbr_dist=jnp.concatenate([g.nbr_dist, jnp.full((extra, g.k), jnp.inf, jnp.float32)]),
         nbr_lam=jnp.concatenate([g.nbr_lam, jnp.zeros((extra, g.k), jnp.int32)]),
         rev_ids=jnp.concatenate([g.rev_ids, jnp.full((extra, g.rev_capacity), -1, jnp.int32)]),
+        rev_lam=jnp.concatenate([g.rev_lam, jnp.zeros((extra, g.rev_capacity), jnp.int32)]),
         rev_ptr=jnp.concatenate([g.rev_ptr, jnp.zeros((extra,), jnp.int32)]),
         alive=jnp.concatenate([g.alive, jnp.zeros((extra,), bool)]),
         n_valid=g.n_valid,
+        sq_norms=jnp.concatenate([g.sq_norms, jnp.zeros((extra,), jnp.float32)]),
     )
 
 
@@ -93,8 +139,10 @@ def rebuild_reverse(g: KNNGraph) -> KNNGraph:
     """Recompute rev lists from forward lists (checkpoint-restore / repair).
 
     Edges are grouped by member id; each member keeps its most recent R
-    owners.  Pure function of the forward graph — used to verify the
-    incremental ring-buffer maintenance in tests.
+    owners.  The forward twin's λ rides along as a second payload, so the
+    ``rev_lam`` snapshot is exact at rebuild time.  Pure function of the
+    forward graph — used to verify the incremental ring-buffer maintenance
+    in tests.
     """
     cap, k = g.nbr_ids.shape
     R = g.rev_capacity
@@ -103,13 +151,19 @@ def rebuild_reverse(g: KNNGraph) -> KNNGraph:
     valid = members >= 0
     flat_owner = jnp.where(valid, owners, cap).reshape(-1)
     flat_member = jnp.where(valid, members, cap).reshape(-1)
+    flat_lam = jnp.where(valid, g.nbr_lam, 0).reshape(-1)
     order = jnp.argsort(flat_member, stable=True)
     sm = flat_member[order]
     so = flat_owner[order]
+    sl = flat_lam[order]
     # group owners by member, keep each member's first R (most recent) owners
-    (rev_ids,), counts = segments.grouped_top_r(sm, [so], [-1], cap, R)
+    (rev_ids, rev_lam), counts = segments.grouped_top_r(
+        sm, [so, sl], [-1, 0], cap, R
+    )
     return g._replace(
-        rev_ids=rev_ids, rev_ptr=jnp.minimum(counts, R).astype(jnp.int32)
+        rev_ids=rev_ids,
+        rev_lam=rev_lam,
+        rev_ptr=jnp.minimum(counts, R).astype(jnp.int32),
     )
 
 

@@ -121,24 +121,36 @@ def merge_candidates(
 
 
 def append_reverse(
-    rev_ids: Array, rev_ptr: Array, owner: Array, member: Array
-) -> tuple[Array, Array]:
+    rev_ids: Array,
+    rev_lam: Array,
+    rev_ptr: Array,
+    owner: Array,
+    member: Array,
+    lam: Array | None = None,
+) -> tuple[Array, Array, Array]:
     """Batched FIFO ring-buffer append: owner joins rev list of member.
 
     Args:
       rev_ids: (cap, R) ring buffers.
+      rev_lam: (cap, R) forward-twin λ snapshots aligned with rev_ids.
       rev_ptr: (cap,) total-appends counters.
       owner: (T,) int32 rows that now list ``member`` in their k-NN list.
       member: (T,) int32; negative = padding.
+      lam: optional (T,) int32 λ of ``member`` inside G[owner] at append
+        time (the rev_lam payload); defaults to 0 (fresh edges join with
+        λ = 0 per Alg. 3).
 
-    Returns updated (rev_ids, rev_ptr).
+    Returns updated (rev_ids, rev_lam, rev_ptr).
     """
     cap, R = rev_ids.shape
+    if lam is None:
+        lam = jnp.zeros_like(owner)
     valid = (member >= 0) & (member < cap) & (owner >= 0)
     m = jnp.where(valid, member, cap)
     order = jnp.argsort(m)
     sm = m[order]
     so = jnp.where(valid, owner, -1)[order]
+    sl = jnp.where(valid, lam.astype(jnp.int32), 0)[order]
     rank = segments.segment_rank(sm)
     # If more than R appends hit one member in a single wave, keep the last R
     # (FIFO overwrite — matches ring semantics of sequential appends).
@@ -149,10 +161,13 @@ def append_reverse(
     ok = (sm < cap) & (rank >= cnt_e - R)
     base = rev_ptr[jnp.minimum(sm, cap - 1)]
     slot = (base + rank) % R
+    row = jnp.where(ok, sm, cap)
+    col = jnp.where(ok, slot, 0)
     ext = jnp.concatenate([rev_ids, jnp.full((1, R), -1, jnp.int32)], axis=0)
-    ext = ext.at[jnp.where(ok, sm, cap), jnp.where(ok, slot, 0)].set(
-        jnp.where(ok, so, -1)
-    )
+    ext = ext.at[row, col].set(jnp.where(ok, so, -1))
+    ext_l = jnp.concatenate([rev_lam, jnp.zeros((1, R), jnp.int32)], axis=0)
+    ext_l = ext_l.at[row, col].set(jnp.where(ok, sl, 0))
     rev_ids = ext[:cap]
+    rev_lam = ext_l[:cap]
     rev_ptr = rev_ptr + counts
-    return rev_ids, rev_ptr
+    return rev_ids, rev_lam, rev_ptr

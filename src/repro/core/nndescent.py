@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import merge, segments
+from repro.core import graph as graph_lib
 from repro.core.graph import KNNGraph, rebuild_reverse
 from repro.kernels import ops
 
@@ -200,9 +201,11 @@ def build(
         nbr_dist=st.dist,
         nbr_lam=jnp.zeros_like(st.ids),
         rev_ids=jnp.full((n, 2 * k), -1, jnp.int32),
+        rev_lam=jnp.zeros((n, 2 * k), jnp.int32),
         rev_ptr=jnp.zeros((n,), jnp.int32),
         alive=jnp.ones((n,), bool),
         n_valid=jnp.asarray(n, jnp.int32),
+        sq_norms=graph_lib.squared_norms(x),
     )
     g = rebuild_reverse(g)
     stats = {

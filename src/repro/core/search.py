@@ -38,6 +38,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import segments
 from repro.core.graph import KNNGraph
 from repro.kernels import expand as expand_lib
 from repro.kernels import ops
@@ -141,13 +142,12 @@ def _candidates_from_expansion(
             fwd_keep = fwd_lam.astype(jnp.float32) <= mean_lam  # Alg.3 line 15 (≤)
         fwd_ids = jnp.where(fwd_keep, fwd_ids, -1)
         if cfg.lgd_rev_lambda:
-            # λ of the forward twin: r's slot inside G[j] for each rev entry j.
-            safe_rev = jnp.maximum(rev_ids, 0)
-            twin_ids = g.nbr_ids[safe_rev]  # (B, R, kg)
-            twin_lam = g.nbr_lam[safe_rev]  # (B, R, kg)
-            at_r = twin_ids == r_id[:, None, None]
-            rev_lam = jnp.max(jnp.where(at_r, twin_lam, 0), axis=-1)  # 0 if stale
-            rev_lam = rev_lam.astype(jnp.float32)
+            # λ of the forward twin, from the graph-resident rev_lam table —
+            # a flat (B, R) gather.  The table snapshots λ at append/rebuild
+            # time (the old live (B, R, kg) twin-row gather per iteration is
+            # gone); staleness only perturbs this expansion *filter*, exactly
+            # like stale rev_ids entries, never distances or results.
+            rev_lam = g.rev_lam[safe_r].astype(jnp.float32)  # (B, R)
             if cfg.hard_diversify:
                 rev_keep = rev_lam <= 0
             else:
@@ -159,11 +159,9 @@ def _candidates_from_expansion(
     in_range = (cands >= 0) & (cands < g.n_valid)
     alive = jnp.where(in_range, g.alive[jnp.maximum(cands, 0)], False)
     cands = jnp.where(in_range & alive, cands, -1)
-    # in-step dedupe (G[r] and Ḡ[r] overlap, per the paper's Fig. 1 remark)
-    dup = jnp.triu(
-        (cands[:, None, :] == cands[:, :, None]) & (cands[:, None, :] >= 0), k=1
-    )
-    cands = jnp.where(jnp.any(dup, axis=1), -1, cands)
+    # in-step dedupe (G[r] and Ḡ[r] overlap, per the paper's Fig. 1 remark) —
+    # sort-based segmented idiom, not the old O(C²) pairwise matrix
+    cands = jnp.where(segments.mask_row_duplicates(cands), -1, cands)
     return cands
 
 
@@ -188,17 +186,18 @@ def _prepare_expansion(
 
 
 def _expand(
-    x: Array, q: Array, cands: Array, beam_exp: Array, st: _LoopState,
-    cfg: SearchConfig,
+    g: KNNGraph, x: Array, q: Array, cands: Array, beam_exp: Array,
+    st: _LoopState, cfg: SearchConfig,
 ):
     """The fused expansion: probe the visited hash, compute surviving
-    distances, record them, merge into the beam.  One ``ops.expand_step``
-    call — Pallas kernel or pure-JAX reference per ``cfg.use_pallas``."""
+    distances (blocked MXU engine fed by the graph-resident norm cache),
+    record them, merge into the beam.  One ``ops.expand_step`` call — Pallas
+    kernel or pure-JAX reference per ``cfg.use_pallas``."""
     return ops.expand_step(
         q, x, cands, st.beam_ids, st.beam_dist, beam_exp,
         st.vis_ids, st.vis_dist,
         metric=cfg.metric, hash_probes=cfg.hash_probes,
-        use_pallas=cfg.use_pallas,
+        sq_norms=g.sq_norms, use_pallas=cfg.use_pallas,
     )
 
 
@@ -206,7 +205,7 @@ def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
     def step(st: _LoopState) -> _LoopState:
         cands, beam_exp = _prepare_expansion(g, st, cfg)
         beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps = _expand(
-            x, q, cands, beam_exp, st, cfg
+            g, x, q, cands, beam_exp, st, cfg
         )
         n_comps = st.n_comps + comps
         # -- convergence: best unexpanded cannot improve current top-k --------
@@ -246,13 +245,12 @@ def init_state(
     seeds = jax.random.randint(
         key, (B, cfg.n_seeds), 0, jnp.maximum(g.n_valid, 1), dtype=jnp.int32
     )
-    # dedupe seeds within a lane
-    dup = jnp.triu(
-        (seeds[:, None, :] == seeds[:, :, None]), k=1
-    )
-    seeds = jnp.where(jnp.any(dup, axis=1), -1, seeds)
+    # dedupe seeds within a lane (sort-based segmented idiom)
+    seeds = jnp.where(segments.mask_row_duplicates(seeds), -1, seeds)
     seeds = jnp.where(g.alive[jnp.maximum(seeds, 0)] & (seeds >= 0), seeds, -1)
-    seed_dist = ops.gather_distance(q, x, seeds, cfg.metric, use_pallas=cfg.use_pallas)
+    seed_dist = ops.gather_distance(
+        q, x, seeds, cfg.metric, sq_norms=g.sq_norms, use_pallas=cfg.use_pallas
+    )
 
     beam_ids = jnp.full((B, e), -1, jnp.int32)
     beam_dist = jnp.full((B, e), jnp.inf, jnp.float32)

@@ -96,6 +96,28 @@ def segment_counts(sorted_keys: Array, num_segments: int) -> Array:
     )[:num_segments].astype(jnp.int32)
 
 
+def mask_row_duplicates(ids: Array) -> Array:
+    """(B, C) int ids -> (B, C) bool, True at every later copy of an id >= 0.
+
+    The batched row-local form of the sort-based dedupe idiom: stable-sort
+    each row, mark adjacent equal runs past their first element, and scatter
+    the marks back through the permutation.  Replaces the O(C²) pairwise
+    ``triu`` masks the search layer used to build — same keep-the-earliest
+    semantics (stable sort preserves original order within equal runs),
+    O(C log C) work and O(B·C) memory.  Negative ids (padding) are never
+    marked.
+    """
+    B, C = ids.shape
+    order = jnp.argsort(ids, axis=1, stable=True)
+    s = jnp.take_along_axis(ids, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((B, 1), bool), (s[:, 1:] == s[:, :-1]) & (s[:, 1:] >= 0)],
+        axis=1,
+    )
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    return jnp.zeros((B, C), bool).at[rows, order].set(dup_sorted)
+
+
 def grouped_top_r(
     sorted_keys: Array,
     payloads: Sequence[Array],

@@ -24,7 +24,7 @@ the MXU sees 128x128-aligned operands.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +65,31 @@ def _dist_kernel_mxu(q_ref, x_ref, o_ref, acc_ref, qsq_ref, xsq_ref, *, metric: 
             o_ref[...] = -acc_ref[...]
         else:  # "dot": raw dot product (cosine handled by the wrapper)
             o_ref[...] = acc_ref[...]
+
+
+def _dist_kernel_mxu_cached(q_ref, x_ref, xn_ref, o_ref, acc_ref, qsq_ref, *, nd: int):
+    """l2 tile with the graph-resident ``‖x‖²`` cache: the x-side norm
+    accumulation is skipped entirely — the cached (1, bn) row supplies the
+    norm term on the last reduction step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        qsq_ref[...] = jnp.zeros_like(qsq_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (bm, bd)
+    x = x_ref[...].astype(jnp.float32)  # (bn, bd)
+    acc_ref[...] += jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    qsq_ref[...] += jnp.sum(q * q, axis=1, keepdims=True)
+
+    @pl.when(k == nd - 1)
+    def _done():
+        o_ref[...] = jnp.maximum(
+            qsq_ref[...] + xn_ref[...] - 2.0 * acc_ref[...], 0.0
+        )
 
 
 def _dist_kernel_vpu(q_ref, x_ref, o_ref, acc_ref, *, metric: str, nd: int, rows_per_step: int):
@@ -124,16 +149,22 @@ def pairwise_distance(
     x: Array,
     *,
     metric: str = "l2",
+    x_sq_norms: Optional[Array] = None,
     bm: int = 128,
     bn: int = 128,
     bd: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Array:
     """Pallas tiled pairwise distances: (m, d) x (n, d) -> (m, n) float32.
 
-    ``interpret=True`` runs the kernel body under the Pallas interpreter
-    (CPU-correct); on TPU pass ``interpret=False``.
+    ``x_sq_norms`` is the cached ``‖x‖²`` of the x side (the graph-resident
+    norm cache); for l2 the kernel then skips the x-norm accumulation
+    entirely.  ``interpret=None`` resolves to compiled on TPU and interpret
+    mode elsewhere — the kernel-vs-reference *choice* belongs to
+    ``kernels.ops`` dispatch, not here.
     """
+    if interpret is None:
+        interpret = compat.default_interpret()
     kernel_metric = metric
     if metric == "cosine":
         # Normalize outside the kernel; cosine == 1 - dot on unit vectors.
@@ -156,7 +187,24 @@ def pairwise_distance(
     np_ = xp.shape[0]
     grid = (mp // bm, np_ // bn, dp // bd)
 
-    if kernel_metric in MXU_METRICS:
+    cached_xn = x_sq_norms is not None and kernel_metric == "l2"
+    in_specs = [
+        pl.BlockSpec((bm, bd), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+    ]
+    operands = [qp, xp]
+    if cached_xn:
+        kern = functools.partial(_dist_kernel_mxu_cached, nd=grid[2])
+        scratch = [
+            compat.VMEM((bm, bn), jnp.float32),
+            compat.VMEM((bm, 1), jnp.float32),
+        ]
+        xnp = x_sq_norms.astype(jnp.float32)
+        if np_ != n:
+            xnp = jnp.pad(xnp, (0, np_ - n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(xnp[None, :])
+    elif kernel_metric in MXU_METRICS:
         kern = functools.partial(_dist_kernel_mxu, metric=kernel_metric, nd=grid[2])
         scratch = [
             compat.VMEM((bm, bn), jnp.float32),
@@ -175,10 +223,7 @@ def pairwise_distance(
     out = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bd), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=scratch,
@@ -186,7 +231,7 @@ def pairwise_distance(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qp, xp)
+    )(*operands)
     out = out[:m, :n]
     if metric == "cosine":
         out = 1.0 - out

@@ -8,10 +8,12 @@ into the hash, and merge them into the beam top-k.  Unfused, that is ~6
 separate XLA ops per iteration with every intermediate round-tripping HBM;
 here the whole chain runs per query inside one kernel:
 
-  * candidate data rows are moved HBM->VMEM with double-buffered async copies
-    driven by the scalar-prefetched candidate ids (same discipline as
-    ``kernels.gather_dist``, whose ``row_distance`` formula is shared so the
-    two kernels are bit-identical per comparison);
+  * candidate data rows are moved HBM->VMEM in double-buffered *blocks* of
+    (C_blk, d), each reduced against the query in one MXU/VPU pass via the
+    norms decomposition (``kernels.gather_dist.blocked_gather_phase`` — the
+    phase is shared verbatim with the gather-distance kernel, so the two are
+    bit-identical per comparison); the ``‖x‖²`` term comes from the
+    graph-resident norm cache, never recomputed per iteration;
   * the (1, H) visited-hash rows and the (1, e) beam rows live in VMEM for
     the whole step — probe, insert, and top-k merge never touch HBM;
   * one (1, 1) scalar output returns the lane's comparison count (the
@@ -43,6 +45,7 @@ interpret fallback (selected automatically off-TPU) is the portability net.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -194,29 +197,34 @@ def expand_reference(
     *,
     metric: str = "l2",
     probes: int = 8,
+    sq_norms: Optional[Array] = None,
     pallas_distances: bool = False,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Unfused EHC expansion: probe -> gather-distance -> record -> merge.
 
     With ``pallas_distances=False`` (default) this is the pure-JAX execution
-    path — XLA fuses it into the surrounding jitted search loop.  With
-    ``pallas_distances=True`` the distance gather runs the
-    ``kernels.gather_dist`` Pallas kernel instead, giving the exact per-row
-    numerics of the fused kernel — that variant is what the parity suite
-    diffs ``fused_expand`` against bit-for-bit.
+    path — XLA fuses it into the surrounding jitted search loop; its distance
+    gather is the same blocked/decomposed formula as the kernels
+    (``kernels.ref.gather_distance``).  With ``pallas_distances=True`` the
+    distance gather runs the ``kernels.gather_dist`` Pallas kernel instead,
+    giving the exact per-block numerics of the fused kernel — that variant
+    is what the parity suite diffs ``fused_expand`` against bit-for-bit.
+    ``sq_norms`` is the graph-resident ``‖x‖²`` cache (derived once per call
+    when absent).
     """
     present, _, _ = hash_probe_state(vis_ids, cands, probes)
     fresh = (cands >= 0) & ~present
     cand_ids = jnp.where(fresh, cands, -1)
     if pallas_distances:
         dists = _gather_dist.gather_distance(
-            q, x, cand_ids, metric=metric, interpret=interpret
+            q, x, cand_ids, metric=metric, sq_norms=sq_norms,
+            interpret=interpret,
         )
     else:
         from repro.kernels import ref as _ref  # lazy: see module note
 
-        dists = _ref.gather_distance(q, x, cand_ids, metric)
+        dists = _ref.gather_distance(q, x, cand_ids, metric, sq_norms=sq_norms)
     return _probe_mask_record_merge(
         cands, dists, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, probes
     )
@@ -228,9 +236,10 @@ def expand_reference(
 
 
 def _fused_expand_kernel(
-    idx_ref,  # (B, C) int32, SMEM (scalar prefetch) — drives the row DMAs
-    cand_ref,  # (1, C) int32 VMEM — same ids, vector phase operand
+    idx_ref,  # (B, C_pad) int32, SMEM (scalar prefetch) — drives the DMAs
+    cand_ref,  # (1, C_pad) int32 VMEM — same ids, vector phase operand
     q_ref,  # (1, d) VMEM
+    xn_ref,  # (1, C_pad) f32 VMEM — gathered ‖x‖² (the norm cache)
     bi_ref,  # (1, e) int32 beam ids
     bd_ref,  # (1, e) f32 beam dists
     be_ref,  # (1, e) int32 beam expanded flags (bool cast at the boundary)
@@ -243,58 +252,37 @@ def _fused_expand_kernel(
     ovi_ref,  # (1, H) int32 out
     ovd_ref,  # (1, H) f32 out
     oc_ref,  # (1, 1) int32 out — comparisons charged this step
-    dist_buf,  # (1, C) f32 VMEM scratch
-    row_buf,  # (2, 1, d) VMEM scratch (double buffer)
-    sems,  # (2,) DMA semaphores
+    dist_buf,  # (1, C_pad) f32 VMEM scratch
+    tile_buf,  # (2, C_blk, d) VMEM scratch (block double buffer)
+    sems,  # (2, C_blk) DMA semaphores
     *,
     n_cand: int,
+    n_blocks: int,
+    c_blk: int,
     metric: str,
     probes: int,
 ):
     b = pl.program_id(0)
     q = q_ref[...].astype(jnp.float32)  # (1, d)
 
-    # -- phase 1: candidate rows HBM->VMEM, distances into dist_buf ----------
-    # Identical double-buffering discipline (and row_distance formula) to
-    # kernels.gather_dist: slot (c+1) % 2 is in flight while c % 2 reduces.
-    # Distances are computed for every id >= 0 and masked against the hash in
-    # the vector phase — trading a few discarded reductions for a DMA loop
-    # with no data-dependent control flow.  Counted comps (phase 2) only
-    # charge fresh candidates, matching the unfused path.
-    def start_fetch(c, slot):
-        rid = jnp.maximum(idx_ref[b, c], 0)
-        compat.make_async_copy(
-            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
-        ).start()
-
-    def wait_fetch(c, slot):
-        rid = jnp.maximum(idx_ref[b, c], 0)
-        compat.make_async_copy(
-            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
-        ).wait()
-
-    start_fetch(0, 0)
-
-    def body(c, _):
-        slot = jax.lax.rem(c, 2)
-
-        @pl.when(c + 1 < n_cand)
-        def _prefetch_next():
-            start_fetch(c + 1, jax.lax.rem(c + 1, 2))
-
-        wait_fetch(c, slot)
-        row = row_buf[slot].astype(jnp.float32)  # (1, d)
-        dist = _gather_dist.row_distance(q, row, metric)
-        dist_buf[0, c] = jnp.where(idx_ref[b, c] >= 0, dist, jnp.inf)
-        return ()
-
-    jax.lax.fori_loop(0, n_cand, body, (), unroll=False)
+    # -- phase 1: blocked candidate gather + one-shot tile reductions --------
+    # The exact body of kernels.gather_dist (blocked_gather_phase): block
+    # j+1's row DMAs are in flight while block j reduces against q on the
+    # MXU (l2/ip/cos norms decomposition, ‖x‖² from the cache) or VPU
+    # (l1/chi2 broadcast).  Distances land for every id >= 0 and are masked
+    # against the hash in phase 2 — trading a few discarded reductions for a
+    # DMA loop with no data-dependent control flow.  Counted comps (phase 2)
+    # only charge fresh candidates, matching the unfused path.
+    _gather_dist.blocked_gather_phase(
+        b, idx_ref, cand_ref, q, xn_ref, x_ref, dist_buf, tile_buf, sems,
+        n_blocks=n_blocks, c_blk=c_blk, metric=metric,
+    )
 
     # -- phase 2: probe / record / merge, all VMEM-resident ------------------
     beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps = (
         _probe_mask_record_merge(
-            cand_ref[...],
-            dist_buf[...],
+            cand_ref[0:1, 0:n_cand],
+            dist_buf[0:1, 0:n_cand],
             bi_ref[...],
             bd_ref[...],
             be_ref[...] > 0,
@@ -324,37 +312,48 @@ def fused_expand(
     *,
     metric: str = "l2",
     probes: int = 8,
-    interpret: bool = True,
+    sq_norms: Optional[Array] = None,
+    interpret: Optional[bool] = None,
 ):
     """One fused EHC expansion step for a batch of queries.
 
     Same signature and return contract as ``expand_reference``:
     (beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps (B,) int32).
+    ``sq_norms`` is the graph-resident ``‖x‖²`` cache backing the blocked
+    distance engine (derived once per call when absent).
     """
+    if interpret is None:
+        interpret = compat.default_interpret()
+    kernel_metric = metric
     if metric == "cosine":
-        # Pre-normalize once (exactly as kernels.gather_dist does) and let the
-        # kernel apply the 1 - <q, x> step per row.
-        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
-        return fused_expand(
-            qn, xn, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
-            metric="cos", probes=probes, interpret=interpret,
-        )
+        # Normalize the query once (exactly as kernels.gather_dist does); the
+        # cached ‖x‖² supplies the data-side denominator in-kernel.
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        kernel_metric = "cos"
 
     B, d = q.shape
     C = cands.shape[1]
     e = beam_ids.shape[1]
     H = vis_ids.shape[1]
+    cb = _gather_dist.block_c(C)
+    cp = _gather_dist.padded_c(C)
+    cands_p = cands.astype(jnp.int32)
+    if cp != C:
+        cands_p = jnp.pad(cands_p, ((0, 0), (0, cp - C)), constant_values=-1)
+    xn = _gather_dist.gathered_sq_norms(x, cands_p, sq_norms)  # (B, cp)
+
     kern = functools.partial(
-        _fused_expand_kernel, n_cand=C, metric=metric, probes=probes
+        _fused_expand_kernel, n_cand=C, n_blocks=cp // cb, c_blk=cb,
+        metric=kernel_metric, probes=probes,
     )
     row = lambda w: pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0))
     grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B,),
         in_specs=[
-            row(C),  # cands (vector phase)
+            row(cp),  # cands (vector phase; first C entries are the originals)
             row(d),  # q
+            row(cp),  # xn
             row(e),  # beam_ids
             row(e),  # beam_dist
             row(e),  # beam_exp
@@ -364,9 +363,9 @@ def fused_expand(
         ],
         out_specs=[row(e), row(e), row(e), row(H), row(H), row(1)],
         scratch_shapes=[
-            compat.VMEM((1, C), jnp.float32),
-            compat.VMEM((2, 1, d), jnp.float32),
-            compat.SemaphoreType.DMA((2,)),
+            compat.VMEM((1, cp), jnp.float32),
+            compat.VMEM((2, cb, d), jnp.float32),
+            compat.SemaphoreType.DMA((2, cb)),
         ],
     )
     outs = pl.pallas_call(
@@ -382,9 +381,10 @@ def fused_expand(
         ],
         interpret=interpret,
     )(
-        cands.astype(jnp.int32),
-        cands.astype(jnp.int32),
+        cands_p,
+        cands_p,
         q,
+        xn,
         beam_ids,
         beam_dist,
         beam_exp.astype(jnp.int32),

@@ -1,30 +1,46 @@
-"""Fused gather + distance Pallas TPU kernel (scalar-prefetch).
+"""Blocked gather + distance Pallas TPU kernel — the MXU distance engine.
 
 The inner loop of EHC hill-climbing is: take the candidate ids produced by
 expanding a beam vertex, fetch those rows of the dataset, and compute their
-distance to the query.  Done naively (``x[idx]`` then a distance) XLA
-materializes the (B, C, d) gather in HBM.  This kernel fuses the two: the
-candidate ids ride in scalar-prefetch SMEM and drive double-buffered HBM->VMEM
-DMAs of the candidate rows, which are reduced against the VMEM-resident query
-row as soon as they land — the gather never exists as an HBM intermediate.
+distance to the query.  The first-generation kernel here streamed one (1, d)
+candidate row per DMA and reduced it on the VPU — ~0.05 flops/byte, idle
+MXUs.  This version is *blocked*: candidate ids (riding in scalar-prefetch
+SMEM) drive double-buffered HBM->VMEM row gathers into a (C_blk, d) tile,
+and each landed tile is reduced against the VMEM-resident query in ONE shot:
+
+  * l2 / ip / cos ride the norms decomposition ``‖q‖² + ‖x‖² − 2·q·x`` — the
+    ``q·x`` term is a single (1, d) x (C_blk, d)ᵀ MXU pass per block and the
+    ``‖x‖²`` term comes from the graph-resident norm cache
+    (``KNNGraph.sq_norms``), so nothing recomputes norms per iteration;
+  * l1 / chi2 keep the VPU broadcast reduction (no matmul form exists) over
+    the same (C_blk, d) tile — the block analogue of ``kernels.distance``'s
+    row-strip walk.
+
+``blocked_gather_phase`` is the whole phase — DMA discipline, block
+reduction, and padding-lane masking — and is shared *verbatim* with the
+fused expansion kernel (``kernels.expand``), which is what keeps the two
+bit-identical per comparison (pinned by the expansion parity suite).
 
 Layout
 ------
 * grid = (B,): one grid step per query; Pallas pipelines steps.
-* ``idx`` (B, C) int32: scalar-prefetch operand (SMEM).
-* ``x`` (n, d): stays in HBM/ANY; rows are moved manually with
-  ``pltpu.make_async_copy`` into a 2-slot VMEM scratch (double buffering:
-  slot (c+1) mod 2 is in flight while slot c mod 2 is reduced).
-* ``q`` block (1, d): standard VMEM operand per grid step.
-* out block (1, C) float32.
+* ``idx`` (B, C_pad) int32: scalar-prefetch operand (SMEM) driving the DMAs;
+  the same ids ride again as a VMEM operand for vector-phase masking.
+* ``x`` (n, d): stays in HBM/ANY; rows are moved with
+  ``pltpu.make_async_copy`` into a 2-slot (C_blk, d) VMEM scratch (block
+  j+1 is in flight while block j is reduced).
+* ``xn`` (B, C_pad) float32: gathered squared norms of the candidate rows.
+* out block (1, C_pad) float32; the wrapper slices back to C.
 
-Negative ids are padding: their lanes are forced to +inf (the convention the
-search layer uses for masked candidates).
+Candidate lists are padded to a multiple of the block width with -1; negative
+ids are padding and their lanes are forced to +inf (the convention the search
+layer uses for masked candidates).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,80 +50,169 @@ from repro.kernels import compat
 
 Array = jax.Array
 
+# Widest candidate block one tile reduction covers: matches the MXU's 128
+# systolic rows; shorter candidate lists use one exact-width block.
+_MAX_BLOCK_C = 128
 
-def row_distance(q, row, metric: str):
-    """Distance between one query and one candidate row, both (1, d) f32.
 
-    The single in-kernel distance formula shared by this kernel and the fused
-    expansion kernel (``kernels.expand``) — keeping it in one place is what
-    makes the two bit-identical, which the expansion parity suite pins.
-    ``"dot"`` is the raw inner product (cosine pre-normalizes and finishes
-    outside); ``"cos"`` is the fused-kernel variant that applies the
-    ``1 - <q, x>`` step in place.
+def block_c(n_cand: int) -> int:
+    """Candidate-block width used for a C-wide candidate list."""
+    return min(_MAX_BLOCK_C, max(n_cand, 1))
+
+
+def padded_c(n_cand: int) -> int:
+    """C padded up to a whole number of blocks."""
+    cb = block_c(n_cand)
+    return -(-n_cand // cb) * cb
+
+
+def block_distance(q: Array, tile: Array, xn: Array, metric: str) -> Array:
+    """Distances between one query and one block of candidate rows.
+
+    The single in-kernel distance formula, shared by this kernel and the
+    fused expansion kernel — keeping it in one place is what makes the two
+    bit-identical, which the expansion parity suite pins.
+
+    Args:
+      q: (1, d) query.
+      tile: (C_blk, d) candidate rows.
+      xn: (1, C_blk) cached ``‖x‖²`` per row (consumed by l2 and cos;
+        ignored by ip/dot/l1/chi2).
+
+    Returns (1, C_blk) float32 distances.  ``"dot"`` is the raw inner
+    product; ``"cos"`` expects a pre-normalized query and *raw* data rows —
+    the cached norm supplies the denominator.
     """
-    if metric == "l2":
-        diff = q - row
-        return jnp.sum(diff * diff)
-    if metric in ("ip", "dot"):
-        dist = jnp.sum(q * row)
-        return -dist if metric == "ip" else dist
-    if metric == "cos":
-        return 1.0 - jnp.sum(q * row)
+    q = q.astype(jnp.float32)
+    tile = tile.astype(jnp.float32)
+    if metric in ("l2", "ip", "dot", "cos"):
+        dots = jax.lax.dot_general(
+            q, tile, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (1, C_blk) — one MXU pass covers the whole block
+        if metric == "l2":
+            qn = jnp.sum(q * q, axis=1, keepdims=True)
+            return jnp.maximum(qn + xn - 2.0 * dots, 0.0)
+        if metric == "ip":
+            return -dots
+        if metric == "dot":
+            return dots
+        return 1.0 - dots / jnp.maximum(jnp.sqrt(xn), 1e-12)  # cos
     if metric == "l1":
-        return jnp.sum(jnp.abs(q - row))
+        return jnp.sum(jnp.abs(tile - q), axis=1, keepdims=True).T
     if metric == "chi2":
-        num = (q - row) ** 2
-        den = q + row
-        return jnp.sum(jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), 0.0))
+        num = (tile - q) ** 2
+        den = tile + q
+        return jnp.sum(
+            jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), 0.0),
+            axis=1,
+            keepdims=True,
+        ).T
     raise KeyError(metric)
 
 
-def _gather_dist_kernel(
-    idx_ref,  # (B, C) int32, SMEM (scalar prefetch)
-    q_ref,  # (1, d) VMEM
+def gathered_sq_norms(x: Array, idx: Array, sq_norms: Optional[Array]) -> Array:
+    """(B, C) candidate ids -> (B, C) float32 ``‖x_idx‖²``; 0 at padding.
+
+    ``sq_norms`` is the graph-resident cache (``KNNGraph.sq_norms``).  When a
+    caller has none (direct kernel use, tests) the norms are derived from
+    ``x`` once per call — never per candidate row, and never inside the
+    search iteration — through ``graph.squared_norms``, the cache contents'
+    single definition.
+    """
+    if sq_norms is None:
+        from repro.core.graph import squared_norms  # lazy: kernels load first
+
+        sq_norms = squared_norms(x)
+    safe = jnp.clip(idx, 0, x.shape[0] - 1)
+    return jnp.where(idx >= 0, sq_norms[safe].astype(jnp.float32), 0.0)
+
+
+def blocked_gather_phase(
+    b,  # scalar: which query lane (grid position)
+    idx_ref,  # (B, C_pad) int32 SMEM (scalar prefetch) — drives the DMAs
+    ids_ref,  # (1, C_pad) int32 VMEM — same ids, vector-phase masking
+    q,  # (1, d) float32 (already read from its ref)
+    xn_ref,  # (1, C_pad) float32 VMEM — gathered ‖x‖² per candidate
     x_ref,  # (n, d) ANY (HBM)
-    o_ref,  # (1, C) VMEM
-    row_buf,  # (2, 1, d) VMEM scratch
-    sems,  # (2,) DMA semaphores
+    out_ref,  # (1, C_pad) float32 VMEM — distances out (+inf at padding)
+    tile_buf,  # (2, C_blk, d) VMEM scratch (block double buffer)
+    sems,  # (2, C_blk) DMA semaphores
     *,
-    n_cand: int,
+    n_blocks: int,
+    c_blk: int,
+    metric: str,
+):
+    """The blocked candidate-distance phase, shared verbatim by the
+    gather-distance kernel and the fused expansion kernel's phase 1 — one
+    body, two execution sites, zero drift.
+
+    Block j+1's row DMAs are in flight while block j reduces on the
+    MXU/VPU.  Padding lanes (id < 0) fetch row 0 and are masked to +inf.
+    """
+
+    def row_copy(blk, r, slot):
+        rid = jnp.maximum(idx_ref[b, blk * c_blk + r], 0)
+        return compat.make_async_copy(
+            x_ref.at[pl.ds(rid, 1)], tile_buf.at[slot, pl.ds(r, 1)],
+            sems.at[slot, r],
+        )
+
+    def start_block(blk, slot):
+        def start_row(r, _):
+            row_copy(blk, r, slot).start()
+            return ()
+
+        jax.lax.fori_loop(0, c_blk, start_row, (), unroll=False)
+
+    def wait_block(blk, slot):
+        def wait_row(r, _):
+            row_copy(blk, r, slot).wait()
+            return ()
+
+        jax.lax.fori_loop(0, c_blk, wait_row, (), unroll=False)
+
+    start_block(0, 0)
+
+    def body(blk, _):
+        slot = jax.lax.rem(blk, 2)
+
+        @pl.when(blk + 1 < n_blocks)
+        def _prefetch_next():
+            start_block(blk + 1, jax.lax.rem(blk + 1, 2))
+
+        wait_block(blk, slot)
+        off = blk * c_blk
+        tile = tile_buf[slot].astype(jnp.float32)  # (C_blk, d)
+        ids_blk = ids_ref[0:1, pl.ds(off, c_blk)]  # (1, C_blk)
+        xn_blk = xn_ref[0:1, pl.ds(off, c_blk)]
+        dist = block_distance(q, tile, xn_blk, metric)
+        out_ref[0:1, pl.ds(off, c_blk)] = jnp.where(ids_blk >= 0, dist, jnp.inf)
+        return ()
+
+    jax.lax.fori_loop(0, n_blocks, body, (), unroll=False)
+
+
+def _gather_dist_kernel(
+    idx_ref,  # (B, C_pad) int32, SMEM (scalar prefetch)
+    ids_ref,  # (1, C_pad) int32 VMEM
+    q_ref,  # (1, d) VMEM
+    xn_ref,  # (1, C_pad) VMEM
+    x_ref,  # (n, d) ANY (HBM)
+    o_ref,  # (1, C_pad) VMEM
+    tile_buf,  # (2, C_blk, d) VMEM scratch
+    sems,  # (2, C_blk) DMA semaphores
+    *,
+    n_blocks: int,
+    c_blk: int,
     metric: str,
 ):
     b = pl.program_id(0)
     q = q_ref[...].astype(jnp.float32)  # (1, d)
-
-    def start_fetch(c, slot):
-        rid = jnp.maximum(idx_ref[b, c], 0)
-        cp = compat.make_async_copy(
-            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
-        )
-        cp.start()
-
-    def wait_fetch(c, slot):
-        rid = jnp.maximum(idx_ref[b, c], 0)
-        cp = compat.make_async_copy(
-            x_ref.at[pl.ds(rid, 1)], row_buf.at[slot], sems.at[slot]
-        )
-        cp.wait()
-
-    # Warm up the pipeline with candidate 0.
-    start_fetch(0, 0)
-
-    def body(c, _):
-        slot = jax.lax.rem(c, 2)
-
-        @pl.when(c + 1 < n_cand)
-        def _prefetch_next():
-            start_fetch(c + 1, jax.lax.rem(c + 1, 2))
-
-        wait_fetch(c, slot)
-        row = row_buf[slot].astype(jnp.float32)  # (1, d)
-        dist = row_distance(q, row, metric)
-        valid = idx_ref[b, c] >= 0
-        o_ref[0, c] = jnp.where(valid, dist, jnp.inf)
-        return ()
-
-    jax.lax.fori_loop(0, n_cand, body, (), unroll=False)
+    blocked_gather_phase(
+        b, idx_ref, ids_ref, q, xn_ref, x_ref, o_ref, tile_buf, sems,
+        n_blocks=n_blocks, c_blk=c_blk, metric=metric,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
@@ -117,35 +222,57 @@ def gather_distance(
     idx: Array,
     *,
     metric: str = "l2",
-    interpret: bool = True,
+    sq_norms: Optional[Array] = None,
+    interpret: Optional[bool] = None,
 ) -> Array:
-    """(b, d) queries, (n, d) data, (b, c) int32 ids -> (b, c) f32 distances."""
+    """(b, d) queries, (n, d) data, (b, c) int32 ids -> (b, c) f32 distances.
+
+    ``sq_norms`` is the graph-resident ``‖x‖²`` cache; omit it and the norms
+    are derived once per call.  ``interpret=None`` resolves to compiled on
+    TPU and interpret mode elsewhere — the execution-path *choice* (kernel vs
+    pure-JAX reference) belongs to ``kernels.ops`` dispatch, not here.
+    """
+    if interpret is None:
+        interpret = compat.default_interpret()
+    kernel_metric = metric
     if metric == "cosine":
+        # Normalize the query once; the cached ‖x‖² supplies the data-side
+        # denominator in-kernel (no O(n·d) dataset normalization per call).
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
-        out = gather_distance(q, x, idx, metric="dot", interpret=interpret)
-        return jnp.where(idx >= 0, 1.0 - out, jnp.inf)
+        kernel_metric = "cos"
 
     b, d = q.shape
     c = idx.shape[1]
-    kern = functools.partial(_gather_dist_kernel, n_cand=c, metric=metric)
+    cb = block_c(c)
+    cp = padded_c(c)
+    idx = idx.astype(jnp.int32)
+    if cp != c:
+        idx = jnp.pad(idx, ((0, 0), (0, cp - c)), constant_values=-1)
+    xn = gathered_sq_norms(x, idx, sq_norms)  # (b, cp)
+
+    kern = functools.partial(
+        _gather_dist_kernel, n_blocks=cp // cb, c_blk=cb, metric=kernel_metric
+    )
+    row = lambda w: pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0))
     grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b,),
         in_specs=[
-            pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
-            pl.BlockSpec(memory_space=compat.ANY),
+            row(cp),  # ids (vector phase masking)
+            row(d),  # q
+            row(cp),  # xn
+            pl.BlockSpec(memory_space=compat.ANY),  # x
         ],
-        out_specs=pl.BlockSpec((1, c), lambda i, idx_ref: (i, 0)),
+        out_specs=row(cp),
         scratch_shapes=[
-            compat.VMEM((2, 1, d), jnp.float32),
-            compat.SemaphoreType.DMA((2,)),
+            compat.VMEM((2, cb, d), jnp.float32),
+            compat.SemaphoreType.DMA((2, cb)),
         ],
     )
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
         interpret=interpret,
-    )(idx.astype(jnp.int32), q, x)
-    return out  # "dot" callers (the cosine path) apply masking themselves
+    )(idx, idx, q, xn, x)
+    return out[:, :c]

@@ -3,7 +3,15 @@
 Every call site in ``repro.core`` goes through these functions.  On TPU the
 Pallas kernels run compiled (``interpret=False``); on CPU the default is the
 pure-jnp reference path (fast under XLA:CPU) while ``use_pallas=True`` forces
-the interpreted kernel (what the correctness tests sweep).
+the interpreted kernel (what the correctness tests sweep).  The
+interpret-vs-compiled decision is made HERE (and only here) and passed down
+explicitly — the kernels' own ``interpret=None`` defaults merely resolve to
+the same backend check for direct callers.
+
+``sq_norms`` / ``x_sq_norms`` thread the graph-resident ``‖x‖²`` cache
+(``KNNGraph.sq_norms``) into the blocked distance engine so no path — brute
+force, seed gathers, or the expansion hot loop — recomputes norms per
+iteration.
 """
 
 from __future__ import annotations
@@ -31,18 +39,24 @@ def pairwise_distance(
     metric: str = "l2",
     *,
     use_pallas: Optional[bool] = None,
+    x_sq_norms: Optional[Array] = None,
     bm: int = 128,
     bn: int = 128,
     bd: int = 128,
 ) -> Array:
-    """(m, d) x (n, d) -> (m, n) float32 distances."""
+    """(m, d) x (n, d) -> (m, n) float32 distances.
+
+    ``x_sq_norms``: optional cached ``‖x‖²`` of the x side (l2 consumes it;
+    other metrics ignore it).
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
         return _distance.pairwise_distance(
-            q, x, metric=metric, bm=bm, bn=bn, bd=bd, interpret=not _on_tpu()
+            q, x, metric=metric, x_sq_norms=x_sq_norms,
+            bm=bm, bn=bn, bd=bd, interpret=not _on_tpu(),
         )
-    return _ref.pairwise_distance(q, x, metric)
+    return _ref.pairwise_distance(q, x, metric, x_sq_norms=x_sq_norms)
 
 
 def gather_distance(
@@ -52,15 +66,21 @@ def gather_distance(
     metric: str = "l2",
     *,
     use_pallas: Optional[bool] = None,
+    sq_norms: Optional[Array] = None,
 ) -> Array:
-    """(b, d) queries vs rows x[idx] -> (b, c) float32; inf at idx < 0."""
+    """(b, d) queries vs rows x[idx] -> (b, c) float32; inf at idx < 0.
+
+    ``sq_norms``: optional (n,) graph-resident ``‖x‖²`` cache feeding the
+    blocked engine's norms decomposition.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
         return _gather_dist.gather_distance(
-            q, x, idx, metric=metric, interpret=not _on_tpu()
+            q, x, idx, metric=metric, sq_norms=sq_norms,
+            interpret=not _on_tpu(),
         )
-    return _ref.gather_distance(q, x, idx, metric)
+    return _ref.gather_distance(q, x, idx, metric, sq_norms=sq_norms)
 
 
 def topk_smallest(dists: Array, ids: Array, k: int):
@@ -80,14 +100,16 @@ def expand_step(
     *,
     metric: str = "l2",
     hash_probes: int = 8,
+    sq_norms: Optional[Array] = None,
     use_pallas: Optional[bool] = None,
 ):
     """One EHC expansion step (Alg. 1/3 inner loop) for a batch of queries.
 
     Given masked candidate ids (``core.search._candidates_from_expansion``
     output), dedups them against the per-query visited hash, computes the
-    surviving distances, records them into the hash, and merges them into the
-    beam top-k.  Returns
+    surviving distances with the blocked MXU engine (``sq_norms`` = the
+    graph-resident norm cache), records them into the hash, and merges them
+    into the beam top-k.  Returns
     ``(beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps)``.
 
     Three-way dispatch (the policy ``SearchConfig.use_pallas`` documents):
@@ -103,9 +125,10 @@ def expand_step(
     if use_pallas:
         return _expand.fused_expand(
             q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
-            metric=metric, probes=hash_probes, interpret=not _on_tpu(),
+            metric=metric, probes=hash_probes, sq_norms=sq_norms,
+            interpret=not _on_tpu(),
         )
     return _expand.expand_reference(
         q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
-        metric=metric, probes=hash_probes,
+        metric=metric, probes=hash_probes, sq_norms=sq_norms,
     )

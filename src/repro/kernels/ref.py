@@ -1,11 +1,18 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These are the correctness references the kernel tests sweep against
-(``tests/test_kernels.py``) and the CPU execution path used by the rest of the
-framework when no TPU is present.
+(``tests/test_kernels.py``) and the CPU execution path used by the rest of
+the framework when no TPU is present.  The gather-distance oracle implements
+the SAME norms-decomposed blocked formula as the Pallas engine
+(``kernels.gather_dist.block_distance``) — ``‖q‖² + ‖x‖² − 2·q·x`` with the
+``‖x‖²`` term served from the graph-resident cache when the caller has one —
+so the CPU production path and the TPU kernel agree to float tolerance and
+neither recomputes norms per iteration.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,30 +22,82 @@ from repro.core import metrics
 Array = jax.Array
 
 
-def pairwise_distance(q: Array, x: Array, metric: str = "l2") -> Array:
-    """(m, d) x (n, d) -> (m, n) distances.  Oracle for kernels.distance."""
+def pairwise_distance(
+    q: Array, x: Array, metric: str = "l2", *, x_sq_norms: Optional[Array] = None
+) -> Array:
+    """(m, d) x (n, d) -> (m, n) distances.  Oracle for kernels.distance.
+
+    ``x_sq_norms`` is the cached ``‖x‖²`` of the x side; when provided (l2)
+    the decomposition consumes it instead of re-reducing x.
+    """
+    if x_sq_norms is not None and metric == "l2":
+        qf = q.astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        qn = jnp.sum(qf * qf, axis=-1, keepdims=True)  # (m, 1)
+        return jnp.maximum(
+            qn + x_sq_norms.astype(jnp.float32)[None, :] - 2.0 * (qf @ xf.T), 0.0
+        )
     return metrics.pairwise(metric, q, x)
 
 
-def gather_distance(q: Array, x: Array, idx: Array, metric: str = "l2") -> Array:
-    """Fused gather + distance oracle.
+def gather_distance(
+    q: Array,
+    x: Array,
+    idx: Array,
+    metric: str = "l2",
+    *,
+    sq_norms: Optional[Array] = None,
+) -> Array:
+    """Blocked gather + distance oracle (decomposed formula).
 
     Args:
       q:   (b, d)  queries.
       x:   (n, d)  dataset.
       idx: (b, c)  int32 candidate ids per query; id < 0 means padding.
+      sq_norms: optional (n,) cached ``‖x‖²`` (the graph-resident cache);
+        derived once per call when absent.
 
     Returns:
       (b, c) float32 distances; +inf at padded slots.
     """
-    b, c = idx.shape
-    safe = jnp.maximum(idx, 0)
-    cand = x[safe]  # (b, c, d)
+    safe = jnp.clip(idx, 0, x.shape[0] - 1)
+    if metric in ("l2", "ip", "dot", "cosine", "cos"):
+        qf = q.astype(jnp.float32)
+        if metric in ("cosine", "cos"):
+            qf = qf / jnp.maximum(
+                jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-12
+            )
+        cand = x[safe].astype(jnp.float32)  # (b, c, d)
+        # broadcast-multiply + reduce rather than einsum: XLA:CPU fuses this
+        # into one pass over the gathered tile, while the einsum/dot_general
+        # lowering becomes a loop of (1, d) matvecs that is measurably slower
+        # at the large-C shapes the engine targets (see the gather-engine
+        # microbench); on TPU the Pallas kernel owns this computation anyway.
+        dots = jnp.sum(qf[:, None, :] * cand, axis=-1)
+        if metric in ("l2", "cosine", "cos"):
+            if sq_norms is None:
+                from repro.core.graph import squared_norms  # lazy: no cycle
 
-    def per_query(qi, ci):
-        return metrics.pairwise(metric, qi[None, :], ci)[0]
+                xn = squared_norms(cand)
+            else:
+                xn = sq_norms[safe].astype(jnp.float32)
+            if metric == "l2":
+                qn = jnp.sum(qf * qf, axis=-1, keepdims=True)
+                d = jnp.maximum(qn + xn - 2.0 * dots, 0.0)
+            else:
+                d = 1.0 - dots / jnp.maximum(jnp.sqrt(xn), 1e-12)
+        elif metric == "ip":
+            d = -dots
+        else:  # dot
+            d = dots
+    else:
+        # VPU metrics (l1 / chi2): no matmul form — broadcast reduction.
+        cand = x[safe]
 
-    d = jax.vmap(per_query)(q, cand)
+        def per_query(qi, ci):
+            return metrics.pairwise(metric, qi[None, :], ci)[0]
+
+        d = jax.vmap(per_query)(q, cand)
     return jnp.where(idx >= 0, d.astype(jnp.float32), jnp.inf)
 
 

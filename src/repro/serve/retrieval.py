@@ -21,7 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import brute, construct, dynamic
+from repro.core import brute, construct, dynamic, segments
 from repro.core import search as search_lib
 from repro.core.graph import KNNGraph
 
@@ -98,11 +98,11 @@ def retrieve(
     res = search_lib.search(index.graph, index.items, interests, key, scfg)
     ids = res.ids.reshape(-1)
     dist = res.dists.reshape(-1)
-    # cross-interest dedupe: keep the best (smallest-distance) copy
+    # cross-interest dedupe: keep the best (smallest-distance) copy —
+    # sort-based segmented idiom (core.segments), not a pairwise matrix
     order = jnp.argsort(dist)
     ids_s = ids[order]
-    seen = jnp.triu((ids_s[None, :] == ids_s[:, None]), k=1)
-    dup = jnp.any(seen, axis=0)
+    dup = segments.mask_row_duplicates(ids_s[None, :])[0]
     dist_s = jnp.where(dup | (ids_s < 0), jnp.inf, dist[order])
     sel = jnp.argsort(dist_s)[:top_k]
     out_ids = ids_s[sel]
@@ -121,8 +121,8 @@ def retrieve_brute(index: RetrievalIndex, interests: Array, top_k: int):
     flat_d = dist.reshape(-1)
     order = jnp.argsort(flat_d)
     ids_s = flat_i[order]
-    dup = jnp.any(jnp.triu(ids_s[None, :] == ids_s[:, None], k=1), axis=0)
-    d_s = jnp.where(dup, jnp.inf, flat_d[order])
+    dup = segments.mask_row_duplicates(ids_s[None, :])[0]
+    d_s = jnp.where(dup | (ids_s < 0), jnp.inf, flat_d[order])
     sel = jnp.argsort(d_s)[:top_k]
     score = -d_s[sel] if index.metric == "ip" else d_s[sel]
     return ids_s[sel], score

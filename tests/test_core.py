@@ -189,16 +189,8 @@ class TestDynamic:
                           hash_slots=1024, max_iters=40)
         g, _ = build(data[:n0], cfg, jax.random.PRNGKey(0))
         # grow capacity to full dataset, then insert the remainder online
-        full = graph_lib.empty_graph(N, K, g.rev_capacity)
-        full = full._replace(
-            nbr_ids=full.nbr_ids.at[:n0].set(g.nbr_ids),
-            nbr_dist=full.nbr_dist.at[:n0].set(g.nbr_dist),
-            nbr_lam=full.nbr_lam.at[:n0].set(g.nbr_lam),
-            rev_ids=full.rev_ids.at[:n0].set(g.rev_ids),
-            rev_ptr=full.rev_ptr.at[:n0].set(g.rev_ptr),
-            alive=full.alive.at[:n0].set(g.alive[:n0]),
-            n_valid=g.n_valid,
-        )
+        # (grow_graph carries every field — incl. the norm cache — forward)
+        full = graph_lib.grow_graph(g, N)
         g2, _ = dynamic.insert(full, data, N - n0, cfg, jax.random.PRNGKey(9))
         assert int(g2.n_valid) == N
         tids, _ = brute.brute_force_knn(

@@ -1,0 +1,272 @@
+"""Norm-cache suite: the graph-resident ``‖x‖²`` cache and the decomposed
+distance formula it feeds (the PR-3 blocked MXU engine).
+
+Three groups, matching the ISSUE's coverage list:
+
+* decomposed-vs-direct — the ``‖q‖² + ‖x‖² − 2·q·x`` form (with and without
+  the cache) against a float64 direct-difference oracle, swept over
+  metrics x dims x dtypes.  This is a TOLERANCE suite by policy: the
+  decomposition trades associativity for MXU shape, so agreement is float
+  -level, never bitwise (the bitwise invariant lives in the fused-vs
+  -reference parity suite, which keeps both sides on the SAME formula).
+* cache consistency — the ``KNNGraph.sq_norms`` invariant (valid for every
+  allocated alive row, 0 for unallocated/removed rows) through build,
+  ``dynamic.insert`` and ``dynamic.remove`` round trips: nothing drifts and
+  nothing stale survives a removal.
+* block boundaries — the blocked engine pads candidate lists to whole
+  (C_blk)-wide blocks; kernels and the fused expansion must agree with
+  their references at C NOT a multiple of the block width (padding lanes
+  live) as well as at exact multiples.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import brute, construct, dynamic, segments
+from repro.core import graph as graph_lib
+from repro.core import search as search_lib
+from repro.kernels import expand as expand_lib
+from repro.kernels import gather_dist as gather_kernel
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# decomposed vs direct
+# ---------------------------------------------------------------------------
+
+
+def _direct_oracle(q64, x64, idx, metric):
+    """Float64 direct-formula distances (no decomposition anywhere)."""
+    b, c = idx.shape
+    out = np.zeros((b, c))
+    for i in range(b):
+        for j in range(c):
+            v = x64[max(idx[i, j], 0)]
+            if metric == "l2":
+                out[i, j] = np.sum((q64[i] - v) ** 2)
+            else:  # cosine
+                qn = np.linalg.norm(q64[i])
+                vn = np.linalg.norm(v)
+                out[i, j] = 1.0 - np.dot(q64[i], v) / max(qn * vn, 1e-12)
+    return out
+
+
+class TestDecomposedVsDirect:
+    """The decomposition is the only formula change the blocked engine makes;
+    l2 and cosine are the metrics that consume the cached ``‖x‖²``."""
+
+    @pytest.mark.parametrize("metric", ["l2", "cosine"])
+    @pytest.mark.parametrize("d", [8, 96, 200])
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("cached", [True, False])
+    def test_gather_distance_tolerance(self, metric, d, dtype, cached):
+        rng = np.random.RandomState(0)
+        n, b, c = 300, 7, 33
+        x64 = rng.randn(n, d) * 2.0
+        q64 = rng.randn(b, d) * 2.0
+        idx = rng.randint(-1, n, size=(b, c)).astype(np.int32)
+        x = jnp.asarray(x64, jnp.float32).astype(dtype)
+        q = jnp.asarray(q64, jnp.float32).astype(dtype)
+        # the cache is defined over the stored (possibly low-precision) rows
+        sq = graph_lib.squared_norms(x) if cached else None
+        want = _direct_oracle(
+            np.asarray(q.astype(jnp.float32), np.float64),
+            np.asarray(x.astype(jnp.float32), np.float64),
+            idx, metric,
+        )
+        got = ref.gather_distance(q, x, jnp.asarray(idx), metric, sq_norms=sq)
+        mask = idx >= 0
+        # decomposed-vs-direct is tolerance-based BY POLICY: catastrophic
+        # cancellation bounds error by ~eps·‖q‖‖x‖, so the bound is absolute
+        # in the squared-norm scale, looser for bf16 storage
+        tol = 0.25 if dtype == "bfloat16" else 2e-3
+        np.testing.assert_allclose(
+            np.asarray(got)[mask], want[mask], atol=tol * d, rtol=5e-2
+            if dtype == "bfloat16" else 1e-3,
+        )
+        assert np.all(np.isinf(np.asarray(got)[~mask]))
+
+    @pytest.mark.parametrize("metric", ["l2", "cosine"])
+    @pytest.mark.parametrize("d", [8, 200])
+    def test_kernel_matches_cached_reference(self, metric, d):
+        """Pallas blocked kernel (interpret) vs the cached reference — both
+        on the decomposed formula, so tight float32 tolerance."""
+        rng = np.random.RandomState(1)
+        n, b, c = 300, 5, 40
+        x = jnp.asarray(rng.randn(n, d), jnp.float32)
+        q = jnp.asarray(rng.randn(b, d), jnp.float32)
+        idx = jnp.asarray(rng.randint(-1, n, size=(b, c)), jnp.int32)
+        sq = graph_lib.squared_norms(x)
+        got = gather_kernel.gather_distance(
+            q, x, idx, metric=metric, sq_norms=sq, interpret=True
+        )
+        want = ref.gather_distance(q, x, idx, metric, sq_norms=sq)
+        mask = np.asarray(idx) >= 0
+        np.testing.assert_allclose(
+            np.asarray(got)[mask], np.asarray(want)[mask],
+            rtol=2e-4, atol=2e-3,
+        )
+
+    def test_pairwise_cached_matches_uncached(self):
+        rng = np.random.RandomState(2)
+        q = jnp.asarray(rng.randn(9, 48), jnp.float32)
+        x = jnp.asarray(rng.randn(70, 48), jnp.float32)
+        sq = graph_lib.squared_norms(x)
+        got = ref.pairwise_distance(q, x, "l2", x_sq_norms=sq)
+        want = ref.pairwise_distance(q, x, "l2")
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# cache consistency through dynamic updates
+# ---------------------------------------------------------------------------
+
+
+def _check_invariant(g, x, msg):
+    """sq_norms == ‖x_i‖² for allocated alive rows; 0 elsewhere."""
+    n_valid = int(g.n_valid)
+    cap = g.capacity
+    sq = np.asarray(g.sq_norms)
+    alive = np.asarray(g.alive)
+    true_sq = np.asarray(graph_lib.squared_norms(jnp.asarray(x)))[:cap]
+    live = np.arange(cap) < n_valid
+    np.testing.assert_allclose(
+        sq[live & alive], true_sq[live & alive], rtol=1e-6, atol=1e-5,
+        err_msg=f"{msg}: stale/wrong cache on live rows",
+    )
+    assert np.all(sq[~live] == 0.0), f"{msg}: unallocated rows must cache 0"
+    assert np.all(sq[live & ~alive] == 0.0), f"{msg}: removed rows must cache 0"
+
+
+class TestCacheConsistency:
+    N0, EXTRA, D, K = 300, 60, 12, 8
+
+    def _build(self, seed=0):
+        rng = np.random.RandomState(seed)
+        x = rng.rand(self.N0 + self.EXTRA, self.D).astype(np.float32)
+        cfg = construct.BuildConfig(
+            k=self.K, metric="l2", wave=64, lgd=True, beam=16, n_seeds=4,
+            hash_slots=512, max_iters=30, use_pallas=False,
+        )
+        g, _ = construct.build(
+            jnp.asarray(x[: self.N0]), cfg, jax.random.PRNGKey(seed)
+        )
+        return g, x, cfg
+
+    def test_build_populates_cache(self):
+        g, x, _ = self._build()
+        _check_invariant(g, x, "after build")
+
+    def test_insert_remove_round_trip(self):
+        g, x, cfg = self._build()
+        grown = graph_lib.grow_graph(g, self.N0 + self.EXTRA)
+        _check_invariant(grown, x, "after grow")
+        g2, _ = dynamic.insert(
+            grown, jnp.asarray(x), self.EXTRA, cfg, jax.random.PRNGKey(7)
+        )
+        assert int(g2.n_valid) == self.N0 + self.EXTRA
+        _check_invariant(g2, x, "after insert")
+
+        victims = jnp.asarray([3, 50, self.N0 + 5, self.N0 + 31], jnp.int32)
+        g3 = dynamic.remove(g2, jnp.asarray(x), victims, "l2")
+        _check_invariant(g3, x, "after remove")
+        # a second wave of inserts on top of holes must not resurrect
+        # stale entries elsewhere
+        g4 = dynamic.remove(g3, jnp.asarray(x), jnp.asarray([0], jnp.int32), "l2")
+        _check_invariant(g4, x, "after second remove")
+
+    def test_attach_sq_norms_matches_builder(self):
+        g, x, _ = self._build()
+        detached = g._replace(sq_norms=jnp.zeros_like(g.sq_norms))
+        reattached = graph_lib.attach_sq_norms(detached, jnp.asarray(x))
+        np.testing.assert_allclose(
+            np.asarray(reattached.sq_norms), np.asarray(g.sq_norms),
+            rtol=1e-6, atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# block boundaries: non-multiple-of-block candidate counts
+# ---------------------------------------------------------------------------
+
+
+class TestBlockBoundaries:
+    def test_block_helpers(self):
+        assert gather_kernel.block_c(1) == 1
+        assert gather_kernel.block_c(100) == 100
+        assert gather_kernel.block_c(130) == 128
+        assert gather_kernel.padded_c(100) == 100  # single exact block
+        assert gather_kernel.padded_c(128) == 128
+        assert gather_kernel.padded_c(130) == 256  # padding lanes live
+        assert gather_kernel.padded_c(256) == 256
+        assert gather_kernel.padded_c(300) == 384
+
+    @pytest.mark.parametrize("c", [1, 127, 128, 129, 200, 256, 300])
+    def test_gather_distance_at_block_edges(self, c):
+        rng = np.random.RandomState(3)
+        n, b, d = 400, 4, 16
+        x = jnp.asarray(rng.randn(n, d), jnp.float32)
+        q = jnp.asarray(rng.randn(b, d), jnp.float32)
+        idx = jnp.asarray(rng.randint(-1, n, size=(b, c)), jnp.int32)
+        sq = graph_lib.squared_norms(x)
+        got = gather_kernel.gather_distance(
+            q, x, idx, metric="l2", sq_norms=sq, interpret=True
+        )
+        assert got.shape == (b, c)
+        want = ref.gather_distance(q, x, idx, "l2", sq_norms=sq)
+        mask = np.asarray(idx) >= 0
+        np.testing.assert_allclose(
+            np.asarray(got)[mask], np.asarray(want)[mask],
+            rtol=2e-4, atol=2e-3,
+        )
+        assert np.all(np.isinf(np.asarray(got)[~mask]))
+
+    @pytest.mark.parametrize("c", [129, 130, 300])
+    def test_fused_expand_parity_past_one_block(self, c):
+        """Fused kernel vs reference-with-kernel-distances stays bit
+        -identical when the candidate list spans multiple blocks with live
+        padding lanes — the parity policy at the new block geometry."""
+        rng = np.random.RandomState(4)
+        n, d, b = 500, 8, 3
+        data = jnp.asarray(rng.rand(n, d).astype(np.float32))
+        g = brute.exact_seed_graph(data, n, 8, "l2")
+        q = data[40 : 40 + b]
+        cfg = search_lib.SearchConfig(
+            k=8, beam=16, n_seeds=4, hash_slots=256, metric="l2",
+            use_pallas=False,
+        )
+        st = search_lib.init_state(g, data, q, jax.random.PRNGKey(5), cfg)
+        fields = ["beam_ids", "beam_dist", "beam_exp", "vis_ids", "vis_dist",
+                  "comps"]
+        for it in range(2):  # 2nd iteration sees a non-empty visited hash
+            cands = jnp.asarray(
+                rng.randint(-1, n, size=(b, c)), jnp.int32
+            )
+            # production semantics: candidate lists are row-deduped upstream
+            cands = jnp.where(segments.mask_row_duplicates(cands), -1, cands)
+            args = (
+                q, data, cands, st.beam_ids, st.beam_dist, st.beam_exp,
+                st.vis_ids, st.vis_dist,
+            )
+            want = expand_lib.expand_reference(
+                *args, metric="l2", probes=cfg.hash_probes,
+                sq_norms=g.sq_norms, pallas_distances=True, interpret=True,
+            )
+            got = expand_lib.fused_expand(
+                *args, metric="l2", probes=cfg.hash_probes,
+                sq_norms=g.sq_norms, interpret=True,
+            )
+            for name, a, bb in zip(fields, want, got):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(bb),
+                    err_msg=f"iter {it}, C={c}, field {name}",
+                )
+            bi, bd, be, vi, vd, _ = want
+            st = st._replace(
+                beam_ids=bi, beam_dist=bd, beam_exp=be,
+                vis_ids=vi, vis_dist=vd,
+            )

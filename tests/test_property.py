@@ -100,10 +100,13 @@ def test_append_reverse_ring(seed, R, t):
     rng = np.random.RandomState(seed)
     cap = 8
     rev = jnp.full((cap, R), -1, jnp.int32)
+    lam = jnp.zeros((cap, R), jnp.int32)
     ptr = jnp.zeros((cap,), jnp.int32)
     owner = rng.randint(0, cap, size=t).astype(np.int32)
     member = rng.randint(-1, cap, size=t).astype(np.int32)
-    rev2, ptr2 = merge.append_reverse(rev, ptr, jnp.asarray(owner), jnp.asarray(member))
+    rev2, _, ptr2 = merge.append_reverse(
+        rev, lam, ptr, jnp.asarray(owner), jnp.asarray(member)
+    )
     rev2 = np.asarray(rev2)
     ptr2 = np.asarray(ptr2)
     for m in range(cap):
