@@ -1,0 +1,143 @@
+"""Sustained-churn benchmark for the index lifecycle subsystem.
+
+    PYTHONPATH=src python -m benchmarks.bench_lifecycle
+
+The paper's headline capability is an index that lives online; the lifecycle
+layer (``repro.index.OnlineIndex``) is what lets it live *long*: removed
+rows are recycled through the free-slot ledger + compaction instead of
+leaking capacity, and inserts ride the same fused wave pipeline as the
+build.  This benchmark measures the serving-relevant composite: interleaved
+insert / remove / query rounds at a FIXED capacity — every round must
+reclaim the slots the previous round freed, so compaction runs in the hot
+loop, not as an offline pass.
+
+Reported:
+  * ``churn_ops_per_s`` — sustained (insert + remove + query) operations per
+    second across the whole loop, compactions included (ungated: wall-clock
+    on shared CI runners is informational);
+  * ``recall_at_10``   — brute-force-checked (alive-aware) recall@10 of the
+    post-churn index.  This is the hard CI gate: an index that degrades
+    under churn has lost the paper's online property, whatever its speed.
+
+The canonical CI shape is n=2000 / d=20, matching the build-quality gate
+(``bench_construction.quality_gate``) so the two recalls are comparable:
+churn recall sits below build recall only by what the churn itself costs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import brute, construct
+from repro.index import OnlineIndex
+
+
+def churn_bench(
+    n: int = 2000,
+    d: int = 20,
+    k: int = 20,
+    rounds: int = 6,
+    batch: int = 64,
+    n_q: int = 64,
+    beam: int = 64,
+    search_k: int = 20,
+    seed: int = 0,
+) -> dict:
+    """Interleaved insert/remove/query at fixed capacity; see module doc."""
+    pool = common.dataset("uniform", n + (rounds + 1) * batch, d, seed)
+    base, fresh = pool[:n], pool[n:]
+    q = common.dataset("uniform", n_q, d, seed + 1)
+    cfg = construct.BuildConfig(
+        k=k, metric="l2", wave=256, lgd=True, beam=40, n_seeds=8,
+        use_pallas=False,
+    )
+    t0 = time.perf_counter()
+    idx = OnlineIndex.build(base, cfg, key=jax.random.PRNGKey(seed))
+    t_build = time.perf_counter() - t0
+    assert idx.capacity == n  # churn must recycle, not grow
+
+    rng = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed + 2)
+
+    def churn_round(r: int):
+        nonlocal key
+        alive = np.flatnonzero(np.asarray(idx.graph.alive))
+        victims = rng.choice(alive, batch, replace=False)
+        idx.remove(jnp.asarray(victims, jnp.int32))
+        key, k1, k2 = jax.random.split(key, 3)
+        idx.add(fresh[r * batch : (r + 1) * batch], key=k1, flush=True)
+        res = idx.search(q, search_k, beam=beam, key=k2)
+        jax.block_until_ready(res.ids)
+
+    # one untimed round warms every compilation cache on the churn path
+    # (remove, compact, insert wave, search), so the clock below measures
+    # sustained throughput, not first-call tracing
+    churn_round(0)
+
+    t0 = time.perf_counter()
+    for r in range(1, rounds + 1):
+        churn_round(r)
+    t_churn = time.perf_counter() - t0
+    assert idx.capacity == n, "churn loop grew the index"
+
+    # post-churn quality, alive-aware exact ground truth
+    true_ids, _ = brute.brute_force_knn(
+        idx.items, q, 10, idx.metric,
+        n_valid=idx.graph.n_valid, alive=idx.graph.alive,
+    )
+    # search deeper than the reported cut (search_k > 10): the EHC
+    # termination horizon is the search k, so recall@10 is measured on a
+    # k=search_k walk — the serving configuration, and the paper's protocol
+    # of over-searching for quality
+    res = idx.search(q, search_k, beam=beam, key=jax.random.PRNGKey(seed + 3))
+    recall = float(brute.recall_at_k(res.ids, true_ids, 10))
+
+    ops = rounds * (2 * batch + n_q)  # removals + inserts + queries
+    return {
+        "n": n, "d": d, "k": k, "rounds": rounds, "batch": batch,
+        "n_q": n_q, "beam": beam, "search_k": search_k,
+        "t_build_s": t_build,
+        "t_churn_s": t_churn,
+        "churn_ops_per_s": ops / t_churn,
+        "recall_at_10": recall,
+        "capacity": idx.capacity,
+        "n_items": idx.n_items,
+    }
+
+
+def churn_gate(n: int = 2000, d: int = 20, seed: int = 0) -> dict:
+    """The canonical CI churn measurement (shape matches the build-quality
+    gate).  ``benchmarks.ci_gate`` fails the benchmark-smoke job when
+    ``recall_at_10`` drops below ``churn_recall_at_10_min`` in
+    benchmarks/baseline_ci.json; ``churn_ops_per_s`` is recorded ungated."""
+    return churn_bench(n=n, d=d, seed=seed)
+
+
+def run(n: int = 2000, **kw):
+    tbl = common.Table(
+        "lifecycle: sustained churn (insert+remove+query, fixed capacity)",
+        ["n", "d", "rounds", "batch", "churn_ops/s", "recall@10", "build_s"],
+    )
+    rec = churn_bench(n=n, **kw)
+    tbl.add(rec["n"], rec["d"], rec["rounds"], rec["batch"],
+            rec["churn_ops_per_s"], rec["recall_at_10"], rec["t_build_s"])
+    tbl.show()
+    return tbl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--rounds", type=int, default=6)
+    args = ap.parse_args()
+    run(args.n, rounds=args.rounds)
+
+
+if __name__ == "__main__":
+    main()

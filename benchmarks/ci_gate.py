@@ -13,7 +13,12 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
   * ``gather_engine_speedup_min`` — blocked (norms-decomposed) vs rowwise
     gather-distance at d=256/C=512 (bench_search.gather_engine_bench); drops
     mean the blocked MXU engine lost its edge over the per-row formula it
-    replaced.
+    replaced;
+  * ``churn_recall_at_10_min`` — post-churn search recall@10 after sustained
+    interleaved insert/remove/query at fixed capacity
+    (bench_lifecycle.churn_gate); drops mean the online property regressed —
+    removal repair, slot recycling, or compaction is damaging the graph.
+    The churn record's throughput (``churn_ops_per_s``) rides along ungated.
 
 Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
 BENCH_ci.json artifact is uploaded either way so regressions come with data.
@@ -47,6 +52,12 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
         ("gather_engine_speedup", gspd,
          float(baseline["gather_engine_speedup_min"]),
          gspd >= float(baseline["gather_engine_speedup_min"]))
+    )
+    crec = float(bench["lifecycle_churn"]["recall_at_10"])
+    results.append(
+        ("churn_recall_at_10", crec,
+         float(baseline["churn_recall_at_10_min"]),
+         crec >= float(baseline["churn_recall_at_10_min"]))
     )
     return results
 

@@ -9,6 +9,7 @@ Sections:
   Table III bench_datasets         per-dataset scanning rate + recall
   Fig 9/10  bench_search           recall vs speed-up over brute
   §IV-D     bench_refine           local-join refinement rounds
+  §IV-C     bench_lifecycle        sustained churn (insert/remove/query)
 
 The dry-run/roofline numbers (EXPERIMENTS.md §Dry-run/§Roofline) come from
 ``repro.launch.dryrun`` — they need the 512-device XLA flag and therefore a
@@ -36,6 +37,7 @@ def main():
         bench_brute,
         bench_construction,
         bench_datasets,
+        bench_lifecycle,
         bench_refine,
         bench_search,
         bench_search_baseline,
@@ -54,6 +56,8 @@ def main():
     tables["search"] = bench_search.run(
         n, datasets=bench_search.DATASETS[: 1 if args.quick else 3])
     tables["refine"] = bench_refine.run(n, rounds=1 if args.quick else 3)
+    tables["lifecycle"] = bench_lifecycle.run(
+        min(n, 2000), rounds=3 if args.quick else 6)
 
     if args.ci_out:
         # gate metrics run at their FIXED canonical shapes (n=5k/d=20 for the
@@ -63,11 +67,14 @@ def main():
         expansion = bench_search.run_expansion()
         quality = bench_construction.quality_gate()
         gather_engine = bench_search.run_gather_engine()
+        lifecycle_churn = bench_lifecycle.churn_gate()
         payload = {
             "expansion": expansion[16],  # serving batch — the gated record
             "expansion_wave": expansion[256],  # construction wave — recorded
             "quality": quality,
             "gather_engine": gather_engine,  # blocked-vs-rowwise (gated)
+            # sustained-churn record: recall gated, throughput informational
+            "lifecycle_churn": lifecycle_churn,
             "sections": {
                 name: t.records()
                 for name, t in tables.items()

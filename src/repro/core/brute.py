@@ -34,6 +34,7 @@ def brute_force_knn(
     *,
     exclude_ids: Optional[Array] = None,
     n_valid: Optional[Array] = None,
+    alive: Optional[Array] = None,
     tile: int = 8192,
     use_pallas: Optional[bool] = None,
     sq_norms: Optional[Array] = None,
@@ -47,6 +48,9 @@ def brute_force_knn(
       exclude_ids: optional (m,) id per query to exclude (self-match when the
         queries are dataset rows).
       n_valid: optional scalar — only rows [0, n_valid) participate.
+      alive: optional (n,) bool — rows with ``alive=False`` are excluded
+        (``KNNGraph.alive``: the exact baseline over a churned index must
+        skip removed rows just like graph search does).
       sq_norms: optional (n,) cached ``‖x‖²`` (the graph-resident norm
         cache); each x tile's norms ride along to the distance engine
         instead of being re-reduced per tile.
@@ -63,6 +67,7 @@ def brute_force_knn(
     snp = None if sq_norms is None else jnp.pad(
         sq_norms.astype(jnp.float32), (0, npad - n)
     )
+    alp = None if alive is None else jnp.pad(alive[:n], (0, npad - n))
     if n_valid is None:
         n_valid = jnp.asarray(n, jnp.int32)
 
@@ -80,6 +85,8 @@ def brute_force_knn(
         )
         ids = t * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
         mask = (ids < n_valid)
+        if alp is not None:
+            mask &= jax.lax.dynamic_slice_in_dim(alp, t * tile, tile, 0)[None, :]
         if exclude_ids is not None:
             mask &= ids != exclude_ids[:, None]
         dt = jnp.where(mask, dt, jnp.inf)

@@ -220,17 +220,16 @@ def commit_wave(
         )
 
     # ---- 4. write back: existing-row merges + new rows ----------------------
-    safe_q = jnp.minimum(q_ids, cap - 1)
-    nbr_ids = m_ids.at[safe_q].set(jnp.where(q_mask[:, None], new_ids, m_ids[safe_q]))
-    nbr_dist = m_dist.at[safe_q].set(
-        jnp.where(q_mask[:, None], new_dist, m_dist[safe_q])
-    )
-    nbr_lam = m_lam.at[safe_q].set(
-        jnp.where(q_mask[:, None], 0, m_lam[safe_q])  # λ init 0 on join (Alg. 3)
-    )
-    sq_norms = g.sq_norms.at[safe_q].set(
-        jnp.where(q_mask, xq_sq, g.sq_norms[safe_q])  # norm-cache maintenance
-    )
+    # padding lanes scatter to the drop sentinel: clamping them to cap-1
+    # would collide with the real last row when capacity == n and the final
+    # wave is partial (duplicate-index scatters resolve in undefined order)
+    drop_q = jnp.where(q_mask, jnp.minimum(q_ids, cap - 1), cap)
+    nbr_ids = m_ids.at[drop_q].set(new_ids, mode="drop")
+    nbr_dist = m_dist.at[drop_q].set(new_dist, mode="drop")
+    # λ init 0 on join (Alg. 3)
+    nbr_lam = m_lam.at[drop_q].set(jnp.zeros_like(new_ids), mode="drop")
+    # norm-cache maintenance
+    sq_norms = g.sq_norms.at[drop_q].set(xq_sq, mode="drop")
 
     # ---- 5. reverse-list appends --------------------------------------------
     # (a) new rows list their members; (b) inserted queries join target rows.
@@ -248,7 +247,7 @@ def commit_wave(
         g.rev_ids, g.rev_lam, g.rev_ptr, owners, members, lams
     )
 
-    alive = g.alive.at[safe_q].set(q_mask | g.alive[safe_q])
+    alive = g.alive.at[drop_q].set(True, mode="drop")
     n_valid = jnp.minimum(g.n_valid + n_real, cap).astype(jnp.int32)
     g2 = KNNGraph(
         nbr_ids=nbr_ids,

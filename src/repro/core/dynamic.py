@@ -13,16 +13,24 @@ Removal follows the paper exactly:
   * LGD λ repair: per the paper, only samples ranked *after* the removed one
     in each affected list need their λ updated (undo of Rule 3) — ~k²/2
     distance computations per removal on average, recomputed on the spot.
+
+``compact`` is the complement removal needs to stay long-lived: removed rows
+keep their capacity slot (``alive`` masking is the paper's O(1)-ish delete),
+so sustained churn leaks capacity until the alive rows are re-packed to the
+front.  The index lifecycle layer (``repro.index.lifecycle``) drives it from
+its free-slot ledger.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import construct as construct_lib
+from repro.core import graph as graph_lib
 from repro.core import metrics as metrics_lib
 from repro.core import search as search_lib
 from repro.core.graph import KNNGraph
@@ -53,6 +61,7 @@ def insert(
     return construct_lib.build(sub, cfg, key, initial=(g, start))
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "repair_lambda"))
 def remove(
     g: KNNGraph,
     x: Array,
@@ -66,14 +75,18 @@ def remove(
     Args:
       g: graph.
       x: (cap, d) data (needed for the λ repair distance recomputations).
-      ids: (m,) int32 sample ids to remove.
+      ids: (m,) int32 sample ids to remove.  Out-of-range ids (including the
+        -1 padding sentinel) are ignored, so callers may pad a batch to a
+        fixed shape — the jit specializes on (m,), and padding to size
+        buckets bounds the compile cache.
 
     Returns the updated graph.  Rows that lose neighbors keep holes (padding
     moves to the tail); search tolerates short lists, and the next refinement
     or insertion wave naturally refills them.
     """
     cap, k = g.nbr_ids.shape
-    removed = jnp.zeros((cap,), bool).at[jnp.clip(ids, 0, cap - 1)].set(True)
+    ids = jnp.where((ids >= 0) & (ids < cap), ids, cap)  # cap = drop sentinel
+    removed = jnp.zeros((cap,), bool).at[ids].set(True, mode="drop")
 
     hit = jnp.where(g.nbr_ids >= 0, removed[jnp.maximum(g.nbr_ids, 0)], False)
 
@@ -118,22 +131,21 @@ def remove(
     nbr_dist = jnp.where(nbr_ids >= 0, take(dist), jnp.inf)
     nbr_lam2 = jnp.where(nbr_ids >= 0, take(lam), 0)
 
-    # clear the removed rows themselves
-    rid = jnp.clip(ids, 0, cap - 1)
-    nbr_ids = nbr_ids.at[rid].set(-1)
-    nbr_dist = nbr_dist.at[rid].set(jnp.inf)
-    nbr_lam2 = nbr_lam2.at[rid].set(0)
+    # clear the removed rows themselves (padding ids carry the drop sentinel)
+    nbr_ids = nbr_ids.at[ids].set(-1, mode="drop")
+    nbr_dist = nbr_dist.at[ids].set(jnp.inf, mode="drop")
+    nbr_lam2 = nbr_lam2.at[ids].set(0, mode="drop")
 
     # purge from reverse lists (ring buffers keep their ptr; holes are -1);
     # the rev_lam snapshots travel with their edges
     rev_hit = jnp.where(g.rev_ids >= 0, removed[jnp.maximum(g.rev_ids, 0)], False)
     rev_ids = jnp.where(rev_hit, -1, g.rev_ids)
-    rev_ids = rev_ids.at[rid].set(-1)
+    rev_ids = rev_ids.at[ids].set(-1, mode="drop")
     rev_lam = jnp.where(rev_hit, 0, g.rev_lam)
-    rev_lam = rev_lam.at[rid].set(0)
-    rev_ptr = g.rev_ptr.at[rid].set(0)
+    rev_lam = rev_lam.at[ids].set(0, mode="drop")
+    rev_ptr = g.rev_ptr.at[ids].set(0, mode="drop")
 
-    alive = g.alive.at[rid].set(False)
+    alive = g.alive.at[ids].set(False, mode="drop")
     return KNNGraph(
         nbr_ids=nbr_ids,
         nbr_dist=nbr_dist,
@@ -146,3 +158,76 @@ def remove(
         # norm-cache invariant: removed rows drop back to 0
         sq_norms=jnp.where(removed, 0.0, g.sq_norms),
     )
+
+
+@jax.jit
+def compact(g: KNNGraph, x: Array) -> tuple[KNNGraph, Array, Array]:
+    """Re-pack alive rows to the front, reclaiming removed rows' capacity.
+
+    ``remove`` leaves dead rows in place (the paper's O(1)-ish delete); under
+    sustained churn those holes leak capacity forever.  Compaction restores a
+    dense index: alive rows keep their relative order and move to rows
+    [0, n_alive); everything behind ``n_valid`` returns to the unallocated
+    state, ready for later insertion waves to recycle.
+
+    The whole surgery is two vectorized passes:
+      * ``id_map`` (old row -> new row, -1 for dead) comes from a prefix sum
+        over the alive mask; its inverse ``old_of_new`` is one scatter — the
+        same sort/scatter shape as ``core.segments`` group-bys;
+      * every per-row array is gathered through ``old_of_new`` and every
+        stored id (``nbr_ids``) remapped through ``id_map``; the reverse side
+        is rebuilt exactly with ``graph.rebuild_reverse`` (which snapshots
+        ``rev_lam`` from the remapped forward lists — the rebuild path is the
+        canonical repair, so the rev/λ invariants hold by construction).
+
+    The norm cache moves with its rows (gathered, not recomputed), so the
+    invariant — exact for alive allocated rows, 0 elsewhere — is preserved
+    bit-for-bit.  Capacity (array shapes) is unchanged, which keeps this a
+    single jitted call with no host sync.
+
+    Args:
+      g: graph (typically after one or more ``remove`` calls).
+      x: (cap, d) backing data.
+
+    Returns:
+      (graph, x2, id_map): the compacted graph, the re-packed data region,
+      and the (cap,) old-row -> new-row map (-1 for removed rows) callers
+      use to remap any ids they hold (serving routers, result caches).
+    """
+    cap, k = g.nbr_ids.shape
+    row = jnp.arange(cap, dtype=jnp.int32)
+    alive = g.alive & (row < g.n_valid)
+    n_alive = jnp.sum(alive.astype(jnp.int32))
+    id_map = jnp.where(alive, jnp.cumsum(alive.astype(jnp.int32)) - 1, -1)
+    # inverse permutation: one scatter, dead/unallocated rows stay -1
+    old_of_new = (
+        jnp.full((cap + 1,), -1, jnp.int32)
+        .at[jnp.where(alive, id_map, cap)]
+        .set(row, mode="drop")[:cap]
+    )
+    filled = old_of_new >= 0
+    src = jnp.maximum(old_of_new, 0)
+
+    def pack(a: Array, fill) -> Array:
+        out = a[src]
+        mask = filled if a.ndim == 1 else filled[:, None]
+        return jnp.where(mask, out, fill)
+
+    # forward lists: gather rows, remap member ids (dead members were already
+    # purged by remove(); any survivor maps cleanly, holes stay -1)
+    nbr_ids = pack(g.nbr_ids, -1)
+    nbr_ids = jnp.where(nbr_ids >= 0, id_map[jnp.maximum(nbr_ids, 0)], -1)
+    g2 = KNNGraph(
+        nbr_ids=nbr_ids,
+        nbr_dist=jnp.where(nbr_ids >= 0, pack(g.nbr_dist, jnp.inf), jnp.inf),
+        nbr_lam=jnp.where(nbr_ids >= 0, pack(g.nbr_lam, 0), 0),
+        rev_ids=jnp.full_like(g.rev_ids, -1),
+        rev_lam=jnp.zeros_like(g.rev_lam),
+        rev_ptr=jnp.zeros_like(g.rev_ptr),
+        alive=filled,
+        n_valid=n_alive,
+        sq_norms=pack(g.sq_norms, 0.0),
+    )
+    g2 = graph_lib.rebuild_reverse(g2)
+    x2 = pack(x, 0)
+    return g2, x2, id_map

@@ -175,6 +175,9 @@ def graph_invariants_ok(g: KNNGraph) -> dict:
       * no self loops
       * no duplicate ids within a row
       * ids within [0, n_valid) or -1
+      * liveness: no alive row references a dead (``~alive``) neighbor —
+        forward or reverse.  ``dynamic.remove`` purges victims from every
+        list, so any dead reference after a removal is a leak.
     """
     ids, dist = g.nbr_ids, g.nbr_dist
     cap, k = ids.shape
@@ -184,10 +187,17 @@ def graph_invariants_ok(g: KNNGraph) -> dict:
     eq = (ids[:, :, None] == ids[:, None, :]) & (ids[:, :, None] >= 0)
     dup = jnp.sum(eq, axis=(1, 2)) > jnp.sum(ids >= 0, axis=1)
     in_range = jnp.all((ids == -1) | ((ids >= 0) & (ids < g.n_valid)), axis=1)
+    live_nbrs = jnp.all((ids < 0) | g.alive[jnp.maximum(ids, 0)], axis=1)
+    live_rev = jnp.all(
+        (g.rev_ids < 0) | g.alive[jnp.maximum(g.rev_ids, 0)], axis=1
+    )
     active = jnp.arange(cap) < g.n_valid
+    live_row = active & g.alive
     return {
         "sorted": jnp.where(active, sorted_ok, True),
         "no_self_loops": jnp.where(active, no_self, True),
         "no_duplicates": jnp.where(active, ~dup, True),
         "ids_in_range": jnp.where(active, in_range, True),
+        "live_neighbors": jnp.where(live_row, live_nbrs, True),
+        "live_reverse": jnp.where(live_row, live_rev, True),
     }

@@ -1,0 +1,11 @@
+"""Index lifecycle subsystem: the graph's life outside one build call.
+
+``snapshot``  — versioned on-disk format (manifest JSON + npz payload);
+``lifecycle`` — ``OnlineIndex``: auto-growth, free-slot ledger, compaction,
+                micro-batched ingest, save/load;
+``router``    — ``ShardedIndex``: one logical index over S shards.
+"""
+
+from repro.index import snapshot  # noqa: F401
+from repro.index.lifecycle import OnlineIndex  # noqa: F401
+from repro.index.router import ShardedIndex  # noqa: F401

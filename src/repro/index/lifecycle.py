@@ -1,0 +1,324 @@
+"""OnlineIndex: the index's life outside a single build call.
+
+``construct.build`` produces a graph; ``dynamic.insert``/``remove`` keep it
+current; but the seed repo left everything around those calls to the caller:
+capacity was a hard assert, removed rows leaked their slots forever, every
+tiny insert paid a full wave dispatch, and nothing survived the process.
+``OnlineIndex`` owns that lifecycle, riding the fused wave pipeline
+untouched:
+
+  * **amortized-doubling auto-growth** — an insert that would overflow the
+    data region grows graph + items to ``growth_factor * capacity`` (one
+    O(cap) copy amortized over O(cap) inserts) instead of asserting;
+  * **free-slot ledger** — ``remove`` records its victims; before growing,
+    an insert first reclaims those slots via ``compact()`` (when
+    ``auto_compact``), so steady-state churn (insert ≈ remove) runs in
+    bounded memory forever;
+  * **compact()** — re-packs alive rows with ``dynamic.compact`` and returns
+    the old→new id map so callers holding row ids (the sharded router,
+    result caches) can follow the move;
+  * **micro-batched ingest** — ``add(..., flush=False)`` buffers small
+    inserts host-side and coalesces them into ONE ``construct.build`` wave
+    (via ``dynamic.insert``) once ``ingest_batch`` items accumulate; a
+    search flushes first, so reads always observe prior writes;
+  * **snapshots** — ``save``/``load`` wrap ``repro.index.snapshot`` so a
+    serving replica restores graph + data + build config (and therefore the
+    same kernel dispatch) bit-for-bit.
+
+The facade is mutable — it *is* the serving-side state machine — but every
+underlying buffer is an immutable jax array, so ``clone()`` is O(fields) and
+gives the functional entry points in ``serve.retrieval`` copy-on-write
+semantics for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import construct, dynamic
+from repro.core import graph as graph_lib
+from repro.core import search as search_lib
+from repro.core.graph import KNNGraph
+from repro.index import snapshot as snapshot_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class OnlineIndex:
+    """A long-lived online k-NN index: graph + data + config + churn state.
+
+    Field-compatible with the old ``serve.retrieval.RetrievalIndex``
+    (``graph``, ``items``, ``build_cfg``, ``metric``), plus the lifecycle
+    state described in the module docstring.
+    """
+
+    graph: KNNGraph
+    items: Array  # (capacity, d); rows beyond n_valid are free
+    build_cfg: construct.BuildConfig
+    free_ids: tuple = ()  # ledger of removed (dead) rows < n_valid
+    pending: tuple = ()  # micro-batch ingest buffer: tuples of (m_i, d) arrays
+    ingest_batch: int = 64  # coalesce threshold for buffered adds
+    auto_compact: bool = True  # reclaim free slots before growing
+    growth_factor: float = 2.0  # amortized-doubling factor
+    last_compact_map: Optional[np.ndarray] = None  # old->new rows, last compact
+    pending_key: Optional[Array] = None  # PRNG key stashed by buffered adds
+    _ledger_synced: bool = False  # reconciliation ran (clones inherit True)
+
+    def __post_init__(self):
+        # The ledger is a host-side cache of the graph's liveness holes; the
+        # alive mask stays the ground truth.  A graph that arrives with dead
+        # rows but no ledger (a hand-built graph, or a churned graph saved
+        # through ``snapshot.save`` directly rather than ``OnlineIndex.save``)
+        # reconciles here, so capacity accounting and auto-compaction never
+        # trust stale state.  Runs once per lineage: ``clone()`` carries
+        # ``_ledger_synced``, keeping it O(fields) with no device sync.
+        if not self._ledger_synced:
+            if not self.free_ids:
+                n_valid = int(self.graph.n_valid)
+                dead = np.flatnonzero(~np.asarray(self.graph.alive[:n_valid]))
+                if dead.size:
+                    self.free_ids = tuple(int(i) for i in dead)
+            self._ledger_synced = True
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def metric(self) -> str:
+        return self.build_cfg.metric
+
+    @property
+    def capacity(self) -> int:
+        return self.graph.capacity
+
+    @property
+    def n_pending(self) -> int:
+        return sum(int(p.shape[0]) for p in self.pending)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self.free_ids)
+
+    @property
+    def n_items(self) -> int:
+        """Live catalog size: allocated − removed + buffered."""
+        return int(self.graph.n_valid) - len(self.free_ids) + self.n_pending
+
+    def clone(self) -> "OnlineIndex":
+        """O(fields) copy; jax buffers are immutable and shared."""
+        return dataclasses.replace(self)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        items: Array,
+        cfg: Optional[construct.BuildConfig] = None,
+        *,
+        capacity: Optional[int] = None,
+        key: Optional[Array] = None,
+        ingest_batch: int = 64,
+        auto_compact: bool = True,
+        growth_factor: float = 2.0,
+        **cfg_kw,
+    ) -> "OnlineIndex":
+        """Index ``items`` with online LGD/OLG construction.
+
+        ``capacity > n`` pre-allocates headroom; either way later inserts
+        auto-grow, so capacity is a hint, not a ceiling.
+        """
+        if cfg is None:
+            cfg = construct.BuildConfig(**cfg_kw)
+        elif cfg_kw:
+            raise ValueError(
+                f"pass either cfg or BuildConfig kwargs, not both (got cfg "
+                f"and {sorted(cfg_kw)})"
+            )
+        n = items.shape[0]
+        cap = capacity or n
+        g, _ = construct.build(items, cfg, key)
+        if cap > n:
+            g = graph_lib.grow_graph(g, cap)
+            items = jnp.pad(items, ((0, cap - n), (0, 0)))
+        return cls(
+            graph=g,
+            items=items,
+            build_cfg=cfg,
+            ingest_batch=ingest_batch,
+            auto_compact=auto_compact,
+            growth_factor=growth_factor,
+        )
+
+    # -- churn ---------------------------------------------------------------
+
+    def add(
+        self,
+        new_items: Array,
+        *,
+        key: Optional[Array] = None,
+        flush: Optional[bool] = None,
+    ) -> "OnlineIndex":
+        """Insert items (catalog listing).
+
+        ``flush=False`` only buffers; ``flush=True`` forces the insertion
+        wave now; the default flushes once ``ingest_batch`` items are
+        buffered — the micro-batch path that coalesces trickling single-item
+        inserts into one wave.  A ``key`` supplied with a buffered add is
+        stashed and used by the eventual coalescing flush, so replicas fed
+        the same (items, key) sequence build the same graph regardless of
+        when the threshold trips.  Returns self (mutates in place).
+        """
+        new_items = jnp.asarray(new_items)
+        if new_items.ndim == 1:
+            new_items = new_items[None, :]
+        if new_items.shape[0]:
+            self.pending = self.pending + (new_items,)
+        if key is not None:
+            self.pending_key = key
+        do_flush = flush if flush is not None else self.n_pending >= self.ingest_batch
+        if do_flush:
+            self.flush(key=key)
+        return self
+
+    def flush(self, *, key: Optional[Array] = None) -> "OnlineIndex":
+        """Coalesce buffered adds into one insertion wave."""
+        if not self.pending:
+            return self
+        if key is None:
+            key = self.pending_key
+        batch = jnp.concatenate(
+            [p.astype(self.items.dtype) for p in self.pending], axis=0
+        )
+        m = batch.shape[0]
+        self._ensure_room(m)
+        n0 = int(self.graph.n_valid)
+        items = self.items.at[n0 : n0 + m].set(batch)
+        g, _ = dynamic.insert(self.graph, items, m, self.build_cfg, key)
+        self.graph, self.items = g, items
+        # drained only after the wave landed: a failure above (growth OOM,
+        # insert error) leaves the buffer intact for retry, not silently lost
+        self.pending = ()
+        self.pending_key = None
+        return self
+
+    def remove(self, ids: Array) -> "OnlineIndex":
+        """Remove items (catalog withdrawal); victims enter the free-slot
+        ledger for later reclamation.  Flushes pending adds first so the
+        ledger and the graph agree on liveness; if that flush auto-compacts,
+        the caller's (pre-flush) row ids are remapped through the compaction
+        id map, so they always name the rows the caller saw.
+
+        Only ids that are in range and currently alive act (-1 result
+        padding and stale ids are no-ops); the removal batch is padded to
+        power-of-two buckets so the jitted ``dynamic.remove`` compiles
+        O(log cap) shapes, not one per batch size.
+        """
+        pre_map = self.last_compact_map
+        self.flush()
+        ids_np = np.unique(np.asarray(ids).reshape(-1).astype(np.int64))
+        if self.last_compact_map is not pre_map:
+            # the flush compacted: translate the caller's pre-flush rows
+            id_map = self.last_compact_map
+            ok = (ids_np >= 0) & (ids_np < len(id_map))
+            ids_np = id_map[ids_np[ok]]
+        alive = np.asarray(self.graph.alive)
+        ids_np = ids_np[(ids_np >= 0) & (ids_np < alive.shape[0])]
+        newly_dead = ids_np[alive[ids_np]]
+        if not newly_dead.size:
+            return self
+        bucket = 1 << int(newly_dead.size - 1).bit_length()
+        padded = np.full(bucket, -1, np.int64)
+        padded[: newly_dead.size] = newly_dead
+        self.graph = dynamic.remove(
+            self.graph, self.items, jnp.asarray(padded, jnp.int32),
+            self.metric,
+        )
+        self.free_ids = self.free_ids + tuple(int(i) for i in newly_dead)
+        return self
+
+    def compact(self) -> np.ndarray:
+        """Re-pack alive rows to the front, reclaiming the ledger's slots.
+
+        Returns the (capacity,) old→new row map (-1 for removed rows); it is
+        also retained as ``last_compact_map`` so batch entry points that
+        compact implicitly (``flush`` under ``auto_compact``) leave a trail
+        for id-holding callers (the sharded router).
+        """
+        g, x, id_map = dynamic.compact(self.graph, self.items)
+        self.graph, self.items = g, x
+        self.free_ids = ()
+        self.last_compact_map = np.asarray(id_map)
+        return self.last_compact_map
+
+    def _ensure_room(self, m: int) -> None:
+        """Make room for m tail inserts: recycle free slots, then grow."""
+        tail_room = self.capacity - int(self.graph.n_valid)
+        if m <= tail_room:
+            return
+        # recycle before growing: compaction frees the ledger's slots
+        if self.auto_compact and self.free_ids:
+            n_alive = int(self.graph.n_valid) - len(self.free_ids)
+            if n_alive + m <= self.capacity:
+                self.compact()
+                return
+        needed = int(self.graph.n_valid) + m
+        new_cap = max(needed, int(self.capacity * self.growth_factor), 1)
+        self.graph = graph_lib.grow_graph(self.graph, new_cap)
+        self.items = jnp.pad(
+            self.items, ((0, new_cap - self.items.shape[0]), (0, 0))
+        )
+
+    # -- search --------------------------------------------------------------
+
+    def search(
+        self,
+        queries: Array,
+        top_k: int,
+        *,
+        beam: Optional[int] = None,
+        key: Optional[Array] = None,
+    ) -> search_lib.SearchResult:
+        """Per-query EHC search (flushes buffered adds first).
+
+        This is the raw (B, k) search surface; the serving-side merge/dedupe
+        and score convention live in ``serve.retrieval.retrieve``.
+        """
+        self.flush()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        scfg = search_lib.SearchConfig(
+            k=top_k,
+            beam=max(beam or 2 * top_k, top_k),
+            metric=self.metric,
+            use_lgd_mask=self.build_cfg.lgd,
+            use_pallas=self.build_cfg.use_pallas,
+        )
+        return search_lib.search(self.graph, self.items, queries, key, scfg)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Snapshot graph + data + config (flushes buffered adds first)."""
+        self.flush()
+        return snapshot_lib.save(
+            path,
+            self.graph,
+            self.items,
+            self.build_cfg,
+            extra_meta={"free_ids": [int(i) for i in self.free_ids]},
+        )
+
+    @classmethod
+    def load(cls, path: str, **lifecycle_kw) -> "OnlineIndex":
+        """Restore an index a snapshot-for-snapshot replica of the saved one."""
+        g, items, cfg, manifest = snapshot_lib.load(path)
+        free = tuple(manifest.get("extra", {}).get("free_ids", []))
+        return cls(
+            graph=g, items=items, build_cfg=cfg, free_ids=free, **lifecycle_kw
+        )

@@ -1,0 +1,250 @@
+"""Sharded serving router: one logical index over S per-shard OnlineIndexes.
+
+The ROADMAP's north star — heavy traffic over a catalog too big for one
+device — needs the standard ANN serving shape: partition the catalog across
+shards, fan each query out, and merge per-shard top-k into a global answer.
+Each shard is a full ``OnlineIndex`` (its own graph, data region, free-slot
+ledger and snapshot), so every lifecycle capability composes with sharding
+for free.
+
+Routing policies (recorded in ROADMAP "Architecture decisions in force"):
+
+  * **queries** fan out to every shard and merge by distance — the per-shard
+    searches are independent EHC walks over disjoint catalogs, so the merged
+    global top-k over brute per-shard results is *exactly* the unsharded
+    top-k (the property the router tests pin);
+  * **inserts** route to the least-full shard (by live item count), keeping
+    shards balanced without a hash ring;
+  * **removals** route by id ownership: the router owns the global id space
+    and keeps a per-shard local-row → global-id table, remapped whenever a
+    shard compacts (shards surface their ``last_compact_map``).
+
+Global ids are stable for the life of the router — shard-internal row moves
+(compaction, growth) never leak to callers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import construct
+from repro.index.lifecycle import OnlineIndex
+
+Array = jax.Array
+
+_MANIFEST = "router.json"
+
+
+class ShardedIndex:
+    """S ``OnlineIndex`` shards serving one logical catalog."""
+
+    def __init__(
+        self,
+        shards: list,
+        gids: list,
+        next_gid: int,
+    ):
+        self.shards: list[OnlineIndex] = shards
+        # per shard: (shard capacity,) int64, local row -> global id (-1 free)
+        self.gids: list[np.ndarray] = [np.asarray(g, np.int64) for g in gids]
+        self.next_gid = int(next_gid)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        items: Array,
+        n_shards: int,
+        cfg: Optional[construct.BuildConfig] = None,
+        *,
+        key: Optional[Array] = None,
+        **build_kw,
+    ) -> "ShardedIndex":
+        """Partition ``items`` into contiguous blocks and build each shard.
+
+        Global ids are the original row indices of ``items`` — a catalog
+        indexed sharded or unsharded answers queries in the same id space.
+        """
+        n = items.shape[0]
+        if not 1 <= n_shards <= n:
+            raise ValueError(f"need 1 <= n_shards <= n, got {n_shards} for n={n}")
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        bounds = np.linspace(0, n, n_shards + 1).astype(int)
+        shards, gids = [], []
+        for s in range(n_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            shard = OnlineIndex.build(
+                items[lo:hi], cfg, key=jax.random.fold_in(key, s), **build_kw
+            )
+            table = np.full(shard.capacity, -1, np.int64)
+            table[: hi - lo] = np.arange(lo, hi)
+            shards.append(shard)
+            gids.append(table)
+        return cls(shards, gids, next_gid=n)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_items(self) -> int:
+        return sum(s.n_items for s in self.shards)
+
+    @property
+    def metric(self) -> str:
+        return self.shards[0].metric
+
+    # -- shard-table maintenance ---------------------------------------------
+
+    def _sync_table(self, s: int) -> None:
+        """Absorb shard-internal row moves: compaction remap + growth pad."""
+        shard = self.shards[s]
+        table = self.gids[s]
+        if shard.last_compact_map is not None:
+            id_map = shard.last_compact_map  # old row -> new row
+            new_table = np.full(max(len(id_map), shard.capacity), -1, np.int64)
+            moved = id_map >= 0
+            new_table[id_map[moved]] = table[: len(id_map)][moved]
+            table = new_table
+            shard.last_compact_map = None
+        if len(table) < shard.capacity:  # shard grew
+            table = np.concatenate(
+                [table, np.full(shard.capacity - len(table), -1, np.int64)]
+            )
+        self.gids[s] = table
+
+    # -- churn ---------------------------------------------------------------
+
+    def add(self, new_items: Array, *, key: Optional[Array] = None) -> np.ndarray:
+        """Insert a batch; routed to the least-full shard.  Returns the
+        assigned global ids."""
+        new_items = jnp.asarray(new_items)
+        if new_items.ndim == 1:
+            new_items = new_items[None, :]
+        m = int(new_items.shape[0])
+        if m == 0:
+            return np.empty((0,), np.int64)
+        s = int(np.argmin([sh.n_items for sh in self.shards]))
+        shard = self.shards[s]
+        shard.add(new_items, key=key, flush=True)
+        self._sync_table(s)
+        n1 = int(shard.graph.n_valid)
+        new_gids = np.arange(self.next_gid, self.next_gid + m, dtype=np.int64)
+        self.gids[s][n1 - m : n1] = new_gids
+        self.next_gid += m
+        return new_gids
+
+    def remove(self, global_ids) -> int:
+        """Withdraw global ids; routed by ownership.  Returns #removed."""
+        want = np.unique(np.asarray(global_ids, np.int64))
+        want = want[want >= 0]  # -1 is the tables' free-slot sentinel
+        removed = 0
+        for s, shard in enumerate(self.shards):
+            self._sync_table(s)  # local rows must be current before lookup
+            table = self.gids[s]
+            local = np.nonzero(np.isin(table, want))[0]
+            if not local.size:
+                continue
+            shard.remove(jnp.asarray(local, jnp.int32))
+            table[local] = -1
+            removed += local.size
+        return removed
+
+    def compact(self) -> None:
+        """Compact every shard, following the row moves in the id tables."""
+        for s, shard in enumerate(self.shards):
+            if shard.free_slots:
+                shard.compact()
+                self._sync_table(s)
+
+    # -- serving -------------------------------------------------------------
+
+    def retrieve(
+        self,
+        interests: Array,
+        top_k: int,
+        *,
+        beam: Optional[int] = None,
+        key: Optional[Array] = None,
+        brute: bool = False,
+    ):
+        """Fan out to every shard, merge per-shard top-k globally.
+
+        Returns (global ids (top_k,), scores (top_k,)) in the serving score
+        convention (``serve.retrieval.score_from_dist``).  ``brute=True``
+        serves each shard exactly — the merged result is then exactly the
+        unsharded brute answer (the router's correctness oracle).
+        """
+        from repro.serve import retrieval  # late: serve imports repro.index
+
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        all_gids, all_dist = [], []
+        for s, shard in enumerate(self.shards):
+            if brute:
+                ids, scores = retrieval.retrieve_brute(shard, interests, top_k)
+            else:
+                ids, scores = retrieval.retrieve(
+                    shard, interests, top_k, beam=beam,
+                    key=jax.random.fold_in(key, s),
+                )
+            ids = np.asarray(ids)
+            # scores -> distances for a convention-free merge; score_from_dist
+            # is an involution (negation for similarity metrics, identity
+            # otherwise)
+            dist = np.asarray(retrieval.score_from_dist(scores, self.metric))
+            # drop -1 padding AND inf-distance filler: a shard with fewer
+            # than top_k live items pads with dedupe-masked duplicates whose
+            # distance is inf — letting them through would surface duplicate
+            # global ids in a scarce merged result
+            ok = (ids >= 0) & np.isfinite(dist)
+            all_gids.append(self.gids[s][ids[ok]])
+            all_dist.append(dist[ok])
+        gids = np.concatenate(all_gids)
+        dist = np.concatenate(all_dist)
+        order = np.argsort(dist, kind="stable")[:top_k]
+        out_ids = np.full(top_k, -1, np.int64)
+        out_dist = np.full(top_k, np.inf, np.float32)
+        out_ids[: order.size] = gids[order]
+        out_dist[: order.size] = dist[order]
+        return out_ids, retrieval.score_from_dist(out_dist, self.metric)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Snapshot the router: per-shard snapshots + the id tables."""
+        os.makedirs(path, exist_ok=True)
+        for s, shard in enumerate(self.shards):
+            shard.save(os.path.join(path, f"shard_{s:03d}"))
+        np.savez(
+            os.path.join(path, "router_tables.npz"),
+            **{f"gids_{s}": t for s, t in enumerate(self.gids)},
+        )
+        with open(os.path.join(path, _MANIFEST), "w") as f:
+            json.dump(
+                {"n_shards": self.n_shards, "next_gid": self.next_gid}, f
+            )
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ShardedIndex":
+        with open(os.path.join(path, _MANIFEST)) as f:
+            man = json.load(f)
+        with np.load(os.path.join(path, "router_tables.npz")) as z:
+            gids = [z[f"gids_{s}"] for s in range(man["n_shards"])]
+        shards = [
+            OnlineIndex.load(os.path.join(path, f"shard_{s:03d}"))
+            for s in range(man["n_shards"])
+        ]
+        return cls(shards, gids, next_gid=man["next_gid"])

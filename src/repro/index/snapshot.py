@@ -1,0 +1,254 @@
+"""Versioned on-disk snapshots of a k-NN index: manifest JSON + npz payload.
+
+The paper's index lives *online* — samples join and leave without a rebuild —
+which only pays off if the index also lives *longer than one process*.  A
+snapshot captures everything a serving replica needs to resume: the forward
+graph (``nbr_ids``/``nbr_dist``/``nbr_lam``), the reverse side
+(``rev_ids``/``rev_lam``/``rev_ptr``), the liveness mask, the backing data
+region, and the ``BuildConfig`` that built it (so churn after restore runs
+the same kernel path and wave shape as the original build).
+
+Format (a directory, so payloads can grow side files without a version bump):
+
+    <path>/manifest.json   human-readable header: format version, shapes,
+                           dtypes, build config, provenance
+    <path>/payload.npz     the arrays, canonical dtypes (int32/float32/bool)
+
+Restore policy — the part that makes snapshots survive format-version bumps
+and dtype drift:
+
+  * every array is cast back to its canonical dtype on load (a payload
+    written by a future JAX that changed a default dtype still restores);
+  * ``sq_norms`` is NOT stored: it is re-derived through
+    ``graph.squared_norms`` / ``graph.attach_sq_norms`` — the single
+    definition of the norm-cache contents — so a snapshot can never smuggle
+    in a stale cache, and a format bump that changes the cache definition
+    re-materializes it correctly on load;
+  * the reverse side is validated against the structural contract of
+    ``graph.rebuild_reverse`` (ids in range, live owners); a payload that
+    predates ``rev_lam`` (or fails validation) is repaired by rebuilding the
+    reverse lists from the forward lists — the canonical repair path.
+
+``BuildConfig`` round-trips as a plain dict filtered against the dataclass's
+current fields: configs written before a field existed pick up its default,
+fields that were deleted are dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import construct, graph as graph_lib
+from repro.core.graph import KNNGraph
+
+Array = jax.Array
+
+FORMAT_VERSION = 1
+
+MANIFEST_NAME = "manifest.json"
+PAYLOAD_NAME = "payload.npz"
+
+# canonical dtype per persisted array — load casts back through this table,
+# so dtype drift in a writer (or a future numpy default) cannot leak into the
+# restored graph
+_CANONICAL = {
+    "nbr_ids": np.int32,
+    "nbr_dist": np.float32,
+    "nbr_lam": np.int32,
+    "rev_ids": np.int32,
+    "rev_lam": np.int32,
+    "rev_ptr": np.int32,
+    "alive": np.bool_,
+    "items": np.float32,
+}
+
+
+def _config_dict(cfg: construct.BuildConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    # None round-trips through JSON; everything else in BuildConfig is a
+    # scalar already
+    return d
+
+
+def _config_from_dict(d: dict) -> construct.BuildConfig:
+    known = {f.name for f in dataclasses.fields(construct.BuildConfig)}
+    return construct.BuildConfig(**{k: v for k, v in d.items() if k in known})
+
+
+def save(
+    path: str,
+    g: KNNGraph,
+    items: Array,
+    cfg: construct.BuildConfig,
+    *,
+    extra_meta: Optional[dict] = None,
+) -> str:
+    """Write a versioned snapshot of (graph, data, config) under ``path``.
+
+    ``items`` is the (capacity, d) data region backing the graph rows.  Data
+    stored in a non-float32 dtype (e.g. ``data_bf16`` builds) is persisted as
+    float32 — lossless for bf16 — with the original dtype recorded in the
+    manifest and restored on load.  The write is crash-atomic (staged then
+    swapped in), and overwriting an existing snapshot is safe.
+    """
+    arrays = {
+        "nbr_ids": np.asarray(g.nbr_ids),
+        "nbr_dist": np.asarray(g.nbr_dist),
+        "nbr_lam": np.asarray(g.nbr_lam),
+        "rev_ids": np.asarray(g.rev_ids),
+        "rev_lam": np.asarray(g.rev_lam),
+        "rev_ptr": np.asarray(g.rev_ptr),
+        "alive": np.asarray(g.alive),
+        "items": np.asarray(items.astype(jnp.float32)),
+    }
+    arrays = {k: v.astype(_CANONICAL[k]) for k, v in arrays.items()}
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "jax_version": jax.__version__,
+        "n_valid": int(g.n_valid),
+        "capacity": int(g.capacity),
+        "k": int(g.k),
+        "rev_capacity": int(g.rev_capacity),
+        "dim": int(items.shape[1]),
+        "items_dtype": str(items.dtype),
+        "build_config": _config_dict(cfg),
+        "arrays": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in arrays.items()
+        },
+    }
+    if extra_meta:
+        manifest["extra"] = extra_meta
+    # crash-atomic: stage payload + manifest into a sibling temp dir, then
+    # swap it in — a process dying mid-save can never leave a torn snapshot
+    # (stale manifest over a new payload, or a truncated npz) at ``path``
+    stage = path.rstrip(os.sep) + ".tmp"
+    if os.path.isdir(stage):
+        shutil.rmtree(stage)
+    os.makedirs(stage)
+    np.savez(os.path.join(stage, PAYLOAD_NAME), **arrays)
+    with open(os.path.join(stage, MANIFEST_NAME), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    old = None
+    if os.path.isdir(path) and os.listdir(path):
+        old = path.rstrip(os.sep) + ".old"
+        if os.path.isdir(old):
+            shutil.rmtree(old)
+        os.replace(path, old)
+    elif os.path.isdir(path):
+        os.rmdir(path)
+    os.replace(stage, path)
+    if old is not None:
+        shutil.rmtree(old)
+    return path
+
+
+def _reverse_ok(g: KNNGraph) -> bool:
+    """Structural contract of the reverse side: ids in [-1, capacity), no
+    dead owners, non-negative append counters.  ``rev_ptr`` has NO upper
+    bound by design — it counts *total* appends (``mod R`` gives the ring
+    write slot), so values above ``rev_capacity`` are the normal state of an
+    incrementally-maintained graph, not corruption."""
+    ids = g.rev_ids
+    in_range = bool(jnp.all((ids >= -1) & (ids < g.capacity)))
+    owners_alive = bool(jnp.all((ids < 0) | g.alive[jnp.maximum(ids, 0)]))
+    ptr_ok = bool(jnp.all(g.rev_ptr >= 0))
+    return in_range and owners_alive and ptr_ok
+
+
+def load(
+    path: str, *, validate_reverse: bool = True
+) -> tuple[KNNGraph, Array, construct.BuildConfig, dict]:
+    """Restore (graph, items, config, manifest) from a snapshot directory.
+
+    Raises ``ValueError`` for snapshots written by a NEWER format than this
+    reader understands; older formats load with repairs (see module doc).
+    """
+    with open(os.path.join(path, MANIFEST_NAME)) as f:
+        manifest = json.load(f)
+    version = int(manifest.get("format_version", 0))
+    if version > FORMAT_VERSION:
+        raise ValueError(
+            f"snapshot at {path!r} has format_version {version}; this reader "
+            f"understands <= {FORMAT_VERSION}"
+        )
+    with np.load(os.path.join(path, PAYLOAD_NAME)) as z:
+        raw = {k: z[k] for k in z.files}
+
+    def arr(name: str) -> Optional[np.ndarray]:
+        v = raw.get(name)
+        return None if v is None else np.asarray(v, _CANONICAL[name])
+
+    missing = [k for k in ("nbr_ids", "nbr_dist", "nbr_lam", "items")
+               if k not in raw]
+    if missing:
+        raise ValueError(
+            f"snapshot at {path!r} is missing payload arrays {missing}; the "
+            "forward graph and data region are not reconstructible"
+        )
+    # manifest/payload agreement: a torn or mixed-up snapshot (stale manifest
+    # over a different payload) must fail cleanly here, not as a cryptic
+    # indexing error after restore
+    for name, spec in manifest.get("arrays", {}).items():
+        if name in raw and list(raw[name].shape) != list(spec["shape"]):
+            raise ValueError(
+                f"snapshot at {path!r} is corrupt: payload array {name!r} has "
+                f"shape {list(raw[name].shape)}, manifest records "
+                f"{spec['shape']}"
+            )
+    nbr_ids = arr("nbr_ids")
+    cap, k = nbr_ids.shape
+    rev_cap = int(manifest.get("rev_capacity", 2 * k))
+    if not 0 <= int(manifest["n_valid"]) <= cap:
+        raise ValueError(
+            f"snapshot at {path!r} is corrupt: n_valid {manifest['n_valid']} "
+            f"outside [0, capacity={cap}]"
+        )
+    n_valid = jnp.asarray(int(manifest["n_valid"]), jnp.int32)
+
+    alive_np = arr("alive")
+    if alive_np is None:  # pre-liveness payloads: every allocated row lives
+        alive_np = np.arange(cap) < int(manifest["n_valid"])
+
+    items = jnp.asarray(arr("items"))
+    items_dtype = manifest.get("items_dtype", "float32")
+    if items_dtype != "float32":
+        items = items.astype(jnp.dtype(items_dtype))
+
+    def rev_or(name: str, fill, shape) -> np.ndarray:
+        v = arr(name)
+        return v if v is not None else np.full(shape, fill, _CANONICAL[name])
+
+    g = KNNGraph(
+        nbr_ids=jnp.asarray(nbr_ids),
+        nbr_dist=jnp.asarray(arr("nbr_dist")),
+        nbr_lam=jnp.asarray(arr("nbr_lam")),
+        rev_ids=jnp.asarray(rev_or("rev_ids", -1, (cap, rev_cap))),
+        rev_lam=jnp.asarray(rev_or("rev_lam", 0, (cap, rev_cap))),
+        rev_ptr=jnp.asarray(rev_or("rev_ptr", 0, (cap,))),
+        alive=jnp.asarray(alive_np),
+        n_valid=n_valid,
+        sq_norms=jnp.zeros((cap,), jnp.float32),
+    )
+    # norm cache: always re-derived from the data through the one definition
+    # of its contents — never trusted from disk
+    g = graph_lib.attach_sq_norms(g, items.astype(jnp.float32))
+    # reverse side: repair payloads that predate rev_lam or fail the
+    # structural contract by rebuilding from the forward lists
+    rev_missing = "rev_ids" not in raw or "rev_lam" not in raw
+    if rev_missing or (validate_reverse and not _reverse_ok(g)):
+        g = graph_lib.rebuild_reverse(g)
+
+    cfg = _config_from_dict(manifest.get("build_config", {}))
+    return g, items, cfg, manifest

@@ -4,9 +4,19 @@
     PYTHONPATH=src python -m repro.launch.serve --mode retrieval \
         --n-items 8000 --d 16 --requests 20 --topk 10
 
+    # same, but sharded over 4 OnlineIndex shards and served through the
+    # router, with a snapshot save -> restore before serving:
+    PYTHONPATH=src python -m repro.launch.serve --mode retrieval \
+        --shards 4 --snapshot /tmp/idx_snap
+
     # LM decode micro-serving (smoke config, KV-cache decode loop):
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma3-1b \
         --batch 4 --prompt-len 32 --gen 16
+
+Retrieval serving runs on the index lifecycle subsystem (``repro.index``):
+a single ``OnlineIndex`` for ``--shards 1``, the fan-out/merge
+``ShardedIndex`` router above it otherwise; ``--snapshot PATH`` exercises
+the versioned save/restore path before taking traffic.
 """
 
 from __future__ import annotations
@@ -22,21 +32,43 @@ from repro import configs
 
 
 def serve_retrieval(args):
+    from repro.index import OnlineIndex, ShardedIndex
     from repro.serve import retrieval
 
     key = jax.random.PRNGKey(0)
     items = jax.random.normal(key, (args.n_items, args.d))
     items = items / jnp.linalg.norm(items, axis=1, keepdims=True)
     t0 = time.time()
-    index = retrieval.build_index(items, k=16, metric="ip", wave=512,
-                                  key=jax.random.PRNGKey(1))
-    print(f"indexed {args.n_items} items in {time.time()-t0:.1f}s")
+    if args.shards > 1:
+        index = ShardedIndex.build(
+            items, args.shards, k=16, metric="ip", wave=512,
+            key=jax.random.PRNGKey(1),
+        )
+        print(f"indexed {args.n_items} items over {args.shards} shards "
+              f"in {time.time()-t0:.1f}s")
+    else:
+        index = retrieval.build_index(items, k=16, metric="ip", wave=512,
+                                      key=jax.random.PRNGKey(1))
+        print(f"indexed {args.n_items} items in {time.time()-t0:.1f}s")
+
+    if args.snapshot:  # versioned save -> restore before taking traffic
+        t0 = time.time()
+        index.save(args.snapshot)
+        cls = ShardedIndex if args.shards > 1 else OnlineIndex
+        index = cls.load(args.snapshot)
+        print(f"snapshot round trip ({args.snapshot}) in {time.time()-t0:.1f}s")
+
+    def one_request(q):
+        if args.shards > 1:
+            return index.retrieve(q, args.topk, beam=48)
+        return retrieval.retrieve(index, q, args.topk, beam=48)
+
     lat = []
     for r in range(args.requests):
         q = jax.random.normal(jax.random.fold_in(key, 100 + r), (4, args.d))
         t0 = time.time()
-        ids, scores = retrieval.retrieve(index, q, args.topk, beam=48)
-        jax.block_until_ready(ids)
+        ids, scores = one_request(q)
+        jax.block_until_ready(jnp.asarray(scores))
         lat.append(time.time() - t0)
     lat_ms = np.asarray(lat[2:]) * 1e3  # drop warmup
     print(f"{args.requests} requests: p50={np.percentile(lat_ms,50):.1f}ms "
@@ -79,6 +111,11 @@ def main():
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--n-items", type=int, default=8000)
     ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve through the ShardedIndex router (>1)")
+    ap.add_argument("--snapshot", type=str, default=None, metavar="PATH",
+                    help="save + restore the index through a snapshot "
+                         "before serving")
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)

@@ -11,33 +11,45 @@ Because construction is online, catalog churn (new items listed, stale items
 withdrawn) maps to ``core.dynamic.insert``/``remove`` — no index rebuilds,
 which is precisely the capability the paper contributes over offline
 builders (NN-Descent / DPG / HNSW).
+
+The index object here is ``repro.index.OnlineIndex`` — the lifecycle facade
+that owns capacity (auto-growth instead of the old hard assert), recycles
+removed rows (free-slot ledger + compaction), coalesces small inserts, and
+snapshots to disk.  ``RetrievalIndex`` remains as an alias for existing
+callers.  The entry points below keep their functional contract: they
+``clone()`` (O(fields); jax buffers are immutable) and mutate the copy.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import brute, construct, dynamic, segments
-from repro.core import search as search_lib
-from repro.core.graph import KNNGraph
+from repro.core import brute, construct, segments
+from repro.index.lifecycle import OnlineIndex
 
 Array = jax.Array
 
+# legacy name — the serving index IS the lifecycle facade now
+RetrievalIndex = OnlineIndex
 
-@dataclasses.dataclass
-class RetrievalIndex:
-    graph: KNNGraph
-    items: Array  # (capacity, d) item embeddings (rows >= n_valid are free)
-    metric: str
-    build_cfg: construct.BuildConfig
+#: metrics where the underlying "distance" is a negated similarity, so the
+#: serving score flips sign to restore "higher = better"
+SIMILARITY_METRICS = ("ip", "cosine")
 
-    @property
-    def n_items(self) -> int:
-        return int(self.graph.n_valid)
+
+def score_from_dist(dist: Array, metric: str) -> Array:
+    """Serving score convention, one place for every metric.
+
+    Similarity metrics (inner product, cosine) surface scores where higher =
+    better; true distance metrics (l2, l1, chi2) surface the distance itself
+    (lower = better).  The helper is an involution — applying it to a score
+    returns the distance — which is what the sharded router relies on to
+    merge per-shard results in a convention-free way.
+    """
+    return -dist if metric in SIMILARITY_METRICS else dist
 
 
 def build_index(
@@ -50,7 +62,7 @@ def build_index(
     key: Optional[Array] = None,
     beam: int = 40,
     use_pallas: Optional[bool] = None,
-) -> RetrievalIndex:
+) -> OnlineIndex:
     """Index a candidate bank with online LGD construction.
 
     ``use_pallas`` follows the three-way dispatch of ``SearchConfig``: the
@@ -62,19 +74,11 @@ def build_index(
     cfg = construct.BuildConfig(
         k=k, metric=metric, wave=wave, lgd=True, beam=beam, use_pallas=use_pallas
     )
-    n = items.shape[0]
-    cap = capacity or n
-    g, _ = construct.build(items, cfg, key)  # index the REAL rows only
-    if cap > n:  # headroom for future add_items (rows stay unallocated)
-        from repro.core.graph import grow_graph
-
-        g = grow_graph(g, cap)
-        items = jnp.pad(items, ((0, cap - n), (0, 0)))
-    return RetrievalIndex(graph=g, items=items, metric=metric, build_cfg=cfg)
+    return OnlineIndex.build(items, cfg, capacity=capacity, key=key)
 
 
 def retrieve(
-    index: RetrievalIndex,
+    index: OnlineIndex,
     interests: Array,  # (K, d) query vectors (MIND interests, or any queries)
     top_k: int,
     *,
@@ -83,19 +87,13 @@ def retrieve(
 ):
     """k-NN retrieval: EHC search per interest + cross-interest dedupe/merge.
 
-    Returns (item_ids (top_k,), scores (top_k,)) — scores are inner products
-    (higher = better) when metric='ip'.
+    Returns (item_ids (top_k,), scores (top_k,)) — scores follow
+    ``score_from_dist``: higher = better for similarity metrics (ip,
+    cosine), plain distances (lower = better) otherwise.
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    scfg = search_lib.SearchConfig(
-        k=top_k,
-        beam=max(beam or 2 * top_k, top_k),
-        metric=index.metric,
-        use_lgd_mask=True,
-        use_pallas=index.build_cfg.use_pallas,  # serve on the build's kernel path
-    )
-    res = search_lib.search(index.graph, index.items, interests, key, scfg)
+    # one search dispatch for facade and serving: OnlineIndex.search flushes
+    # buffered writes and serves on the build's kernel path / LGD setting
+    res = index.search(interests, top_k, beam=beam, key=key)
     ids = res.ids.reshape(-1)
     dist = res.dists.reshape(-1)
     # cross-interest dedupe: keep the best (smallest-distance) copy —
@@ -106,16 +104,20 @@ def retrieve(
     dist_s = jnp.where(dup | (ids_s < 0), jnp.inf, dist[order])
     sel = jnp.argsort(dist_s)[:top_k]
     out_ids = ids_s[sel]
-    out_dist = dist_s[sel]
-    score = -out_dist if index.metric == "ip" else out_dist
-    return out_ids, score
+    return out_ids, score_from_dist(dist_s[sel], index.metric)
 
 
-def retrieve_brute(index: RetrievalIndex, interests: Array, top_k: int):
-    """Exact baseline (the retrieval_cand roofline cell): full GEMM + top-k."""
+def retrieve_brute(index: OnlineIndex, interests: Array, top_k: int):
+    """Exact baseline (the retrieval_cand roofline cell): full GEMM + top-k.
+
+    Honors catalog churn exactly: buffered adds are flushed and removed rows
+    are masked out via ``KNNGraph.alive``, so this stays the oracle for the
+    graph path on a churned index.
+    """
+    index.flush()
     ids, dist = brute.brute_force_knn(
         index.items, interests, top_k, index.metric,
-        n_valid=index.graph.n_valid, use_pallas=False,
+        n_valid=index.graph.n_valid, alive=index.graph.alive, use_pallas=False,
     )
     flat_i = ids.reshape(-1)
     flat_d = dist.reshape(-1)
@@ -124,22 +126,23 @@ def retrieve_brute(index: RetrievalIndex, interests: Array, top_k: int):
     dup = segments.mask_row_duplicates(ids_s[None, :])[0]
     d_s = jnp.where(dup | (ids_s < 0), jnp.inf, flat_d[order])
     sel = jnp.argsort(d_s)[:top_k]
-    score = -d_s[sel] if index.metric == "ip" else d_s[sel]
-    return ids_s[sel], score
+    return ids_s[sel], score_from_dist(d_s[sel], index.metric)
 
 
-def add_items(index: RetrievalIndex, new_items: Array, key=None) -> RetrievalIndex:
-    """Catalog insert: append rows + online insertion waves (§IV-C)."""
-    n0 = int(index.graph.n_valid)
-    m = new_items.shape[0]
-    items = index.items
-    assert n0 + m <= items.shape[0], "capacity exceeded — grow the index"
-    items = items.at[n0 : n0 + m].set(new_items)
-    g, _ = dynamic.insert(index.graph, items, m, index.build_cfg, key)
-    return dataclasses.replace(index, graph=g, items=items)
+def add_items(index: OnlineIndex, new_items: Array, key=None) -> OnlineIndex:
+    """Catalog insert: append rows + online insertion waves (§IV-C).
+
+    Functional: returns a new index, the argument is untouched.  Capacity is
+    managed by the lifecycle layer — an over-capacity insert recycles free
+    slots or grows the index (amortized doubling), it never raises.
+    """
+    return index.clone().add(new_items, key=key, flush=True)
 
 
-def remove_items(index: RetrievalIndex, ids: Array) -> RetrievalIndex:
-    """Catalog withdraw: the paper's O(k²/2) removal with λ repair."""
-    g = dynamic.remove(index.graph, index.items, ids, index.metric)
-    return dataclasses.replace(index, graph=g)
+def remove_items(index: OnlineIndex, ids: Array) -> OnlineIndex:
+    """Catalog withdraw: the paper's O(k²/2) removal with λ repair.
+
+    Functional, like ``add_items``; the victims enter the returned index's
+    free-slot ledger for later recycling.
+    """
+    return index.clone().remove(ids)

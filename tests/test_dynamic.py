@@ -69,6 +69,11 @@ class TestInsertRemoveRoundTrip:
         assert not bool(jnp.any(g2.alive[victims]))
         assert not bool(jnp.any(g2.nbr_ids >= N0))
         assert not bool(jnp.any(g2.rev_ids >= N0))
+        # liveness invariant: no alive row references a dead neighbor,
+        # forward or reverse (graph_invariants_ok's live_* checks)
+        inv = graph_lib.graph_invariants_ok(g2)
+        for name, ok in inv.items():
+            assert bool(jnp.all(ok)), name
 
         rec_after = _search_recall(g2, data, queries, truth_base)
         assert rec_after >= rec_before - 0.05, (rec_before, rec_after)

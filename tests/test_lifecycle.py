@@ -1,0 +1,391 @@
+"""Index lifecycle subsystem (repro.index): snapshots, churn, sharding.
+
+Pins the PR-4 acceptance contracts:
+  * snapshot save→load round trip is BIT-exact on every persisted array and
+    search-result-identical (the re-derived norm cache included);
+  * ``compact()`` after removing 25% of rows recovers the freed capacity
+    while keeping brute-force-checked recall@10 within 0.02, and restores
+    the norm-cache / rev_lam invariants exactly;
+  * over-capacity insert grows (amortized doubling) instead of raising —
+    the old ``assert n0 + m <= capacity`` is unreachable;
+  * steady-state churn (insert ≈ remove) recycles the free-slot ledger and
+    never grows capacity;
+  * the sharded router's merged top-k matches the single-index answer on a
+    partitioned catalog (exactly, under per-shard brute force), and global
+    ids survive shard-internal compaction.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import brute, construct, dynamic
+from repro.core import graph as graph_lib
+from repro.index import OnlineIndex, ShardedIndex, snapshot
+from repro.serve import retrieval
+
+N, D, K = 600, 8, 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.RandomState(0)
+    return jnp.asarray(rng.rand(N, D).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def queries():
+    rng = np.random.RandomState(42)
+    return jnp.asarray(rng.rand(32, D).astype(np.float32))
+
+
+def _cfg(**kw):
+    base = dict(k=K, metric="l2", wave=128, lgd=True, beam=24, n_seeds=4,
+                hash_slots=512, max_iters=32)
+    base.update(kw)
+    return construct.BuildConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def index(data):
+    return OnlineIndex.build(data, _cfg(), key=jax.random.PRNGKey(1))
+
+
+def _graph_fields_equal(a: graph_lib.KNNGraph, b: graph_lib.KNNGraph) -> dict:
+    return {
+        f: np.array_equal(np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
+        for f in ("nbr_ids", "nbr_dist", "nbr_lam", "rev_ids", "rev_lam",
+                  "rev_ptr", "alive", "sq_norms")
+    }
+
+
+class TestSnapshot:
+    def test_round_trip_bit_exact(self, index, tmp_path):
+        path = index.save(str(tmp_path / "snap"))
+        idx2 = OnlineIndex.load(path)
+        eq = _graph_fields_equal(index.graph, idx2.graph)
+        assert all(eq.values()), eq
+        assert int(idx2.graph.n_valid) == int(index.graph.n_valid)
+        np.testing.assert_array_equal(
+            np.asarray(index.items), np.asarray(idx2.items)
+        )
+        assert idx2.build_cfg == index.build_cfg
+
+    def test_round_trip_search_identical(self, index, queries, tmp_path):
+        idx2 = OnlineIndex.load(index.save(str(tmp_path / "snap")))
+        key = jax.random.PRNGKey(7)
+        ids0, s0 = retrieval.retrieve(index, queries[:4], 10, key=key)
+        ids1, s1 = retrieval.retrieve(idx2, queries[:4], 10, key=key)
+        np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    def test_round_trip_after_churn(self, index, data, tmp_path):
+        """A churned index (dead rows, free ledger) snapshots faithfully."""
+        idx = index.clone().remove(jnp.arange(0, 50, dtype=jnp.int32))
+        idx2 = OnlineIndex.load(idx.save(str(tmp_path / "churned")))
+        eq = _graph_fields_equal(idx.graph, idx2.graph)
+        assert all(eq.values()), eq
+        assert idx2.free_slots == idx.free_slots == 50
+
+    def test_newer_format_version_rejected(self, index, tmp_path):
+        path = index.save(str(tmp_path / "snap"))
+        man_path = os.path.join(path, snapshot.MANIFEST_NAME)
+        with open(man_path) as f:
+            man = json.load(f)
+        man["format_version"] = snapshot.FORMAT_VERSION + 1
+        with open(man_path, "w") as f:
+            json.dump(man, f)
+        with pytest.raises(ValueError, match="format_version"):
+            snapshot.load(path)
+
+    def test_legacy_payload_without_reverse_rebuilds(self, index, tmp_path):
+        """A payload that predates rev_lam restores via rebuild_reverse."""
+        path = index.save(str(tmp_path / "snap"))
+        npz = os.path.join(path, snapshot.PAYLOAD_NAME)
+        with np.load(npz) as z:
+            arrays = {k: z[k] for k in z.files
+                      if k not in ("rev_ids", "rev_lam", "rev_ptr")}
+        np.savez(npz, **arrays)
+        g, _, _, _ = snapshot.load(path)
+        want = graph_lib.rebuild_reverse(index.graph)
+        np.testing.assert_array_equal(np.asarray(g.rev_ids),
+                                      np.asarray(want.rev_ids))
+        np.testing.assert_array_equal(np.asarray(g.rev_lam),
+                                      np.asarray(want.rev_lam))
+
+    def test_config_drift_tolerated(self, index, tmp_path):
+        """Unknown config fields (from a future writer) are dropped."""
+        path = index.save(str(tmp_path / "snap"))
+        man_path = os.path.join(path, snapshot.MANIFEST_NAME)
+        with open(man_path) as f:
+            man = json.load(f)
+        man["build_config"]["some_future_knob"] = 42
+        with open(man_path, "w") as f:
+            json.dump(man, f)
+        _, _, cfg, _ = snapshot.load(path)
+        assert cfg == index.build_cfg
+
+
+def _recall_vs_brute(idx: OnlineIndex, queries, k=10) -> float:
+    """Brute-force-checked recall@k of the graph search, alive-aware."""
+    true_ids, _ = brute.brute_force_knn(
+        idx.items, queries, k, idx.metric,
+        n_valid=idx.graph.n_valid, alive=idx.graph.alive,
+    )
+    res = idx.search(queries, k, beam=48, key=jax.random.PRNGKey(5))
+    return float(brute.recall_at_k(res.ids, true_ids, k))
+
+
+class TestCompact:
+    @pytest.fixture(scope="class")
+    def removed(self, data):
+        idx = OnlineIndex.build(data, _cfg(), key=jax.random.PRNGKey(1))
+        victims = jnp.asarray(
+            np.random.RandomState(3).choice(N, N // 4, replace=False),
+            jnp.int32,
+        )
+        return idx.remove(victims)
+
+    def test_recovers_capacity_and_recall(self, removed, queries):
+        rec_before = _recall_vs_brute(removed, queries)
+        idx = removed.clone()
+        assert idx.free_slots == N // 4
+        id_map = idx.compact()
+        n_alive = N - N // 4
+        assert int(idx.graph.n_valid) == n_alive
+        assert idx.free_slots == 0
+        assert idx.capacity - int(idx.graph.n_valid) == N // 4  # reclaimed
+        assert int(jnp.sum(idx.graph.alive)) == n_alive
+        # the id map moves every survivor and kills every victim
+        assert (id_map >= 0).sum() == n_alive
+        rec_after = _recall_vs_brute(idx, queries)
+        assert rec_after >= rec_before - 0.02, (rec_before, rec_after)
+
+    def test_items_follow_their_rows(self, removed, data):
+        idx = removed.clone()
+        id_map = idx.compact()
+        old_items = np.asarray(data)
+        new_items = np.asarray(idx.items)
+        for old in range(0, N, 37):
+            new = int(id_map[old])
+            if new >= 0:
+                np.testing.assert_array_equal(new_items[new], old_items[old])
+
+    def test_norm_cache_and_rev_lam_invariants(self, removed):
+        idx = removed.clone()
+        idx.compact()
+        g = idx.graph
+        # norm cache: exact for alive allocated rows, 0 elsewhere
+        want = graph_lib.attach_sq_norms(g, idx.items)
+        np.testing.assert_array_equal(np.asarray(g.sq_norms),
+                                      np.asarray(want.sq_norms))
+        # reverse side: compaction rebuilds, so it must equal the canonical
+        # rebuild exactly (rev_lam snapshot included)
+        rebuilt = graph_lib.rebuild_reverse(g)
+        np.testing.assert_array_equal(np.asarray(g.rev_ids),
+                                      np.asarray(rebuilt.rev_ids))
+        np.testing.assert_array_equal(np.asarray(g.rev_lam),
+                                      np.asarray(rebuilt.rev_lam))
+        inv = graph_lib.graph_invariants_ok(g)
+        for name, ok in inv.items():
+            assert bool(jnp.all(ok)), name
+
+
+class TestAutoGrowth:
+    def test_over_capacity_insert_grows(self, data):
+        """Regression: the old serve path hard-asserted here."""
+        idx = retrieval.build_index(
+            data, k=K, metric="l2", wave=128, key=jax.random.PRNGKey(1)
+        )
+        assert idx.capacity == N  # no headroom at all
+        new = jnp.asarray(
+            np.random.RandomState(9).rand(64, D).astype(np.float32)
+        )
+        idx2 = retrieval.add_items(idx, new, key=jax.random.PRNGKey(2))
+        assert idx2.capacity >= N + 64
+        assert idx2.capacity == int(N * idx.growth_factor)  # doubled, not +64
+        assert int(idx2.graph.n_valid) == N + 64
+        # the argument index is untouched (functional contract)
+        assert idx.capacity == N and int(idx.graph.n_valid) == N
+        # the new items are immediately searchable
+        ids, _ = retrieval.retrieve(idx2, new[:4], 5, beam=32)
+        assert set(np.asarray(ids).tolist()) & set(range(N, N + 64))
+
+    def test_steady_churn_never_grows(self, data, queries):
+        """insert ≈ remove: the ledger + compaction recycle slots forever."""
+        idx = OnlineIndex.build(data, _cfg(), key=jax.random.PRNGKey(1))
+        rng = np.random.RandomState(11)
+        for step in range(4):
+            alive = np.flatnonzero(np.asarray(idx.graph.alive))
+            victims = rng.choice(alive, 32, replace=False)
+            idx.remove(jnp.asarray(victims, jnp.int32))
+            idx.add(
+                jnp.asarray(rng.rand(32, D).astype(np.float32)),
+                key=jax.random.fold_in(jax.random.PRNGKey(2), step),
+                flush=True,
+            )
+            assert idx.capacity == N, f"churn step {step} grew the index"
+        assert idx.n_items == N
+        assert _recall_vs_brute(idx, queries) > 0.7
+
+
+class TestRemoveSanitization:
+    def test_padding_ids_are_ignored(self, data):
+        """Regression: dynamic.remove clips ids, so an unsanitized -1
+        (search-result padding) used to kill row 0; cap used to kill the
+        last row.  Neither may touch the graph or the ledger."""
+        idx = OnlineIndex.build(data, _cfg(), key=jax.random.PRNGKey(1))
+        idx.remove(jnp.asarray([-1, N, N + 7], jnp.int32))
+        assert idx.free_slots == 0
+        assert bool(idx.graph.alive[0]) and bool(idx.graph.alive[N - 1])
+        assert idx.n_items == N
+        # already-dead ids are no-ops too (no double-count in the ledger)
+        idx.remove(jnp.asarray([3], jnp.int32))
+        idx.remove(jnp.asarray([3, -1], jnp.int32))
+        assert idx.free_slots == 1
+
+    def test_remove_targets_preflush_rows_across_compaction(self, data):
+        """Regression: remove() flushes pending adds first, and that flush
+        can auto-compact (rows move).  The caller's victim ids name the
+        PRE-flush layout and must be remapped — not applied verbatim to the
+        compacted graph, which would kill the wrong items."""
+        idx = OnlineIndex.build(data, _cfg(), key=jax.random.PRNGKey(1))
+        idx.remove(jnp.asarray([5], jnp.int32))  # one hole below the victim
+        idx.add(
+            jnp.asarray(np.random.RandomState(23).rand(1, D).astype(np.float32)),
+            flush=False,
+        )  # buffered: the next remove's flush must compact (cap is full)
+        victim_vec = np.asarray(idx.items[10]).copy()
+        keep_vec = np.asarray(idx.items[11]).copy()
+        idx.remove(jnp.asarray([10], jnp.int32))
+        alive_vecs = np.asarray(idx.items)[np.asarray(idx.graph.alive)]
+        assert not np.any(np.all(alive_vecs == victim_vec, axis=1))
+        assert np.any(np.all(alive_vecs == keep_vec, axis=1))
+
+    def test_ledger_reconciles_from_alive_mask(self, data, tmp_path):
+        """A churned graph saved WITHOUT its lifecycle state (snapshot.save
+        directly) still accounts its holes on load: the alive mask is the
+        ground truth, the ledger only a cache of it."""
+        idx = OnlineIndex.build(data, _cfg(), key=jax.random.PRNGKey(1))
+        idx.remove(jnp.arange(10, 40, dtype=jnp.int32))
+        path = str(tmp_path / "bare")
+        snapshot.save(path, idx.graph, idx.items, idx.build_cfg)
+        idx2 = OnlineIndex.load(path)
+        assert idx2.free_slots == 30
+        assert idx2.n_items == idx.n_items
+
+
+class TestIngestBuffer:
+    def test_small_adds_coalesce(self, data):
+        idx = OnlineIndex.build(
+            data, _cfg(), key=jax.random.PRNGKey(1), capacity=N + 128,
+            ingest_batch=32,
+        )
+        rng = np.random.RandomState(13)
+        n0 = int(idx.graph.n_valid)
+        for _ in range(31):  # below threshold: buffered, no wave
+            idx.add(jnp.asarray(rng.rand(1, D).astype(np.float32)))
+        assert int(idx.graph.n_valid) == n0
+        assert idx.n_pending == 31
+        assert idx.n_items == N + 31  # buffered items count as live
+        idx.add(jnp.asarray(rng.rand(1, D).astype(np.float32)))  # hits 32
+        assert idx.n_pending == 0
+        assert int(idx.graph.n_valid) == n0 + 32  # ONE coalesced wave
+
+    def test_reads_observe_buffered_writes(self, data):
+        idx = OnlineIndex.build(
+            data, _cfg(), key=jax.random.PRNGKey(1), capacity=N + 128,
+            ingest_batch=64,
+        )
+        new = jnp.asarray(
+            np.random.RandomState(17).rand(4, D).astype(np.float32)
+        )
+        idx.add(new)  # stays buffered
+        assert idx.n_pending == 4
+        ids, _ = retrieval.retrieve(idx, new, 5, beam=32)  # flushes first
+        assert idx.n_pending == 0
+        assert set(np.asarray(ids).tolist()) & set(range(N, N + 4))
+
+
+class TestShardedRouter:
+    @pytest.fixture(scope="class")
+    def sharded(self, data):
+        return ShardedIndex.build(
+            data, 3, _cfg(), key=jax.random.PRNGKey(4)
+        )
+
+    def test_brute_merge_matches_single_index_exactly(
+        self, sharded, index, queries
+    ):
+        """Per-shard brute + global merge == unsharded brute, id for id."""
+        for i in range(0, 32, 8):
+            q = queries[i : i + 4]
+            gids, gsc = sharded.retrieve(q, 10, brute=True)
+            sids, ssc = retrieval.retrieve_brute(index, q, 10)
+            np.testing.assert_array_equal(gids, np.asarray(sids))
+            np.testing.assert_allclose(
+                np.asarray(gsc), np.asarray(ssc), rtol=1e-6
+            )
+
+    def test_graph_search_recall(self, sharded, index, queries):
+        gids, _ = sharded.retrieve(queries[:4], 10, key=jax.random.PRNGKey(8))
+        bids, _ = retrieval.retrieve_brute(index, queries[:4], 10)
+        inter = set(gids.tolist()) & set(np.asarray(bids).tolist())
+        assert len(inter) / 10 >= 0.6, (gids, bids)
+
+    def test_insert_routes_by_fill_remove_by_ownership(self, data):
+        sh = ShardedIndex.build(data, 3, _cfg(), key=jax.random.PRNGKey(4))
+        fills = [s.n_items for s in sh.shards]
+        target = int(np.argmin(fills))
+        new = jnp.asarray(
+            np.random.RandomState(19).rand(8, D).astype(np.float32)
+        )
+        gids = sh.add(new, key=jax.random.PRNGKey(5))
+        assert sh.shards[target].n_items == fills[target] + 8
+        assert sh.n_items == N + 8
+        # the new items answer queries for themselves, under their global ids
+        got, _ = sh.retrieve(new[:2], 3, brute=True)
+        assert set(got.tolist()) & set(gids.tolist())
+        # removal routes to the owner shard and the id disappears globally
+        assert sh.remove(gids[:4]) == 4
+        assert sh.n_items == N + 4
+        got, _ = sh.retrieve(new[:2], 5, brute=True)
+        assert not (set(got.tolist()) & set(gids[:4].tolist()))
+
+    def test_remove_ignores_sentinel_ids(self, data):
+        """Regression: -1 is the gid tables' free-slot sentinel; asking the
+        router to remove -1 used to match every freed slot."""
+        sh = ShardedIndex.build(data, 2, _cfg(), key=jax.random.PRNGKey(4))
+        assert sh.remove(np.asarray([0, 1])) == 2  # leaves -1 holes
+        n_before = sh.n_items
+        assert sh.remove(np.asarray([-1])) == 0
+        assert sh.n_items == n_before
+
+    def test_global_ids_survive_shard_compaction(self, data, queries):
+        sh = ShardedIndex.build(data, 2, _cfg(), key=jax.random.PRNGKey(4))
+        before, _ = sh.retrieve(queries[:2], 5, brute=True)
+        # kill rows in shard 0, then compact everywhere: local rows move,
+        # global answers must not
+        table0 = sh.gids[0]
+        dead_gids = table0[table0 >= 0][5:25]
+        survivors = [g for g in before.tolist() if g not in set(dead_gids.tolist())]
+        sh.remove(dead_gids)
+        sh.compact()
+        assert all(s.free_slots == 0 for s in sh.shards)
+        after, _ = sh.retrieve(queries[:2], 5, brute=True)
+        for g in survivors:
+            assert g in after.tolist(), (g, after)
+
+    def test_router_save_load_round_trip(self, sharded, queries, tmp_path):
+        path = sharded.save(str(tmp_path / "router"))
+        sh2 = ShardedIndex.load(path)
+        assert sh2.n_shards == sharded.n_shards
+        assert sh2.n_items == sharded.n_items
+        a, sa = sharded.retrieve(queries[:4], 10, key=jax.random.PRNGKey(9))
+        b, sb = sh2.retrieve(queries[:4], 10, key=jax.random.PRNGKey(9))
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))

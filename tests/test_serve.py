@@ -42,6 +42,43 @@ class TestRetrieve:
         assert len(real) == len(set(real))
 
 
+class TestScoreConvention:
+    def test_cosine_scores_are_higher_is_better(self, bank):
+        """Regression: scores used to be negated only for metric='ip', so
+        cosine serving returned raw distances where callers expect
+        higher = better.  Both similarity metrics now route through
+        ``score_from_dist``."""
+        idx = retrieval.build_index(
+            bank[:500], k=10, metric="cosine", wave=256,
+            key=jax.random.PRNGKey(4),
+        )
+        q = jax.random.normal(jax.random.PRNGKey(8), (4, 16))
+        for ids, scores in (
+            retrieval.retrieve(idx, q, 10, beam=40),
+            retrieval.retrieve_brute(idx, q, 10),
+        ):
+            s = np.asarray(scores)
+            assert np.all(np.diff(s) <= 1e-5), s  # descending: higher = better
+        # brute top-1 is the true max-cosine-similarity item; the serving
+        # score must rank it first, not last
+        bids, bscores = retrieval.retrieve_brute(idx, q, 10)
+        sims = np.asarray(
+            (q @ bank[:500].T)
+            / (np.linalg.norm(np.asarray(q), axis=1, keepdims=True)
+               * np.linalg.norm(np.asarray(bank[:500]), axis=1)[None, :])
+        )
+        assert int(bids[0]) == int(np.argmax(sims.max(axis=0)))
+
+    def test_l2_scores_stay_distances(self, bank):
+        idx = retrieval.build_index(
+            bank[:500], k=10, metric="l2", wave=256, key=jax.random.PRNGKey(4)
+        )
+        q = jax.random.normal(jax.random.PRNGKey(9), (2, 16))
+        _, scores = retrieval.retrieve(idx, q, 10, beam=40)
+        s = np.asarray(scores)
+        assert np.all(s >= 0) and np.all(np.diff(s) >= -1e-5)  # ascending dist
+
+
 class TestCatalogChurn:
     def test_add_items_found(self, index):
         new = jax.random.normal(jax.random.PRNGKey(5), (64, 16))
