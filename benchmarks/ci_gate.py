@@ -19,6 +19,12 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
     (bench_lifecycle.churn_gate); drops mean the online property regressed —
     removal repair, slot recycling, or compaction is damaging the graph.
     The churn record's throughput (``churn_ops_per_s``) rides along ungated.
+  * ``merge_recall_at_10_min`` — merged+refined recall@10 of the
+    divide-and-conquer build (bench_construction.merge_build_gate, same
+    n=2000/d=20 shape as the sequential quality gate); drops mean the
+    sub-graph merge or the refinement sweep regressed.  The record's
+    ``wallclock_ratio`` (parallel vs sequential build) rides along ungated —
+    shared CI runners compress thread overlap.
 
 Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
 BENCH_ci.json artifact is uploaded either way so regressions come with data.
@@ -58,6 +64,12 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
         ("churn_recall_at_10", crec,
          float(baseline["churn_recall_at_10_min"]),
          crec >= float(baseline["churn_recall_at_10_min"]))
+    )
+    mrec = float(bench["merge_build"]["recall_at_10"])
+    results.append(
+        ("merge_recall_at_10", mrec,
+         float(baseline["merge_recall_at_10_min"]),
+         mrec >= float(baseline["merge_recall_at_10_min"]))
     )
     return results
 

@@ -68,6 +68,7 @@ def main():
         quality = bench_construction.quality_gate()
         gather_engine = bench_search.run_gather_engine()
         lifecycle_churn = bench_lifecycle.churn_gate()
+        merge_build = bench_construction.merge_build_gate()
         payload = {
             "expansion": expansion[16],  # serving batch — the gated record
             "expansion_wave": expansion[256],  # construction wave — recorded
@@ -75,6 +76,9 @@ def main():
             "gather_engine": gather_engine,  # blocked-vs-rowwise (gated)
             # sustained-churn record: recall gated, throughput informational
             "lifecycle_churn": lifecycle_churn,
+            # divide-and-conquer build: merged+refined recall gated at the
+            # sequential floor, wall-clock ratio informational
+            "merge_build": merge_build,
             "sections": {
                 name: t.records()
                 for name, t in tables.items()

@@ -385,3 +385,115 @@ def build(
             wave_callback(n_waves, g)
 
     return g, stats
+
+
+# ---------------------------------------------------------------------------
+# Divide-and-conquer construction: parallel sub-builds + symmetric merge
+# ---------------------------------------------------------------------------
+
+
+def partition_bounds(n: int, shards: int):
+    """Contiguous partition boundaries (shards + 1 ints, balanced ±1 row).
+
+    Matches the sharded router's split, so a catalog partitioned here and one
+    partitioned by ``ShardedIndex.build`` agree row for row.
+    """
+    import numpy as np
+
+    if not 1 <= shards <= n:
+        raise ValueError(f"need 1 <= shards <= n, got {shards} for n={n}")
+    return np.linspace(0, n, shards + 1).astype(int)
+
+
+def build_parallel(
+    x: Array,
+    cfg: BuildConfig,
+    key: Optional[Array] = None,
+    *,
+    shards: int = 2,
+    refine_rounds: int = 1,
+    search_chunk: int = 512,
+    mesh=None,
+) -> tuple[KNNGraph, BuildStats]:
+    """Divide-and-conquer build: S concurrent sub-builds + symmetric merges.
+
+    The sequential online build caps construction throughput at one wave
+    pipeline.  This path partitions ``x`` into ``shards`` contiguous blocks,
+    builds an independent sub-graph per block through the SAME fused
+    ``wave_core`` pipeline (host threads on CPU — each shard's compiled wave
+    steps overlap; a ``mesh`` routes the sub-builds through
+    ``core.distributed``'s shard_map step on multi-device), then folds the
+    sub-graphs together with a balanced ``merge.merge_subgraphs`` tree of
+    ``symmetric_merge`` calls and closes the residual recall gap with a
+    bounded NN-Descent sweep (``nndescent.refine``).
+
+    The merged graph lives in the same id space as a sequential build over
+    ``x`` (global ids = row indices), and the result supports every online
+    operation — ``dynamic.insert``/``remove`` ride on it unchanged.
+
+    Args:
+      x: (n, d) dataset.
+      cfg: build configuration (shared by every sub-build and the merge
+        searches).
+      key: PRNG key; sub-build s folds in s, merges fold in their step.
+      shards: number of partitions (1 degenerates to ``build``).
+      refine_rounds: NN-Descent join rounds after the final merge (0 = none).
+      search_chunk: cross-search batch size inside ``symmetric_merge``.
+      mesh: optional device mesh — sub-builds run via
+        ``distributed.build_subgraphs`` (requires n % n_devices == 0 and
+        ``shards`` equal to the mesh's device count).
+
+    Returns: (graph, stats) — stats aggregate sub-builds, merge candidate
+    distances, and refinement comps (host-side fold, exact).
+    """
+    n = x.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if shards == 1 and mesh is None:
+        return build(x, cfg, key)
+    bounds = partition_bounds(n, shards)
+
+    if mesh is not None:
+        from repro.core import distributed  # late: distributed imports construct
+
+        n_dev = int(mesh.devices.size)
+        if shards != n_dev:  # validate BEFORE the expensive sub-builds
+            raise ValueError(
+                f"mesh has {n_dev} devices, build_parallel got "
+                f"shards={shards} — on a mesh, one sub-graph per device"
+            )
+        graphs, sub_comps, sub_waves, sub_edges = distributed.build_subgraphs(
+            mesh, x, cfg, key
+        )
+    else:
+        import concurrent.futures
+
+        def _one(s: int):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            return build(x[lo:hi], cfg, jax.random.fold_in(key, s))
+
+        with concurrent.futures.ThreadPoolExecutor(max_workers=shards) as ex:
+            results = list(ex.map(_one, range(shards)))
+        graphs = [g for g, _ in results]
+        sub_comps = sum(int(st.n_comps) for _, st in results)
+        sub_waves = sum(int(st.n_waves) for _, st in results)
+        sub_edges = sum(int(st.n_inserted_edges) for _, st in results)
+
+    from repro.core import nndescent  # late: nndescent is a leaf consumer
+
+    scfg = cfg.search_config()
+    g, merge_comps = merge.merge_subgraphs(
+        graphs, x, scfg, jax.random.fold_in(key, 1_000_000),
+        search_chunk=search_chunk,
+    )
+
+    g, refine_comps = nndescent.refine(
+        g, x, cfg.metric, rounds=refine_rounds, use_pallas=cfg.use_pallas
+    )
+
+    stats = BuildStats(
+        n_comps=Counter64.of(sub_comps + merge_comps + int(refine_comps)),
+        n_waves=jnp.asarray(sub_waves, jnp.int32),
+        n_inserted_edges=Counter64.of(sub_edges),
+    )
+    return g, stats

@@ -77,14 +77,14 @@ def wave_step(
 
     Thin shard-local adapter over ``construct.wave_core`` — the single
     implementation of wave semantics; returns (updated graph, distance
-    computations spent).
+    computations spent, edges inserted).
     """
     g2, stats = construct_lib.wave_core(
         g, x, pos, key, construct_lib.zero_stats(), cfg, n_real=n_real
     )
-    # monitoring-only float view: the cross-shard psum tolerates rounding,
-    # and the per-wave count (< W * C * max_iters) is far below 2^24 anyway
-    return g2, stats.n_comps.to_float()
+    # monitoring-only float views: the cross-shard psum tolerates rounding,
+    # and the per-wave counts (< W * C * max_iters) are far below 2^24 anyway
+    return g2, stats.n_comps.to_float(), stats.n_inserted_edges.to_float()
 
 
 def make_distributed_build_step(
@@ -92,9 +92,9 @@ def make_distributed_build_step(
 ):
     """shard_map'd wave step: every shard inserts its own next W rows.
 
-    Returns step(g, x, pos, n_real, key) -> (g, total_comps); all graph/data
-    leaves row-sharded over ``axes`` (default: every mesh axis).  No
-    collectives except the final comps psum (monitoring only).
+    Returns step(g, x, pos, n_real, key) -> (g, total_comps, total_edges);
+    all graph/data leaves row-sharded over ``axes`` (default: every mesh
+    axis).  No collectives except the final stats psums (monitoring only).
     """
     ax = tuple(axes) if axes is not None else _flat_axes(mesh)
     gspec = graph_pspec(ax)
@@ -102,14 +102,16 @@ def make_distributed_build_step(
     def local(g, x, pos, n_real, key):
         # per-shard PRNG: fold in the linearized shard index
         idx = _shard_index(ax, mesh)
-        g2, comps = wave_step(g, x, pos, n_real, jax.random.fold_in(key, idx), cfg)
-        return g2, jax.lax.psum(comps, ax)
+        g2, comps, edges = wave_step(
+            g, x, pos, n_real, jax.random.fold_in(key, idx), cfg
+        )
+        return g2, jax.lax.psum(comps, ax), jax.lax.psum(edges, ax)
 
     return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(gspec, P(ax, None), P(), P(), P(None)),
-        out_specs=(gspec, P()),
+        out_specs=(gspec, P(), P()),
     )
 
 
@@ -192,3 +194,89 @@ def init_sharded_state(
         shard_init, mesh=mesh, in_specs=(), out_specs=(gspec, P(ax, None)),
     )
     return jax.jit(fn)()
+
+
+def build_subgraphs(
+    mesh: Mesh,
+    x: Array,
+    cfg: construct_lib.BuildConfig,
+    key: Optional[Array] = None,
+    axes: Optional[Sequence[str]] = None,
+):
+    """Per-device sub-graph builds over REAL data — ``construct
+    .build_parallel``'s multi-device backend.
+
+    ``x`` is split row-wise into one contiguous block per device; each device
+    seeds an exact |I|-graph over its block and runs the shard-local fused
+    wave step (the same ``wave_core`` the sequential build jits) with zero
+    collective traffic.  Returns the per-shard graphs in LOCAL id spaces —
+    exactly what ``merge.symmetric_merge`` folds — plus aggregate counters:
+
+      (graphs: list[KNNGraph], n_comps: int, n_waves: int, n_edges: int)
+    """
+    from repro.core import brute  # late: brute sits above distributed
+
+    ax = tuple(axes) if axes is not None else _flat_axes(mesh)
+    n_dev = 1
+    for a in ax:
+        n_dev *= mesh.shape[a]
+    n = x.shape[0]
+    if n % n_dev:
+        raise ValueError(
+            f"build_subgraphs needs n % n_devices == 0, got n={n} over "
+            f"{n_dev} devices"
+        )
+    n_local = n // n_dev
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n_seed = min(cfg.n_seed_init, n_local)
+    gspec = graph_pspec(ax)
+
+    def seed_local(xs):
+        return brute.exact_seed_graph(
+            xs, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap,
+            use_pallas=cfg.use_pallas,
+        )
+
+    seed_fn = compat.shard_map(
+        seed_local, mesh=mesh, in_specs=(P(ax, None),), out_specs=gspec
+    )
+    g = jax.jit(seed_fn)(x)
+    step = jax.jit(make_distributed_build_step(mesh, cfg, ax))
+
+    # stats stay device-side until the loop ends — no per-wave host sync
+    comps_parts, edge_parts = [], []
+    n_waves = 0
+    pos = n_seed
+    while pos < n_local:
+        nr = min(cfg.wave, n_local - pos)
+        key, sk = jax.random.split(key)
+        g, comps, edges = step(
+            g, x, jnp.asarray(pos, jnp.int32), jnp.asarray(nr, jnp.int32), sk
+        )
+        comps_parts.append(comps)  # psums across shards, monitoring-grade
+        edge_parts.append(edges)
+        pos += nr
+        n_waves += 1
+    total_comps = float(n_dev * (n_seed * (n_seed - 1) // 2)) + sum(
+        float(c) for c in comps_parts
+    )
+    total_edges = sum(float(e) for e in edge_parts)
+    graphs = []
+    gh = jax.device_get(g)
+    for s in range(n_dev):
+        lo, hi = s * n_local, (s + 1) * n_local
+        graphs.append(
+            KNNGraph(
+                nbr_ids=jnp.asarray(gh.nbr_ids[lo:hi]),
+                nbr_dist=jnp.asarray(gh.nbr_dist[lo:hi]),
+                nbr_lam=jnp.asarray(gh.nbr_lam[lo:hi]),
+                rev_ids=jnp.asarray(gh.rev_ids[lo:hi]),
+                rev_lam=jnp.asarray(gh.rev_lam[lo:hi]),
+                rev_ptr=jnp.asarray(gh.rev_ptr[lo:hi]),
+                alive=jnp.asarray(gh.alive[lo:hi]),
+                n_valid=jnp.asarray(n_local, jnp.int32),
+                sq_norms=jnp.asarray(gh.sq_norms[lo:hi]),
+            )
+        )
+    return graphs, int(total_comps), n_waves * n_dev, int(total_edges)

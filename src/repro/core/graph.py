@@ -135,6 +135,33 @@ def grow_graph(g: KNNGraph, new_capacity: int) -> KNNGraph:
     )
 
 
+def trim_graph(g: KNNGraph, new_capacity: int) -> KNNGraph:
+    """Drop unallocated tail rows (the inverse of ``grow_graph``).
+
+    Only rows at or beyond ``n_valid`` may be trimmed — stored ids are all
+    < n_valid, so no list can dangle.  Used by the sub-graph merge path,
+    which requires fully-allocated operands (capacity == n_valid).
+    """
+    cap = g.capacity
+    if new_capacity >= cap:
+        return g
+    if new_capacity < int(g.n_valid):
+        raise ValueError(
+            f"cannot trim below n_valid: {new_capacity} < {int(g.n_valid)}"
+        )
+    return KNNGraph(
+        nbr_ids=g.nbr_ids[:new_capacity],
+        nbr_dist=g.nbr_dist[:new_capacity],
+        nbr_lam=g.nbr_lam[:new_capacity],
+        rev_ids=g.rev_ids[:new_capacity],
+        rev_lam=g.rev_lam[:new_capacity],
+        rev_ptr=g.rev_ptr[:new_capacity],
+        alive=g.alive[:new_capacity],
+        n_valid=g.n_valid,
+        sq_norms=g.sq_norms[:new_capacity],
+    )
+
+
 def rebuild_reverse(g: KNNGraph) -> KNNGraph:
     """Recompute rev lists from forward lists (checkpoint-restore / repair).
 

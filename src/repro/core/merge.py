@@ -17,7 +17,7 @@ same batching trade NN-Descent makes (DESIGN.md §8.1).
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -171,3 +171,240 @@ def append_reverse(
     rev_lam = ext_l[:cap]
     rev_ptr = rev_ptr + counts
     return rev_ids, rev_lam, rev_ptr
+
+
+# ---------------------------------------------------------------------------
+# Symmetric sub-graph merge (divide-and-conquer construction)
+# ---------------------------------------------------------------------------
+
+
+def stack_subgraphs(g_a, g_b, n_a: int):
+    """Concatenate two fully-allocated sub-graphs into one id space.
+
+    ``g_a`` covers global rows [0, n_a) and ``g_b`` LOCAL rows [0, n_b) that
+    become global rows [n_a, n_a + n_b).  Forward lists are remapped by
+    offset; the reverse side is left empty (callers rebuild it canonically
+    via ``graph.rebuild_reverse`` after cross edges land).  The norm cache is
+    *gathered* (concatenated), never recomputed — the cache owners already
+    paid for it.
+    """
+    from repro.core.graph import KNNGraph  # graph does not import merge
+
+    n_b = g_b.capacity
+    if int(g_a.n_valid) != g_a.capacity or int(g_b.n_valid) != n_b:
+        raise ValueError(
+            "stack_subgraphs needs fully-allocated sub-graphs "
+            f"(n_valid == capacity); got {int(g_a.n_valid)}/{g_a.capacity} "
+            f"and {int(g_b.n_valid)}/{n_b} — compact first"
+        )
+    b_ids = jnp.where(g_b.nbr_ids >= 0, g_b.nbr_ids + n_a, -1)
+    R = max(g_a.rev_capacity, g_b.rev_capacity)
+    cap = n_a + n_b
+    return KNNGraph(
+        nbr_ids=jnp.concatenate([g_a.nbr_ids, b_ids]),
+        nbr_dist=jnp.concatenate([g_a.nbr_dist, g_b.nbr_dist]),
+        nbr_lam=jnp.concatenate([g_a.nbr_lam, g_b.nbr_lam]),
+        rev_ids=jnp.full((cap, R), -1, jnp.int32),
+        rev_lam=jnp.zeros((cap, R), jnp.int32),
+        rev_ptr=jnp.zeros((cap,), jnp.int32),
+        alive=jnp.concatenate([g_a.alive, g_b.alive]),
+        n_valid=jnp.asarray(cap, jnp.int32),
+        sq_norms=jnp.concatenate([g_a.sq_norms, g_b.sq_norms]),
+    )
+
+
+def _chunked_cross_search(g, xg, queries, key, scfg, chunk: int):
+    """Search ``queries`` against sub-graph ``g`` in fixed-size chunks.
+
+    Chunking bounds the (B, hash_slots) visited tables AND pins the jitted
+    search (``core.search.search`` is already jit-compiled over static cfg)
+    to one batch shape per merge — the last chunk is padded, not
+    specialized.  Returns (ids (B, k) LOCAL, dists (B, k), n_comps int).
+    Comps accumulate as a host int: per-chunk counts fit int32 comfortably
+    (chunk * C * max_iters), but a whole production-scale merge does not —
+    the same 2^31 wrap Counter64 exists to prevent in the wave pipeline.
+    """
+    from repro.core import search as search_lib  # search never imports merge
+
+    B = queries.shape[0]
+    nchunks = -(-B // chunk)
+    qp = jnp.pad(queries, ((0, nchunks * chunk - B), (0, 0)))
+    ids, dists, comps = [], [], 0
+    for i in range(nchunks):
+        res = search_lib.search(
+            g, xg, qp[i * chunk : (i + 1) * chunk],
+            jax.random.fold_in(key, i), scfg,
+        )
+        ids.append(res.ids)
+        dists.append(res.dists)
+        comps += int(jnp.sum(res.n_comps))
+    return jnp.concatenate(ids)[:B], jnp.concatenate(dists)[:B], comps
+
+
+def symmetric_merge(
+    g_a,
+    g_b,
+    x: Array,
+    scfg,
+    key: Optional[Array] = None,
+    *,
+    search_chunk: int = 512,
+):
+    """Merge two independently built sub-graphs into one graph (1908.00814).
+
+    ``g_a`` covers rows [0, n_a) of ``x`` (ids already global for the fold),
+    ``g_b`` covers x[n_a:] in LOCAL ids.  The merge is symmetric: each side's
+    points search the *other* side's graph (cross-graph candidate generation
+    out of each side's lists, distances through the blocked engine the search
+    already rides, norm caches gathered from the sub-graphs — never
+    recomputed), every cross pair is proposed in both directions, and
+    ``merge_candidates`` re-selects the joint top-k per row over
+    (own list ‖ cross candidates).  Reverse lists and their ``rev_lam``
+    snapshots are rebuilt canonically from the merged forward lists via the
+    segmented-scan core (``graph.rebuild_reverse``).
+
+    Dead rows neither search nor receive edges: a removed sample must not
+    re-enter anyone's list through a merge.
+
+    Args:
+      g_a, g_b: fully-allocated sub-graphs (compact churned shards first).
+      x: (n_a + n_b, d) combined data, sub-graph order.
+      scfg: ``search.SearchConfig`` for the cross searches (k = graph degree).
+      key: PRNG key for search entry points.
+      search_chunk: cross-search batch size (bounds memory + compile count).
+
+    Returns:
+      (merged KNNGraph, n_comps) — comps spent on cross candidate distances.
+    """
+    from repro.core import graph as graph_lib
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n_a = g_a.capacity
+    n_b = g_b.capacity
+    if x.shape[0] != n_a + n_b:
+        raise ValueError(f"x has {x.shape[0]} rows, graphs cover {n_a + n_b}")
+    if int(g_a.n_valid) != n_a or int(g_b.n_valid) != n_b:
+        # host-cheap; checked BEFORE the expensive cross searches (the same
+        # precondition aborts stack_subgraphs, but only after the searches)
+        raise ValueError(
+            "symmetric_merge needs fully-allocated sub-graphs "
+            f"(n_valid == capacity); got {int(g_a.n_valid)}/{n_a} and "
+            f"{int(g_b.n_valid)}/{n_b} — compact/trim first"
+        )
+    xa, xb = x[:n_a], x[n_a:]
+    ka, kb = jax.random.split(key)
+
+    # cross-graph candidates: each side's points walk the other side's graph
+    ab_ids, ab_d, comps_a = _chunked_cross_search(g_b, xb, xa, ka, scfg, search_chunk)
+    ba_ids, ba_d, comps_b = _chunked_cross_search(g_a, xa, xb, kb, scfg, search_chunk)
+
+    stacked = stack_subgraphs(g_a, g_b, n_a)
+    cap = stacked.capacity
+    k = ab_ids.shape[1]
+
+    # both directions for every cross pair: (a -> b, d) and (b -> a, d)
+    a_rows = jnp.broadcast_to(
+        jnp.arange(n_a, dtype=jnp.int32)[:, None], (n_a, k)
+    )
+    b_rows = jnp.broadcast_to(
+        jnp.arange(n_a, n_a + n_b, dtype=jnp.int32)[:, None], (n_b, k)
+    )
+    ab_gl = jnp.where(ab_ids >= 0, ab_ids + n_a, -1)  # b side -> global
+    ba_gl = ba_ids  # a side already global in g_a's id space
+    # a dead row must not receive or donate edges (search already masks dead
+    # *targets*; this masks dead *queries*)
+    a_live = stacked.alive[:n_a]
+    b_live = stacked.alive[n_a:]
+    a_rows_m = jnp.where(a_live[:, None], a_rows, -1)
+    b_rows_m = jnp.where(b_live[:, None], b_rows, -1)
+    v = jnp.concatenate(
+        [a_rows_m.reshape(-1), ab_gl.reshape(-1),
+         b_rows_m.reshape(-1), ba_gl.reshape(-1)]
+    )
+    q = jnp.concatenate(
+        [ab_gl.reshape(-1), a_rows_m.reshape(-1),
+         ba_gl.reshape(-1), b_rows_m.reshape(-1)]
+    )
+    d = jnp.concatenate(
+        [ab_d.reshape(-1), ab_d.reshape(-1), ba_d.reshape(-1), ba_d.reshape(-1)]
+    )
+    # a pair with either end masked is dropped entirely (q < 0 or v < 0)
+    v = jnp.where((q >= 0) & (v >= 0), v, -1)
+
+    mres = merge_candidates(
+        stacked.nbr_ids, stacked.nbr_dist, stacked.nbr_lam, v, q, d
+    )
+    merged = stacked._replace(
+        nbr_ids=mres.nbr_ids,
+        nbr_dist=mres.nbr_dist,
+        nbr_lam=mres.nbr_lam,
+    )
+    merged = graph_lib.rebuild_reverse(merged)
+    return merged, comps_a + comps_b
+
+
+def merge_subgraphs(
+    graphs,
+    x: Array,
+    scfg,
+    key: Optional[Array] = None,
+    *,
+    search_chunk: int = 512,
+):
+    """Fold S adjacent sub-graphs into one via a balanced pairwise merge tree.
+
+    ``graphs[s]`` covers (in LOCAL ids) the s-th contiguous block of ``x``,
+    block sizes given by each graph's capacity.  Adjacent pairs merge with
+    ``symmetric_merge`` level by level — O(log S) cross-searches per point
+    instead of the O(S) a left-to-right fold costs (shard 0's points would
+    re-search every later shard) — and the merges within a level run on
+    host threads, the same concurrency the sub-builds used.
+
+    Returns (merged KNNGraph over all of x, total cross-search comps).
+    """
+    import concurrent.futures
+
+    if not graphs:
+        raise ValueError("merge_subgraphs needs at least one sub-graph")
+    if sum(g.capacity for g in graphs) != x.shape[0]:
+        raise ValueError(
+            f"sub-graphs cover {sum(g.capacity for g in graphs)} rows, "
+            f"x has {x.shape[0]}"
+        )
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    # (graph, lo, hi): graph covers x[lo:hi] in slice-local ids.  Merging
+    # adjacent pairs keeps every node contiguous, so the final graph's ids
+    # are exactly the row indices of x.
+    nodes = []
+    off = 0
+    for g in graphs:
+        nodes.append((g, off, off + g.capacity))
+        off += g.capacity
+    total_comps = 0
+    level = 0
+    while len(nodes) > 1:
+        pairs = [
+            (nodes[i], nodes[i + 1]) for i in range(0, len(nodes) - 1, 2)
+        ]
+        carry = [nodes[-1]] if len(nodes) % 2 else []
+
+        def _merge_pair(item):
+            i, ((ga, lo, mid), (gb, mid2, hi)) = item
+            assert mid == mid2
+            g, c = symmetric_merge(
+                ga, gb, x[lo:hi], scfg,
+                jax.random.fold_in(key, (level << 16) | i),
+                search_chunk=search_chunk,
+            )
+            return (g, lo, hi), c
+
+        with concurrent.futures.ThreadPoolExecutor(
+            max_workers=len(pairs)
+        ) as ex:
+            merged = list(ex.map(_merge_pair, enumerate(pairs)))
+        total_comps += sum(c for _, c in merged)
+        nodes = [node for node, _ in merged] + carry
+        level += 1
+    return nodes[0][0], total_comps

@@ -243,3 +243,28 @@ def local_join_refine(
         comps += float(c)
     g = g._replace(nbr_ids=ids, nbr_dist=dist, nbr_lam=jnp.zeros_like(ids))
     return rebuild_reverse(g), comps
+
+
+def refine(
+    g: KNNGraph,
+    x: Array,
+    metric: str = "l2",
+    *,
+    rounds: int = 1,
+    node_chunk: int = 2048,
+    use_pallas: Optional[bool] = None,
+) -> tuple[KNNGraph, float]:
+    """Bounded refinement sweep: the EFANNA-style recall-recovery pass.
+
+    The canonical post-merge step of the divide-and-conquer construction
+    path (``construct.build_parallel``): a fixed number of NN-Descent join
+    rounds over the merged graph closes the residual recall gap the
+    sub-graph merge leaves.  ``rounds=0`` is a no-op (returns ``g`` with 0
+    comps), so callers can thread a config knob straight through.
+    """
+    if rounds <= 0:
+        return g, 0.0
+    return local_join_refine(
+        g, x, metric, rounds=rounds, node_chunk=node_chunk,
+        use_pallas=use_pallas,
+    )

@@ -77,7 +77,9 @@ class ShardedIndex:
             raise ValueError(f"need 1 <= n_shards <= n, got {n_shards} for n={n}")
         if key is None:
             key = jax.random.PRNGKey(0)
-        bounds = np.linspace(0, n, n_shards + 1).astype(int)
+        # the ONE partition rule, shared with construct.build_parallel — a
+        # catalog split here and one split there agree row for row
+        bounds = construct.partition_bounds(n, n_shards)
         shards, gids = [], []
         for s in range(n_shards):
             lo, hi = int(bounds[s]), int(bounds[s + 1])
@@ -166,6 +168,79 @@ class ShardedIndex:
             if shard.free_slots:
                 shard.compact()
                 self._sync_table(s)
+
+    # -- shard collapse ------------------------------------------------------
+
+    def merge_shards(
+        self,
+        *,
+        refine_rounds: int = 1,
+        key: Optional[Array] = None,
+    ) -> "ShardedIndex":
+        """Collapse the router into ONE shard: a single ``OnlineIndex`` over
+        the union catalog.
+
+        The per-shard graphs are folded with ``merge.merge_subgraphs`` (the
+        divide-and-conquer construction path in reverse: what was sharded for
+        build throughput is re-joined for serving locality) and the residual
+        recall gap is closed with ``nndescent.refine``.  The global id space
+        is preserved verbatim — every id the router ever handed out keeps
+        resolving, and the id tables keep following shard-internal row moves
+        — so callers notice nothing but the fan-out disappearing.  The merged
+        ``OnlineIndex`` is ``self.shards[0]`` afterwards; lifecycle knobs and
+        the build config come from the old shard 0.
+
+        Returns ``self`` (mutated in place, like the churn entry points).
+        """
+        from repro.core import merge as merge_lib
+        from repro.core import nndescent
+        from repro.core import graph as graph_lib
+
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        # settle every shard: land buffered adds, re-pack liveness holes so
+        # every sub-graph is dense and fully allocated, then absorb the row
+        # moves into the id tables
+        for s, shard in enumerate(self.shards):
+            shard.flush()
+            if shard.free_slots:
+                shard.compact()
+            self._sync_table(s)
+        if self.n_shards == 1:
+            return self
+
+        graphs, parts, tables = [], [], []
+        for s, shard in enumerate(self.shards):
+            nv = int(shard.graph.n_valid)
+            if nv == 0:
+                continue
+            graphs.append(graph_lib.trim_graph(shard.graph, nv))
+            parts.append(shard.items[:nv])
+            tables.append(self.gids[s][:nv])
+        base = self.shards[0]
+        if not graphs:  # an all-empty router collapses to empty shard 0
+            self.shards = [base]
+            self.gids = [self.gids[0]]
+            return self
+
+        x = jnp.concatenate(parts)
+        scfg = base.build_cfg.search_config()
+        g, _ = merge_lib.merge_subgraphs(graphs, x, scfg, key)
+        g, _ = nndescent.refine(
+            g, x, base.metric, rounds=refine_rounds,
+            use_pallas=base.build_cfg.use_pallas,
+        )
+        merged = OnlineIndex(
+            graph=g,
+            items=x,
+            build_cfg=base.build_cfg,
+            ingest_batch=base.ingest_batch,
+            auto_compact=base.auto_compact,
+            growth_factor=base.growth_factor,
+        )
+        self.shards = [merged]
+        self.gids = [np.concatenate(tables)]
+        return self
 
     # -- serving -------------------------------------------------------------
 

@@ -32,11 +32,21 @@ def main():
     ap.add_argument("--kind", default="clustered", choices=list(synthetic.GENERATORS))
     ap.add_argument("--algo", default="lgd", choices=["lgd", "olg"])
     ap.add_argument("--wave", type=int, default=512)
+    ap.add_argument("--parallel-shards", type=int, default=1, metavar="S",
+                    help="divide-and-conquer build: S concurrent sub-graphs "
+                         "merged via core.merge.symmetric_merge (S=1: the "
+                         "sequential online build)")
+    ap.add_argument("--refine-rounds", type=int, default=1,
+                    help="NN-Descent sweeps after the merge (parallel builds)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=8, help="waves between checkpoints")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval", action="store_true")
     args = ap.parse_args()
+
+    if args.parallel_shards > 1 and args.resume:
+        raise SystemExit("--resume is a sequential-build feature "
+                         "(parallel builds restart their sub-builds)")
 
     x = synthetic.make(args.kind, jax.random.PRNGKey(0), args.n, args.d)
     cfg = construct.BuildConfig(
@@ -56,16 +66,29 @@ def main():
         print(f"  wave {widx}: checkpointed at row {int(g.n_valid)}", flush=True)
 
     t0 = time.time()
-    g, stats = construct.build(
-        x, cfg, jax.random.PRNGKey(1),
-        wave_callback=cb if args.ckpt else None,
-        callback_stride=args.ckpt_every,
-        initial=initial,
-    )
+    if args.parallel_shards > 1:
+        if args.ckpt:
+            print("note: periodic wave checkpoints do not apply to parallel "
+                  "builds; only the final graph is saved to --ckpt")
+        g, stats = construct.build_parallel(
+            x, cfg, jax.random.PRNGKey(1),
+            shards=args.parallel_shards,
+            refine_rounds=args.refine_rounds,
+        )
+    else:
+        g, stats = construct.build(
+            x, cfg, jax.random.PRNGKey(1),
+            wave_callback=cb if args.ckpt else None,
+            callback_stride=args.ckpt_every,
+            initial=initial,
+        )
     dt = time.time() - t0
     c = construct.scanning_rate(stats, args.n)
-    print(f"built {args.algo.upper()} graph: n={args.n} d={args.d} k={args.k} "
-          f"metric={args.metric} in {dt:.1f}s, scanning rate c={c:.5f}")
+    mode = (f"{args.parallel_shards}-shard parallel"
+            if args.parallel_shards > 1 else "sequential")
+    print(f"built {args.algo.upper()} graph ({mode}): n={args.n} d={args.d} "
+          f"k={args.k} metric={args.metric} in {dt:.1f}s, "
+          f"scanning rate c={c:.5f}")
     if args.ckpt:
         ckpt_lib.save_graph(args.ckpt, g, args.n, cfg.__dict__)
 

@@ -1,0 +1,293 @@
+"""Shared case builders + checkers for the property test tier.
+
+Two consumers:
+
+  * ``tests/test_property.py`` — the Hypothesis suite (skipped when the
+    package is absent; CI installs it).  Strategies there only draw small
+    integers (seeds, shapes); everything data-shaped is built HERE from a
+    ``np.random.RandomState(seed)``, so each example is a pure function of
+    the drawn ints.
+  * ``tests/test_property_fixed.py`` — the fixed-seed leg: the same checkers
+    over a pinned case matrix, so the property logic itself is exercised by
+    tier-1 even where Hypothesis is not installed.
+
+Checkers raise ``AssertionError`` with context; they return nothing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamic, merge, segments
+from repro.core.graph import (
+    KNNGraph,
+    attach_sq_norms,
+    empty_graph,
+    graph_invariants_ok,
+    grow_graph,
+    rebuild_reverse,
+    squared_norms,
+    trim_graph,
+)
+
+
+# ---------------------------------------------------------------------------
+# Case builders (pure NumPy — no jit specialization per Hypothesis example)
+# ---------------------------------------------------------------------------
+
+
+def make_points(seed: int, n: int, d: int) -> np.ndarray:
+    return np.random.RandomState(seed).rand(n, d).astype(np.float32)
+
+
+def exact_lists(x: np.ndarray, k: int):
+    """NumPy-exact sorted k-NN lists over x (the oracle graph shape)."""
+    n = x.shape[0]
+    d2 = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float32)
+    np.fill_diagonal(d2, np.inf)
+    kk = min(k, n - 1)
+    order = np.argsort(d2, axis=1, kind="stable")[:, :kk]
+    ids = np.full((n, k), -1, np.int32)
+    dist = np.full((n, k), np.inf, np.float32)
+    ids[:, :kk] = order.astype(np.int32)
+    dist[:, :kk] = np.take_along_axis(d2, order, axis=1)
+    return ids, dist
+
+
+def make_graph(seed: int, n: int, k: int, d: int = 4) -> tuple[KNNGraph, np.ndarray]:
+    """A structurally valid, fully-alive KNNGraph over random points.
+
+    Exact forward lists, canonical reverse side, exact norm cache — i.e. a
+    graph every owner-maintained invariant holds on, which the ops under
+    test must then *preserve*.
+    """
+    x = make_points(seed, n, d)
+    ids, dist = exact_lists(x, k)
+    g = empty_graph(n, k, rev_capacity=2 * k)
+    g = g._replace(
+        nbr_ids=jnp.asarray(ids),
+        nbr_dist=jnp.asarray(dist),
+        alive=jnp.ones((n,), bool),
+        n_valid=jnp.asarray(n, jnp.int32),
+    )
+    g = attach_sq_norms(g, jnp.asarray(x))
+    return rebuild_reverse(g), x
+
+
+def assert_invariants(g: KNNGraph, context: str = "") -> None:
+    inv = graph_invariants_ok(g)
+    bad = [name for name, v in inv.items() if not bool(jnp.all(v))]
+    assert not bad, f"graph invariants violated {bad} {context}"
+
+
+def assert_norm_cache(g: KNNGraph, x: np.ndarray, context: str = "") -> None:
+    """The PR-3 cache invariant: exact ‖x_i‖² for alive allocated rows, 0
+    everywhere else."""
+    sq = np.asarray(g.sq_norms)
+    want = np.asarray(squared_norms(jnp.asarray(x[: g.capacity])))
+    if want.shape[0] < g.capacity:  # grown graphs: unallocated tail rows
+        want = np.pad(want, (0, g.capacity - want.shape[0]))
+    rows = np.arange(g.capacity)
+    live = (rows < int(g.n_valid)) & np.asarray(g.alive)
+    np.testing.assert_allclose(
+        sq[live], want[live], rtol=1e-6,
+        err_msg=f"norm cache drifted on alive rows {context}",
+    )
+    assert np.all(sq[~live] == 0.0), f"norm cache nonzero on dead rows {context}"
+
+
+# ---------------------------------------------------------------------------
+# Checkers (one property each)
+# ---------------------------------------------------------------------------
+
+
+def check_generated_graph_invariants(seed: int, n: int, k: int) -> None:
+    g, x = make_graph(seed, n, k)
+    assert_invariants(g, "(freshly generated)")
+    assert_norm_cache(g, x, "(freshly generated)")
+
+
+def check_remove_preserves_invariants(seed: int, n: int, k: int, n_rm: int) -> None:
+    """dynamic.remove keeps every structural + cache invariant, for any
+    victim set (including duplicates and out-of-range padding)."""
+    g, x = make_graph(seed, n, k)
+    rng = np.random.RandomState(seed ^ 0x5EED)
+    victims = rng.randint(-1, n + 2, size=max(n_rm, 1)).astype(np.int32)
+    g2 = dynamic.remove(g, jnp.asarray(x), jnp.asarray(victims), "l2")
+    assert_invariants(g2, f"(after remove {victims.tolist()})")
+    assert_norm_cache(g2, x, "(after remove)")
+    dead = set(int(v) for v in victims if 0 <= v < n)
+    alive = np.asarray(g2.alive)
+    assert not any(alive[v] for v in dead)
+    # no list (forward or reverse) still references a victim
+    for v in dead:
+        assert not np.any(np.asarray(g2.nbr_ids) == v)
+        assert not np.any(np.asarray(g2.rev_ids) == v)
+
+
+def check_grow_trim_cache_carry(seed: int, n: int, k: int, extra: int) -> None:
+    """grow_graph carries the cache; trim_graph drops only unallocated tail."""
+    g, x = make_graph(seed, n, k)
+    g2 = grow_graph(g, n + extra)
+    assert g2.capacity == n + extra
+    assert_norm_cache(g2, x, "(after grow)")
+    assert_invariants(g2, "(after grow)")
+    g3 = trim_graph(g2, n)
+    for field in KNNGraph._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g3, field)), np.asarray(getattr(g, field)),
+            err_msg=f"trim(grow(g)) != g on {field}",
+        )
+
+
+def check_reverse_structural_contract(seed: int, n: int, k: int) -> None:
+    """rebuild_reverse: every stored reverse edge is a true forward edge's
+    reverse, each member holds min(in_degree, R) owners, and rev_lam
+    snapshots the forward twin's λ exactly."""
+    g, _ = make_graph(seed, n, k)
+    # give λ distinguishable values so the snapshot check bites
+    rng = np.random.RandomState(seed ^ 0xABCD)
+    lam = np.where(
+        np.asarray(g.nbr_ids) >= 0, rng.randint(0, 7, size=(n, k)), 0
+    ).astype(np.int32)
+    g = rebuild_reverse(g._replace(nbr_lam=jnp.asarray(lam)))
+    ids = np.asarray(g.nbr_ids)
+    rev = np.asarray(g.rev_ids)
+    rev_lam = np.asarray(g.rev_lam)
+    R = g.rev_capacity
+    owners = {j: [r for r in range(n) if j in ids[r].tolist()] for j in range(n)}
+    for j in range(n):
+        got = [int(o) for o in rev[j] if o >= 0]
+        assert set(got) <= set(owners[j]), f"phantom reverse edge at {j}"
+        assert len(got) == min(len(owners[j]), R)
+        assert len(set(got)) == len(got), f"duplicate reverse owners at {j}"
+        for slot, o in enumerate(rev[j]):
+            if o >= 0:  # λ snapshot == λ of j inside G[o]
+                twin = int(np.where(ids[o] == j)[0][0])
+                assert rev_lam[j, slot] == lam[o, twin]
+        assert int(g.rev_ptr[j]) == min(len(owners[j]), R)
+
+
+def check_merge_candidates_invariants(case) -> None:
+    cap, k, ids, dist, v, q, d = case
+    res = merge.merge_candidates(
+        jnp.asarray(ids), jnp.asarray(dist), jnp.asarray(np.zeros_like(ids)),
+        jnp.asarray(v), jnp.asarray(q), jnp.asarray(d),
+    )
+    m_ids = np.asarray(res.nbr_ids)
+    m_dist = np.asarray(res.nbr_dist)
+    for r in range(cap):
+        row = m_dist[r]
+        assert np.all(np.diff(row[np.isfinite(row)]) >= 0), "row not sorted"
+        real = m_ids[r][m_ids[r] >= 0]
+        assert len(set(real.tolist())) == len(real), "duplicate ids in row"
+        assert r not in real.tolist(), "self loop"
+
+
+def check_merge_candidates_oracle(case) -> None:
+    """Batched merge == per-row sequential top-k insertion (the paper's
+    insertG semantics, final-content-exact)."""
+    cap, k, ids, dist, v, q, d = case
+    res = merge.merge_candidates(
+        jnp.asarray(ids), jnp.asarray(dist), jnp.asarray(np.zeros_like(ids)),
+        jnp.asarray(v), jnp.asarray(q), jnp.asarray(d),
+    )
+    m_ids = np.asarray(res.nbr_ids)
+    m_dist = np.asarray(res.nbr_dist)
+    for r in range(cap):
+        pool = {}
+        for j in range(k):
+            if ids[r, j] >= 0:
+                pool[int(ids[r, j])] = float(dist[r, j])
+        for t in range(len(v)):
+            if v[t] == r and q[t] != r and q[t] >= 0 and int(q[t]) not in pool:
+                pool[int(q[t])] = float(d[t])
+        want = sorted(pool.items(), key=lambda kv: kv[1])[:k]
+        got = [(int(i), float(s)) for i, s in zip(m_ids[r], m_dist[r]) if i >= 0]
+        assert len(got) == len(want), f"row {r}: kept {len(got)} != {len(want)}"
+        np.testing.assert_allclose(
+            [s for _, s in got], [s for _, s in want], rtol=1e-6,
+            err_msg=f"row {r} distances diverge from sequential insertion",
+        )
+
+
+def make_merge_case(seed: int, cap: int, k: int, t: int):
+    """Random partially-filled rows + a proposal stream whose distances are
+    a deterministic function of the pair (as in reality)."""
+    rng = np.random.RandomState(seed)
+    ids = np.full((cap, k), -1, np.int32)
+    dist = np.full((cap, k), np.inf, np.float32)
+    for r in range(cap):
+        nfill = rng.randint(0, k + 1)
+        if nfill:
+            cands = rng.choice(
+                [i for i in range(cap) if i != r],
+                size=min(nfill, cap - 1), replace=False,
+            )
+            ids[r, : len(cands)] = cands
+            dist[r, : len(cands)] = np.sort(rng.rand(len(cands)).astype(np.float32))
+    v = rng.randint(-1, cap, size=t).astype(np.int32)
+    q = rng.randint(0, cap, size=t).astype(np.int32)
+    pair_d = rng.rand(cap + 1, cap).astype(np.float32)
+    d = pair_d[np.maximum(v, 0), q]
+    return cap, k, ids, dist, v, q, d
+
+
+def check_append_reverse_ring(seed: int, R: int, t: int) -> None:
+    rng = np.random.RandomState(seed)
+    cap = 8
+    owner = rng.randint(0, cap, size=t).astype(np.int32)
+    member = rng.randint(-1, cap, size=t).astype(np.int32)
+    rev2, _, ptr2 = merge.append_reverse(
+        jnp.full((cap, R), -1, jnp.int32),
+        jnp.zeros((cap, R), jnp.int32),
+        jnp.zeros((cap,), jnp.int32),
+        jnp.asarray(owner), jnp.asarray(member),
+    )
+    rev2, ptr2 = np.asarray(rev2), np.asarray(ptr2)
+    for m in range(cap):
+        appends = owner[(member == m) & (owner >= 0)]
+        assert ptr2[m] == len(appends), "rev_ptr must count every append"
+        got = set(int(o) for o in rev2[m] if o >= 0)
+        assert len(got) <= R
+        # starting from an empty ring, EXACTLY the last min(R, n) appends
+        # survive (FIFO overwrite drops the oldest, never the newest)
+        expect = set(appends[-min(R, len(appends)):].tolist()) if len(appends) else set()
+        assert got == expect, f"member {m}: ring holds {got}, want {expect}"
+
+
+def check_topk_smallest_matches_numpy(seed: int, m: int, c: int, k: int) -> None:
+    """ref.topk_smallest == NumPy partial sort, ids consistent with dists."""
+    from repro.kernels import ref
+
+    rng = np.random.RandomState(seed)
+    d = rng.rand(m, c).astype(np.float32)
+    ids = rng.randint(0, 1000, size=(m, c)).astype(np.int32)
+    kk = min(k, c)
+    got_d, got_i = ref.topk_smallest(jnp.asarray(d), jnp.asarray(ids), kk)
+    got_d, got_i = np.asarray(got_d), np.asarray(got_i)
+    want = np.sort(d, axis=1)[:, :kk]
+    np.testing.assert_allclose(got_d, want, rtol=1e-6)
+    for r_ in range(m):
+        for j in range(kk):
+            # the id in slot j must name a column whose distance matches
+            src = np.where(ids[r_] == got_i[r_, j])[0]
+            assert src.size and d[r_][src].min() <= want[r_, j] + 1e-6
+
+
+def check_grouped_top_r_matches_numpy(seed: int, num_segments: int, r: int, t: int) -> None:
+    """segments.grouped_top_r == the per-segment first-r NumPy reference."""
+    rng = np.random.RandomState(seed)
+    keys = np.sort(rng.randint(0, num_segments + 2, size=t)).astype(np.int32)
+    payload = rng.randint(0, 1000, size=t).astype(np.int32)
+    (buf,), counts = segments.grouped_top_r(
+        jnp.asarray(keys), [jnp.asarray(payload)], [-1], num_segments, r
+    )
+    buf, counts = np.asarray(buf), np.asarray(counts)
+    for s in range(num_segments):
+        vals = payload[keys == s]
+        want = vals[:r].tolist()
+        got = [int(x) for x in buf[s] if x >= 0]
+        assert got == want, f"segment {s}: {got} != {want}"
+        assert counts[s] == len(vals), "counts must be uncapped"

@@ -30,11 +30,12 @@ step = jax.jit(distributed.make_distributed_build_step(mesh, cfg))
 key = jax.random.PRNGKey(0)
 pos = 16
 while pos < 64:
-    g, comps = step(g, x, jnp.asarray(pos, jnp.int32),
-                    jnp.asarray(min(16, 64 - pos), jnp.int32), key)
+    g, comps, edges = step(g, x, jnp.asarray(pos, jnp.int32),
+                           jnp.asarray(min(16, 64 - pos), jnp.int32), key)
     pos += 16
 assert int(g.n_valid) == 64, int(g.n_valid)
 assert float(comps) > 0
+assert float(edges) >= 0
 
 search = jax.jit(distributed.make_distributed_search(mesh, cfg.search_config()))
 q = jax.random.uniform(jax.random.PRNGKey(5), (16, 16))
@@ -81,6 +82,64 @@ def test_results_sorted(result):
 def test_degraded_shard_graceful(result):
     # losing 1/8 of the data costs recall but must not break serving
     assert result["recall_degraded"] >= result["recall"] - 0.25, result
+
+
+SUBGRAPH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import brute, construct, distributed
+from repro.kernels import compat
+
+mesh = compat.make_mesh((4,), ("data",))
+n, d = 4 * 80, 12
+x = jax.random.uniform(jax.random.PRNGKey(0), (n, d))
+cfg = construct.BuildConfig(k=8, wave=32, n_seed_init=32, beam=16, n_seeds=4,
+                            hash_slots=512, max_iters=20, use_pallas=False)
+
+# shard_map sub-builds over real data: 4 local graphs in local id spaces
+graphs, comps, waves, edges = distributed.build_subgraphs(
+    mesh, x, cfg, jax.random.PRNGKey(1))
+assert len(graphs) == 4 and all(int(g.n_valid) == 80 for g in graphs)
+assert comps > 0 and waves > 0 and edges > 0
+
+# the same shard graphs fold through the device-path of build_parallel
+g, stats = construct.build_parallel(
+    x, cfg, jax.random.PRNGKey(1), shards=4, refine_rounds=1, mesh=mesh)
+tids, _ = brute.brute_force_knn(
+    x, x, 8, "l2", exclude_ids=jnp.arange(n, dtype=jnp.int32),
+    use_pallas=False)
+rec = float(brute.recall_at_k(g.nbr_ids, tids, 8))
+from repro.core.graph import graph_invariants_ok
+inv = graph_invariants_ok(g)
+bad = [k for k, v in inv.items() if not bool(jnp.all(v))]
+print(json.dumps({"recall": rec, "bad": bad, "comps": int(stats.n_comps)}))
+"""
+
+
+@pytest.fixture(scope="module")
+def subgraph_result():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", SUBGRAPH_SCRIPT], capture_output=True,
+        text=True, env=env, timeout=1200,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_device_parallel_build_merges_clean(subgraph_result):
+    r = subgraph_result
+    assert not r["bad"], r
+    assert r["comps"] > 0
+
+
+def test_device_parallel_build_recall(subgraph_result):
+    # 4-way device build + symmetric merge + one refine round must land in
+    # the same quality band as the single-graph build at this tiny scale
+    assert subgraph_result["recall"] > 0.85, subgraph_result
 
 
 COMPRESS_SCRIPT = r"""

@@ -1,0 +1,305 @@
+"""Divide-and-conquer construction: parallel sub-builds + symmetric merge.
+
+Covers the PR-5 tentpole end to end:
+
+  * ``merge.symmetric_merge`` structure: stacked id spaces, cross edges in
+    both directions, canonical reverse rebuild, gathered norm cache;
+  * the brute-force oracle recall matrix — the merged+refined graph must
+    stay within 0.02 recall@10 of the sequential online build across
+    metrics and odd shard splits (uneven sizes, n not divisible);
+  * ``ShardedIndex.merge_shards`` — serving equivalence over the union,
+    global-id stability, snapshot round trip;
+  * the online property after a merged build: ``dynamic.insert`` → ``remove``
+    round trips preserve the norm-cache and liveness invariants.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import prop_util
+from repro.core import brute, construct, dynamic, merge
+from repro.core.graph import graph_invariants_ok, trim_graph
+from repro.index import OnlineIndex
+from repro.index.router import ShardedIndex
+
+
+def small_cfg(metric="l2", k=10):
+    return construct.BuildConfig(
+        k=k, metric=metric, wave=64, n_seed_init=64, beam=20, n_seeds=4,
+        hash_slots=512, max_iters=30, use_pallas=False,
+    )
+
+
+def uniform(n, d, seed=0):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, d), jnp.float32)
+
+
+def graph_recall(g, x, metric, k):
+    n = x.shape[0]
+    tids, _ = brute.brute_force_knn(
+        x, x, k, metric, exclude_ids=jnp.arange(n, dtype=jnp.int32),
+        use_pallas=False,
+    )
+    return float(brute.recall_at_k(g.nbr_ids[:, :k], tids, k))
+
+
+# ---------------------------------------------------------------------------
+# symmetric_merge unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_symmetric_merge_structure():
+    """Cross edges exist in both directions, invariants + cache hold."""
+    n, d = 300, 8
+    x = uniform(n, d)
+    cfg = small_cfg(k=8)
+    na = 137  # deliberately uneven
+    ga, _ = construct.build(x[:na], cfg, jax.random.PRNGKey(1))
+    gb, _ = construct.build(x[na:], cfg, jax.random.PRNGKey(2))
+    g, comps = merge.symmetric_merge(
+        ga, gb, x, cfg.search_config(), jax.random.PRNGKey(3)
+    )
+    assert g.capacity == n and int(g.n_valid) == n
+    assert int(comps) > 0
+    prop_util.assert_invariants(g, "(symmetric_merge)")
+    prop_util.assert_norm_cache(g, np.asarray(x), "(symmetric_merge)")
+    ids = np.asarray(g.nbr_ids)
+    # a-side rows hold b-side ids and vice versa
+    a_cross = (ids[:na] >= na).any()
+    b_cross = ((ids[na:] >= 0) & (ids[na:] < na)).any()
+    assert a_cross and b_cross, "merge produced no cross-partition edges"
+
+
+def test_symmetric_merge_rejects_partial_graphs():
+    x = uniform(80, 6)
+    cfg = small_cfg(k=4)
+    g, _ = construct.build(x[:40], cfg, jax.random.PRNGKey(0))
+    partial = brute.exact_seed_graph(x[40:], 16, 4)  # n_valid=16 < cap=40
+    with pytest.raises(ValueError, match="fully-allocated"):
+        merge.stack_subgraphs(g, partial, 40)
+    with pytest.raises(ValueError, match="rows"):
+        merge.symmetric_merge(g, g, x[:79], cfg.search_config())
+
+
+def test_trim_graph_guards_allocated_rows():
+    x = uniform(60, 6)
+    g, _ = construct.build(x, small_cfg(k=4), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="n_valid"):
+        trim_graph(g, 59)
+    assert trim_graph(g, 60) is g  # no-op at capacity
+
+
+def test_build_parallel_shards_1_is_sequential():
+    x = uniform(200, 8)
+    cfg = small_cfg(k=6)
+    g1, s1 = construct.build(x, cfg, jax.random.PRNGKey(7))
+    g2, s2 = construct.build_parallel(x, cfg, jax.random.PRNGKey(7), shards=1)
+    for f in ("nbr_ids", "nbr_dist", "nbr_lam", "rev_ids", "alive"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g1, f)), np.asarray(getattr(g2, f))
+        )
+    assert int(s1.n_comps) == int(s2.n_comps)
+
+
+def test_partition_bounds_validation():
+    with pytest.raises(ValueError):
+        construct.partition_bounds(10, 11)
+    with pytest.raises(ValueError):
+        construct.partition_bounds(10, 0)
+    b = construct.partition_bounds(320, 3)
+    assert b[0] == 0 and b[-1] == 320 and len(b) == 4
+    sizes = np.diff(b)
+    assert sizes.min() >= 106 and sizes.max() <= 107  # balanced ±1
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle recall matrix (metric x shard split)
+# ---------------------------------------------------------------------------
+
+# (metric, n, shards): odd splits on purpose — uneven sizes and n not
+# divisible by shards both appear
+ORACLE_MATRIX = [
+    ("l2", 320, 2),
+    ("ip", 320, 3),
+    ("cosine", 301, 2),
+    ("l1", 320, 3),
+]
+
+
+@pytest.mark.parametrize("metric,n,shards", ORACLE_MATRIX)
+def test_merge_recall_matches_sequential(metric, n, shards):
+    """Merged+refined recall@10 within 0.02 of the sequential online build."""
+    d = 10
+    x = uniform(n, d, seed=11)
+    cfg = small_cfg(metric=metric)
+    g_seq, _ = construct.build(x, cfg, jax.random.PRNGKey(1))
+    g_par, _ = construct.build_parallel(
+        x, cfg, jax.random.PRNGKey(1), shards=shards, refine_rounds=1
+    )
+    prop_util.assert_invariants(g_par, f"({metric}, {shards} shards)")
+    r_seq = graph_recall(g_seq, x, metric, 10)
+    r_par = graph_recall(g_par, x, metric, 10)
+    assert r_par >= r_seq - 0.02, (
+        f"{metric}/{shards} shards: merged recall {r_par:.4f} fell more than "
+        f"0.02 below sequential {r_seq:.4f}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# ShardedIndex.merge_shards
+# ---------------------------------------------------------------------------
+
+
+def router_fixture(n=240, d=8, shards=3, k=8):
+    items = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    cfg = small_cfg(k=k)
+    r = ShardedIndex.build(items, shards, cfg, key=jax.random.PRNGKey(1))
+    return r, items, cfg
+
+
+def test_merge_shards_serving_matches_union_index():
+    r, items, cfg = router_fixture()
+    q = jax.random.normal(jax.random.PRNGKey(2), (3, items.shape[1]))
+    union = OnlineIndex.build(items, cfg, key=jax.random.PRNGKey(3))
+    r.merge_shards(refine_rounds=1, key=jax.random.PRNGKey(4))
+    assert r.n_shards == 1
+    # exact serving: the merged index over the union answers brute queries
+    # identically to an OnlineIndex built over the union outright
+    for i in range(q.shape[0]):
+        ids_m, s_m = r.retrieve(q[i : i + 1], 10, brute=True)
+        ids_u, s_u = ShardedIndex(
+            [union], [np.arange(union.capacity, dtype=np.int64)],
+            next_gid=union.capacity,
+        ).retrieve(q[i : i + 1], 10, brute=True)
+        np.testing.assert_array_equal(ids_m, ids_u)
+        np.testing.assert_allclose(np.asarray(s_m), np.asarray(s_u), rtol=1e-6)
+    # graph serving stays near-exact on the merged graph
+    ids_g, _ = r.retrieve(q[:1], 10, key=jax.random.PRNGKey(5))
+    ids_b, _ = r.retrieve(q[:1], 10, brute=True)
+    overlap = len(set(ids_g.tolist()) & set(ids_b.tolist()))
+    assert overlap >= 8, f"graph serving recall collapsed post-merge: {overlap}/10"
+
+
+def test_merge_shards_preserves_global_ids():
+    r, items, _ = router_fixture()
+    # churn BEFORE the merge: new ids handed out, some ids withdrawn
+    new_vecs = jax.random.normal(jax.random.PRNGKey(9), (6, items.shape[1]))
+    new_gids = r.add(new_vecs)
+    assert r.remove(np.arange(20, 40)) == 20
+    want = {}  # gid -> vector, via the pre-merge tables
+    for s, shard in enumerate(r.shards):
+        table = r.gids[s]
+        xs = np.asarray(shard.items)
+        alive = np.asarray(shard.graph.alive)
+        for row in range(int(shard.graph.n_valid)):
+            if table[row] >= 0 and alive[row]:
+                want[int(table[row])] = xs[row]
+    r.merge_shards(key=jax.random.PRNGKey(4))
+    merged = r.shards[0]
+    table = r.gids[0]
+    xs = np.asarray(merged.items)
+    got = {
+        int(table[row]): xs[row]
+        for row in range(int(merged.graph.n_valid))
+        if table[row] >= 0
+    }
+    assert set(got) == set(want), "global id set changed across merge_shards"
+    for gid, vec in want.items():
+        np.testing.assert_array_equal(got[gid], vec)
+    # ids handed out before the merge keep resolving for removal
+    assert r.remove(np.asarray(new_gids[:2])) == 2
+    assert r.n_items == len(want) - 2
+
+
+def test_merge_shards_snapshot_roundtrip_bit_exact(tmp_path):
+    r, items, _ = router_fixture(n=180, shards=2)
+    r.merge_shards(key=jax.random.PRNGKey(4))
+    path = r.save(str(tmp_path / "merged_router"))
+    r2 = ShardedIndex.load(path)
+    assert r2.n_shards == 1 and r2.next_gid == r.next_gid
+    np.testing.assert_array_equal(r2.gids[0], r.gids[0])
+    g, g2 = r.shards[0].graph, r2.shards[0].graph
+    for f in ("nbr_ids", "nbr_dist", "nbr_lam", "rev_ids", "rev_lam",
+              "rev_ptr", "alive", "sq_norms"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g, f)), np.asarray(getattr(g2, f)),
+            err_msg=f"graph field {f} drifted across save/load",
+        )
+    np.testing.assert_array_equal(np.asarray(r.shards[0].items),
+                                  np.asarray(r2.shards[0].items))
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, items.shape[1]))
+    ids_a, s_a = r.retrieve(q[:1], 8, key=jax.random.PRNGKey(6))
+    ids_b, s_b = r2.retrieve(q[:1], 8, key=jax.random.PRNGKey(6))
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+
+
+def test_merge_shards_single_shard_noop():
+    items = jax.random.normal(jax.random.PRNGKey(0), (120, 6))
+    r = ShardedIndex.build(items, 1, small_cfg(k=6), key=jax.random.PRNGKey(1))
+    g0 = r.shards[0].graph
+    r.merge_shards()
+    assert r.n_shards == 1
+    np.testing.assert_array_equal(
+        np.asarray(g0.nbr_ids), np.asarray(r.shards[0].graph.nbr_ids)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Online property after a merged build (satellite: insert -> remove round trip)
+# ---------------------------------------------------------------------------
+
+
+def test_insert_remove_round_trip_on_merged_graph():
+    """dynamic.insert after a merged build preserves the norm-cache and
+    liveness invariants through insert -> remove -> recycle-insert."""
+    n, d = 300, 10
+    x = uniform(n, d, seed=21)
+    cfg = small_cfg(k=8)
+    g, _ = construct.build_parallel(
+        x, cfg, jax.random.PRNGKey(1), shards=3, refine_rounds=1
+    )
+    oi = OnlineIndex(graph=g, items=x, build_cfg=cfg)
+
+    def assert_online_invariants(tag):
+        prop_util.assert_invariants(oi.graph, tag)
+        prop_util.assert_norm_cache(oi.graph, np.asarray(oi.items), tag)
+
+    assert_online_invariants("(merged build)")
+    # growth insert: capacity == n, so this exercises grow_graph + insert
+    oi.add(jax.random.normal(jax.random.PRNGKey(5), (24, d)), flush=True)
+    assert_online_invariants("(after growth insert)")
+    # removal wave (λ repair + reverse purge on the merged lists)
+    oi.remove(np.arange(0, 60, 4))
+    assert_online_invariants("(after remove)")
+    # recycle path: compaction reclaims the ledger, then the insert lands
+    oi.add(jax.random.normal(jax.random.PRNGKey(6), (8, d)), flush=True)
+    assert_online_invariants("(after recycle insert)")
+    assert oi.n_items == n + 24 - 15 + 8
+
+
+def test_merge_with_dead_rows_keeps_them_dead():
+    """A removed sample must not re-enter anyone's list through a merge."""
+    n, d = 260, 8
+    x = uniform(n, d, seed=31)
+    cfg = small_cfg(k=6)
+    na = 130
+    ga, _ = construct.build(x[:na], cfg, jax.random.PRNGKey(1))
+    gb, _ = construct.build(x[na:], cfg, jax.random.PRNGKey(2))
+    ga = dynamic.remove(ga, x[:na], jnp.asarray([3, 50, 77], jnp.int32), "l2")
+    gb = dynamic.remove(gb, x[na:], jnp.asarray([10, 99], jnp.int32), "l2")
+    g, _ = merge.symmetric_merge(
+        ga, gb, x, cfg.search_config(), jax.random.PRNGKey(3)
+    )
+    prop_util.assert_invariants(g, "(merge with dead rows)")
+    prop_util.assert_norm_cache(g, np.asarray(x), "(merge with dead rows)")
+    dead = [3, 50, 77, na + 10, na + 99]
+    ids = np.asarray(g.nbr_ids)
+    alive = np.asarray(g.alive)
+    for v in dead:
+        assert not alive[v]
+        assert (ids[v] == -1).all(), f"dead row {v} grew a list in the merge"
+        assert not (ids == v).any(), f"dead row {v} re-entered a list"

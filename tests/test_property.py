@@ -1,166 +1,82 @@
 """Hypothesis property tests on the system's core invariants.
 
-The batched merge (``insertG``), the reverse ring buffers and the top-k
-selection are the load-bearing primitives of the whole framework — every
-wave commit, NN-Descent round and refinement pass goes through them.
+The batched merge (``insertG``), the reverse ring buffers, the segmented
+group-by core, the removal path and the norm cache are the load-bearing
+primitives of the whole framework — every wave commit, NN-Descent round,
+sub-graph merge and refinement pass goes through them.
+
+Strategies only draw small integers (seeds + shapes); the data-shaped case
+construction and the checkers live in ``tests/prop_util.py``, shared with
+the fixed-seed leg (``tests/test_property_fixed.py``) that runs where
+Hypothesis is absent.  CI installs ``hypothesis`` and runs this suite under
+the pinned ``ci`` profile: derandomized (no flaky example schedules on
+shared runners) with the deadline disabled (jit compile time would trip any
+per-example deadline).
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import merge
-from repro.core.graph import empty_graph, graph_invariants_ok, rebuild_reverse
-from repro.kernels import ref
+import prop_util  # tests/ is on sys.path under pytest's rootdir insertion
 
-settings.register_profile("ci", max_examples=25, deadline=None)
+settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
 settings.load_profile("ci")
 
-
-@st.composite
-def merge_case(draw):
-    cap = draw(st.integers(4, 12))
-    k = draw(st.integers(2, 5))
-    t = draw(st.integers(1, 40))
-    rng = np.random.RandomState(draw(st.integers(0, 2**31 - 1)))
-    # existing rows: sorted unique neighbors
-    ids = np.full((cap, k), -1, np.int32)
-    dist = np.full((cap, k), np.inf, np.float32)
-    for r in range(cap):
-        nfill = rng.randint(0, k + 1)
-        if nfill:
-            cands = rng.choice([i for i in range(cap) if i != r],
-                               size=min(nfill, cap - 1), replace=False)
-            ds = np.sort(rng.rand(len(cands)).astype(np.float32))
-            ids[r, : len(cands)] = cands
-            dist[r, : len(cands)] = ds
-    v = rng.randint(-1, cap, size=t).astype(np.int32)
-    q = rng.randint(0, cap, size=t).astype(np.int32)
-    # distances are a deterministic function of the pair (as in reality —
-    # duplicate (v, q) proposals always carry the same m(v, q))
-    pair_d = rng.rand(cap + 1, cap).astype(np.float32)
-    d = pair_d[np.maximum(v, 0), q]
-    return cap, k, ids, dist, v, q, d
+seeds = st.integers(0, 2**31 - 1)
 
 
-@given(merge_case())
-def test_merge_invariants(case):
-    cap, k, ids, dist, v, q, d = case
-    lam = np.zeros_like(ids)
-    res = merge.merge_candidates(
-        jnp.asarray(ids), jnp.asarray(dist), jnp.asarray(lam),
-        jnp.asarray(v), jnp.asarray(q), jnp.asarray(d),
-    )
-    m_ids = np.asarray(res.nbr_ids)
-    m_dist = np.asarray(res.nbr_dist)
-    for r in range(cap):
-        row = m_dist[r]
-        assert np.all(np.diff(row[np.isfinite(row)]) >= 0)  # sorted
-        real = m_ids[r][m_ids[r] >= 0]
-        assert len(set(real.tolist())) == len(real)  # unique
-        assert r not in real.tolist()  # no self loop
+@given(seeds, st.integers(5, 16), st.integers(2, 5))
+def test_generated_graph_invariants(seed, n, k):
+    """Exact generated graphs satisfy every structural + cache invariant."""
+    prop_util.check_generated_graph_invariants(seed, n, k)
 
 
-@given(merge_case())
-def test_merge_matches_sequential_topk(case):
-    """Batched merge == per-row 'insert each candidate sequentially'."""
-    cap, k, ids, dist, v, q, d = case
-    lam = np.zeros_like(ids)
-    res = merge.merge_candidates(
-        jnp.asarray(ids), jnp.asarray(dist), jnp.asarray(lam),
-        jnp.asarray(v), jnp.asarray(q), jnp.asarray(d),
-    )
-    m_ids = np.asarray(res.nbr_ids)
-    m_dist = np.asarray(res.nbr_dist)
-    for r in range(cap):
-        # sequential reference: existing list + qualified candidates,
-        # dedupe by id keeping the smallest distance, then top-k
-        pool = {}
-        for j in range(k):
-            if ids[r, j] >= 0:
-                pool[int(ids[r, j])] = float(dist[r, j])
-        for t_i in range(len(v)):
-            if v[t_i] == r and q[t_i] != r and q[t_i] >= 0:
-                if int(q[t_i]) not in pool:
-                    pool[int(q[t_i])] = float(d[t_i])
-        want = sorted(pool.items(), key=lambda kv: kv[1])[:k]
-        got = [(int(i), float(x)) for i, x in zip(m_ids[r], m_dist[r]) if i >= 0]
-        want_d = np.asarray([x for _, x in want], np.float32)
-        got_d = np.asarray([x for _, x in got], np.float32)
-        np.testing.assert_allclose(got_d, want_d[: len(got_d)], rtol=1e-6)
-        assert len(got) == len(want)
+@given(seeds, st.integers(6, 14), st.integers(2, 4), st.integers(1, 4))
+def test_remove_preserves_invariants(seed, n, k, n_rm):
+    """dynamic.remove preserves invariants for arbitrary victim sets."""
+    prop_util.check_remove_preserves_invariants(seed, n, k, n_rm)
 
 
-@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 30))
+@given(seeds, st.integers(5, 12), st.integers(2, 4), st.integers(1, 8))
+def test_grow_trim_cache_carry(seed, n, k, extra):
+    """grow_graph carries the norm cache; trim inverts grow bit-for-bit."""
+    prop_util.check_grow_trim_cache_carry(seed, n, k, extra)
+
+
+@given(seeds, st.integers(5, 12), st.integers(2, 4))
+def test_reverse_structural_contract(seed, n, k):
+    """rebuild_reverse: membership, min(in_degree, R) fill, exact rev_lam
+    snapshots, rev_ptr counts."""
+    prop_util.check_reverse_structural_contract(seed, n, k)
+
+
+@given(seeds, st.integers(4, 12), st.integers(2, 5), st.integers(1, 40))
+def test_merge_invariants(seed, cap, k, t):
+    case = prop_util.make_merge_case(seed, cap, k, t)
+    prop_util.check_merge_candidates_invariants(case)
+
+
+@given(seeds, st.integers(4, 12), st.integers(2, 5), st.integers(1, 40))
+def test_merge_matches_sequential_topk(seed, cap, k, t):
+    """Batched merge == per-row sequential top-k insertion."""
+    case = prop_util.make_merge_case(seed, cap, k, t)
+    prop_util.check_merge_candidates_oracle(case)
+
+
+@given(seeds, st.integers(2, 6), st.integers(1, 30))
 def test_append_reverse_ring(seed, R, t):
-    rng = np.random.RandomState(seed)
-    cap = 8
-    rev = jnp.full((cap, R), -1, jnp.int32)
-    lam = jnp.zeros((cap, R), jnp.int32)
-    ptr = jnp.zeros((cap,), jnp.int32)
-    owner = rng.randint(0, cap, size=t).astype(np.int32)
-    member = rng.randint(-1, cap, size=t).astype(np.int32)
-    rev2, _, ptr2 = merge.append_reverse(
-        rev, lam, ptr, jnp.asarray(owner), jnp.asarray(member)
-    )
-    rev2 = np.asarray(rev2)
-    ptr2 = np.asarray(ptr2)
-    for m in range(cap):
-        n_app = int(np.sum((member == m) & (owner >= 0)))
-        assert ptr2[m] == n_app
-        # the last min(R, n_app) appends for m are present
-        owners_for_m = owner[(member == m) & (owner >= 0)]
-        expect = set(owners_for_m[-min(R, n_app):].tolist()) if n_app else set()
-        got = set(int(x) for x in rev2[m] if x >= 0)
-        assert expect <= got | set(owners_for_m.tolist())
-        assert len(got) <= R
+    prop_util.check_append_reverse_ring(seed, R, t)
 
 
-@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
-def test_topk_smallest_matches_numpy(seed, k):
-    rng = np.random.RandomState(seed)
-    m, c = 5, 16
-    d = rng.rand(m, c).astype(np.float32)
-    ids = rng.randint(0, 1000, size=(m, c)).astype(np.int32)
-    kk = min(k, c)
-    got_d, got_i = ref.topk_smallest(jnp.asarray(d), jnp.asarray(ids), kk)
-    want = np.sort(d, axis=1)[:, :kk]
-    np.testing.assert_allclose(np.asarray(got_d), want, rtol=1e-6)
-    # ids consistent with distances
-    for r in range(m):
-        for j in range(kk):
-            assert d[r][np.where(ids[r] == np.asarray(got_i)[r, j])[0]].min() <= want[r, j] + 1e-6
+@given(seeds, st.integers(1, 6), st.integers(1, 20), st.integers(1, 8))
+def test_topk_smallest_matches_numpy(seed, m, c, k):
+    prop_util.check_topk_smallest_matches_numpy(seed, m, c, k)
 
 
-@given(st.integers(0, 2**31 - 1))
-def test_rebuild_reverse_consistent(seed):
-    """rebuild_reverse(g) contains every forward edge's reverse (up to R)."""
-    rng = np.random.RandomState(seed)
-    cap, k = 10, 3
-    g = empty_graph(cap, k, rev_capacity=2 * k)
-    ids = np.full((cap, k), -1, np.int32)
-    dist = np.full((cap, k), np.inf, np.float32)
-    for r in range(cap):
-        cands = rng.choice([i for i in range(cap) if i != r], size=k, replace=False)
-        ids[r] = cands
-        dist[r] = np.sort(rng.rand(k))
-    g = g._replace(
-        nbr_ids=jnp.asarray(ids), nbr_dist=jnp.asarray(dist),
-        alive=jnp.ones((cap,), bool), n_valid=jnp.asarray(cap, jnp.int32),
-    )
-    g = rebuild_reverse(g)
-    inv = graph_invariants_ok(g)
-    assert all(bool(jnp.all(v)) for v in inv.values())
-    rev = np.asarray(g.rev_ids)
-    R = g.rev_capacity
-    owners = {j: [r for r in range(cap) if j in ids[r].tolist()] for j in range(cap)}
-    for j in range(cap):
-        got = [int(x) for x in rev[j] if x >= 0]
-        # every stored reverse edge is a true forward edge's reverse...
-        assert set(got) <= set(owners[j])
-        # ...and the buffer holds min(in_degree, R) of them
-        assert len(got) == min(len(owners[j]), R)
+@given(seeds, st.integers(2, 8), st.integers(1, 5), st.integers(0, 60))
+def test_grouped_top_r_matches_numpy(seed, num_segments, r, t):
+    prop_util.check_grouped_top_r_matches_numpy(seed, num_segments, r, t)

@@ -1,0 +1,56 @@
+"""Fixed-seed leg of the property suite (tests/prop_util.py checkers).
+
+The Hypothesis suite (``test_property.py``) sweeps these same checkers over
+drawn cases; this file pins a small deterministic case matrix so the
+property logic itself — and the invariants it guards — stay exercised by
+tier-1 even in environments without Hypothesis.
+"""
+
+import pytest
+
+import prop_util
+
+
+CASES = [(0, 8, 2), (1, 12, 3), (2, 16, 5), (3, 5, 4)]
+
+
+@pytest.mark.parametrize("seed,n,k", CASES)
+def test_generated_graph_invariants(seed, n, k):
+    prop_util.check_generated_graph_invariants(seed, n, k)
+
+
+@pytest.mark.parametrize("seed,n,k,n_rm", [(0, 8, 2, 1), (1, 12, 3, 4), (2, 14, 4, 3)])
+def test_remove_preserves_invariants(seed, n, k, n_rm):
+    prop_util.check_remove_preserves_invariants(seed, n, k, n_rm)
+
+
+@pytest.mark.parametrize("seed,n,k,extra", [(0, 8, 2, 3), (1, 12, 3, 8)])
+def test_grow_trim_cache_carry(seed, n, k, extra):
+    prop_util.check_grow_trim_cache_carry(seed, n, k, extra)
+
+
+@pytest.mark.parametrize("seed,n,k", CASES)
+def test_reverse_structural_contract(seed, n, k):
+    prop_util.check_reverse_structural_contract(seed, n, k)
+
+
+@pytest.mark.parametrize("seed,cap,k,t", [(0, 6, 3, 20), (1, 12, 5, 40), (2, 4, 2, 1)])
+def test_merge_candidates(seed, cap, k, t):
+    case = prop_util.make_merge_case(seed, cap, k, t)
+    prop_util.check_merge_candidates_invariants(case)
+    prop_util.check_merge_candidates_oracle(case)
+
+
+@pytest.mark.parametrize("seed,R,t", [(0, 2, 10), (1, 4, 30), (2, 6, 5)])
+def test_append_reverse_ring(seed, R, t):
+    prop_util.check_append_reverse_ring(seed, R, t)
+
+
+@pytest.mark.parametrize("seed,m,c,k", [(0, 5, 16, 3), (1, 2, 20, 8), (2, 6, 1, 1)])
+def test_topk_smallest(seed, m, c, k):
+    prop_util.check_topk_smallest_matches_numpy(seed, m, c, k)
+
+
+@pytest.mark.parametrize("seed,s,r,t", [(0, 4, 2, 30), (1, 8, 5, 60), (2, 2, 1, 0)])
+def test_grouped_top_r(seed, s, r, t):
+    prop_util.check_grouped_top_r_matches_numpy(seed, s, r, t)
