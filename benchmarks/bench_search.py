@@ -16,6 +16,7 @@ them, i.e. the pre-fusion execution shape).  Its record lands in
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +71,81 @@ def run(n: int = 10_000, n_q: int = 256, k: int = 20, seed: int = 0, datasets=DA
                 tbl.add(name, gname, beam, rec, t_brute / t, 1e3 * t / n_q)
     tbl.show()
     return tbl
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical entry-point gate (the coarse-seeding tentpole measurement)
+# ---------------------------------------------------------------------------
+
+
+def hier_gate(
+    n: int = 100_000,
+    d: int = 20,
+    k: int = 20,
+    n_eval: int = 1024,
+    seed: int = 0,
+    include_random_baseline: bool = True,
+) -> dict:
+    """The canonical record for hierarchical (coarse-landmark) seeding.
+
+    Builds the LGD graph at paper scale (n=10^5) with
+    ``seed_mode="coarse"`` — insertion searches route through the landmark
+    level (core.hierarchy) instead of random entry points — and reports the
+    build scanning rate (Eq. 2) plus graph recall@10 on ``n_eval`` sampled
+    rows against exact ground truth (full n x n brute force is off the table
+    at this scale; the sample estimator's noise is ~±0.007 at n_eval=1024).
+
+    Dataset: ``clustered`` (SIFT/YFCC-like, intrinsic dim 16) — the regime
+    the paper reports its headline numbers on and the one hierarchical
+    seeding targets: landmarks summarize real density structure.  Uniform
+    U[0,1)^20 has intrinsic dimension == 20, where NO graph method reaches
+    0.95 recall inside a 0.02-scanning budget at this n (measured here:
+    0.84 for both seed modes — the graph itself saturates); gating on it
+    would gate the dataset, not the seeding.
+
+    CI floors (benchmarks.ci_gate): ``hier_recall_at_10_min`` and
+    ``scanning_rate_max`` — recall must hold while the scanning rate stays
+    polylog-small.  The ``baseline_random`` record rides along ungated: the
+    same build with random seeding, so the coarse level's effect is measured
+    against its own codebase, not a remembered number.
+
+    Minutes-long at the canonical n — this runs in the bench-smoke CI job
+    (``benchmarks.run --hier``), never in tier-1.
+    """
+    records = {}
+    modes = ["coarse"] + (["random"] if include_random_baseline else [])
+    x = common.dataset("clustered", n, d, seed)
+    rows = jax.random.choice(
+        jax.random.PRNGKey(seed + 1), n, shape=(min(n_eval, n),), replace=False
+    ).astype(jnp.int32)
+    true_ids, _ = brute.brute_force_knn(
+        x, x[rows], 10, "l2", exclude_ids=rows, use_pallas=False
+    )
+    for mode in modes:
+        cfg = construct.BuildConfig(
+            k=k, metric="l2", wave=256, beam=max(40, k), n_seeds=8, lgd=True,
+            use_pallas=False, seed_mode=mode,
+        )
+        t0 = time.perf_counter()
+        g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
+        jax.block_until_ready(g.nbr_ids)
+        records[mode] = {
+            "n": n, "d": d, "k": 10, "seed_mode": mode, "dataset": "clustered",
+            "recall_at_10": float(
+                brute.recall_at_k(g.nbr_ids[rows, :10], true_ids, 10)
+            ),
+            "scanning_rate": construct.scanning_rate(stats, n),
+            "n_comps": float(stats.n_comps),
+            "build_s": time.perf_counter() - t0,
+        }
+        print(f"hier_gate[{mode}]: n={n} recall@10="
+              f"{records[mode]['recall_at_10']:.4f} "
+              f"scan={records[mode]['scanning_rate']:.5f} "
+              f"({records[mode]['build_s']:.0f}s)", flush=True)
+    rec = records["coarse"]
+    if include_random_baseline:
+        rec["baseline_random"] = records["random"]
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -392,12 +468,18 @@ def main():
                     help="only the fused-vs-unfused expansion microbench")
     ap.add_argument("--gather-engine", action="store_true",
                     help="only the blocked-vs-rowwise gather-distance sweep")
+    ap.add_argument("--hier", action="store_true",
+                    help="only the hierarchical-seeding gate (minutes at the "
+                         "canonical n=100k; combine with --n to shrink)")
     args = ap.parse_args()
     if args.expansion:
         run_expansion()
         return
     if args.gather_engine:
         run_gather_engine()
+        return
+    if args.hier:
+        hier_gate(n=args.n if args.n != 10_000 else 100_000)
         return
     run(2000 if args.quick else args.n,
         datasets=DATASETS[:1] if args.quick else DATASETS)

@@ -25,6 +25,16 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
     sub-graph merge or the refinement sweep regressed.  The record's
     ``wallclock_ratio`` (parallel vs sequential build) rides along ungated —
     shared CI runners compress thread overlap.
+  * ``hier_recall_at_10_min`` + ``scanning_rate_max`` — hierarchical
+    (coarse-landmark) seeding at paper scale (bench_search.hier_gate,
+    n=10^5/d=20): recall@10 on sampled rows must hold the quality floor
+    WHILE the build scanning rate (Eq. 2) stays below the ceiling — the
+    two-sided gate is what makes "kills the scanning rate" a regression-
+    checked claim, not a one-off measurement.  The record's
+    ``baseline_random`` (same build, random entry points) rides along
+    ungated.  The record is opt-in (``benchmarks.run --hier``; minutes at
+    canonical n) — an ABSENT record skips both checks, a present one is
+    always gated.
 
 Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
 BENCH_ci.json artifact is uploaded either way so regressions come with data.
@@ -71,6 +81,21 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
          float(baseline["merge_recall_at_10_min"]),
          mrec >= float(baseline["merge_recall_at_10_min"]))
     )
+    if "hier_gate" in bench:  # opt-in record (minutes at n=10^5); absent in
+        # quick --ci-out runs — but when present it is always gated, and the
+        # scanning-rate check is a CEILING, not a floor
+        hrec = float(bench["hier_gate"]["recall_at_10"])
+        results.append(
+            ("hier_recall_at_10", hrec,
+             float(baseline["hier_recall_at_10_min"]),
+             hrec >= float(baseline["hier_recall_at_10_min"]))
+        )
+        hscan = float(bench["hier_gate"]["scanning_rate"])
+        results.append(
+            ("hier_scanning_rate", hscan,
+             float(baseline["scanning_rate_max"]),
+             hscan <= float(baseline["scanning_rate_max"]))
+        )
     return results
 
 
@@ -85,7 +110,8 @@ def main() -> int:
     failed = False
     for name, measured, floor, ok in check(bench, baseline):
         status = "OK  " if ok else "FAIL"
-        print(f"[{status}] {name}: {measured:.4g} (floor {floor:.4g})")
+        bound = "ceiling" if name.endswith("_rate") else "floor"
+        print(f"[{status}] {name}: {measured:.4g} ({bound} {floor:.4g})")
         failed |= not ok
     if failed:
         print("benchmark regression gate FAILED")

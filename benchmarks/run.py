@@ -30,6 +30,13 @@ def main():
     ap.add_argument("--ci-out", type=str, default=None, metavar="PATH",
                     help="write the machine-readable benchmark record "
                          "(BENCH_ci.json) for benchmarks.ci_gate")
+    ap.add_argument("--hier", action="store_true",
+                    help="include the hierarchical-seeding gate "
+                         "(bench_search.hier_gate, n=10^5 — minutes-long; "
+                         "bench-smoke CI only, never tier-1)")
+    ap.add_argument("--hier-n", type=int, default=100_000, metavar="N",
+                    help="dataset size for --hier (floors are calibrated at "
+                         "the canonical 100000)")
     args = ap.parse_args()
     n = 2000 if args.quick else args.n
 
@@ -69,6 +76,10 @@ def main():
         gather_engine = bench_search.run_gather_engine()
         lifecycle_churn = bench_lifecycle.churn_gate()
         merge_build = bench_construction.merge_build_gate()
+        # the hierarchical-seeding gate runs at paper scale (n=10^5) and is
+        # therefore opt-in: the bench-smoke CI job passes --hier; quick local
+        # --ci-out runs skip it and ci_gate tolerates the absent record
+        hier = bench_search.hier_gate(n=args.hier_n) if args.hier else None
         payload = {
             "expansion": expansion[16],  # serving batch — the gated record
             "expansion_wave": expansion[256],  # construction wave — recorded
@@ -85,6 +96,10 @@ def main():
                 if hasattr(t, "records")
             },
         }
+        if hier is not None:
+            # coarse-seeding quality at n=10^5: recall AND scanning rate
+            # both gated; the random-seed baseline rides along inside
+            payload["hier_gate"] = hier
         common.emit_json(args.ci_out, payload)
         print(f"wrote {args.ci_out}")
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s (n={n})")

@@ -3,17 +3,24 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Covers the paper's full loop in ~a minute on CPU:
-  1. online LGD construction over 5k clustered vectors (Alg. 3);
-  2. k-NN search with EHC (Alg. 1) and recall vs exact brute force;
+  1. online LGD construction over 5k clustered vectors (Alg. 3), with the
+     two-level coarse entry-point structure (landmark sub-graph) built
+     alongside — insertion searches seed from the coarse level instead of
+     random rows, which is what keeps the scanning rate polylog-small at
+     large n (ROADMAP item 1; gated at n=10^5 in CI);
+  2. k-NN search with EHC (Alg. 1), coarse-seeded, and recall vs exact
+     brute force;
   3. dynamic updates: insert new samples / remove old ones (§IV-C).
 """
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import BuildConfig, SearchConfig, brute, build, dynamic, search
+from repro.core import BuildConfig, SearchConfig, brute, build, dynamic
+from repro.core.search import search
 from repro.core.graph import grow_graph
 from repro.data import synthetic
 
@@ -22,15 +29,23 @@ N, D, K = 5000, 32, 10
 
 def main():
     key = jax.random.PRNGKey(0)
-    x = synthetic.clustered(key, N, D)
+    # one draw, split into reference set + held-out queries (the paper's
+    # protocol: queries share the data manifold)
+    full = synthetic.clustered(key, N + 100, D)
+    x, q = full[:N], full[N:]
 
     # -- 1. online construction (the paper's contribution) -------------------
-    cfg = BuildConfig(k=K, metric="l2", wave=256, lgd=True, use_pallas=False)
+    # seed_mode="coarse" builds a landmark sub-graph (core.hierarchy) with
+    # the same machinery and routes every insertion search through it; the
+    # coarse work is charged to n_comps, so the scanning rate below is honest.
+    cfg = BuildConfig(k=K, metric="l2", wave=256, lgd=True, use_pallas=False,
+                      seed_mode="coarse")
     t0 = time.time()
-    g, stats = build(x, cfg, key)
+    g, stats, coarse = build(x, cfg, key, return_coarse=True)
     c = float(stats.n_comps) / (N * (N - 1) / 2)
     print(f"LGD graph built in {time.time()-t0:.1f}s — scanning rate c={c:.4f} "
-          f"(brute force would be c=1.0)")
+          f"(brute force would be c=1.0); coarse level: "
+          f"{coarse.n_landmarks} landmarks")
 
     tids, _ = brute.brute_force_knn(
         x, x, K, "l2", exclude_ids=jnp.arange(N, dtype=jnp.int32), use_pallas=False)
@@ -38,24 +53,33 @@ def main():
     print(f"graph recall@{K} vs exact: {rec:.3f}")
 
     # -- 2. k-NN search over the graph ----------------------------------------
-    q = synthetic.clustered(jax.random.PRNGKey(7), 100, D)
-    scfg = SearchConfig(k=K, beam=40, use_lgd_mask=True, use_pallas=False)
+    scfg = SearchConfig(k=K, beam=40, use_lgd_mask=True, use_pallas=False,
+                        seed_mode="coarse")
     t0 = time.time()
-    res = search(g, x, q, jax.random.PRNGKey(1), scfg)
+    res = search(g, x, q, jax.random.PRNGKey(1), scfg, coarse=coarse)
     t_graph = time.time() - t0
     tq, _ = brute.brute_force_knn(x, q, 1, "l2", use_pallas=False)
     rec1 = float(brute.recall_at_k(res.ids[:, :1], tq, 1))
     comps = float(jnp.mean(res.n_comps))
-    print(f"search recall@1 = {rec1:.3f} at {comps:.0f} distance comps/query "
-          f"(vs {N} brute) in {t_graph*1e3:.0f}ms for 100 queries")
+    print(f"coarse-seeded search recall@1 = {rec1:.3f} at {comps:.0f} distance "
+          f"comps/query (vs {N} brute) in {t_graph*1e3:.0f}ms for 100 queries")
+
+    # the same search with random seeding, for the delta the coarse level buys
+    rres = search(g, x, q, jax.random.PRNGKey(1),
+                  dataclasses.replace(scfg, seed_mode="random"))
+    rrec1 = float(brute.recall_at_k(rres.ids[:, :1], tq, 1))
+    print(f"random-seeded baseline:  recall@1 = {rrec1:.3f} at "
+          f"{float(jnp.mean(rres.n_comps)):.0f} comps/query")
 
     # -- 3. dynamic updates ----------------------------------------------------
     extra = synthetic.clustered(jax.random.PRNGKey(9), 500, D)
     # grow_graph carries every field — incl. the ‖x‖² cache — forward
     grown = grow_graph(g, N + 500)
     x2 = jnp.concatenate([x, extra])
-    g2, _ = dynamic.insert(grown, x2, 500, cfg, jax.random.PRNGKey(2))
-    print(f"inserted 500 new samples online -> n_valid={int(g2.n_valid)}")
+    g2, _, coarse = dynamic.insert(
+        grown, x2, 500, cfg, jax.random.PRNGKey(2), coarse=coarse)
+    print(f"inserted 500 new samples online -> n_valid={int(g2.n_valid)} "
+          f"(coarse members appended in the same waves)")
 
     g3 = dynamic.remove(g2, x2, jnp.arange(100, dtype=jnp.int32), "l2")
     print(f"removed 100 samples (λ repaired, §IV-C) — alive rows: "

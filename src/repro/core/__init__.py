@@ -8,6 +8,7 @@ Public API:
   * ``construct``     — OLG (Alg. 2) / LGD (Alg. 3) wave-based online build
   * ``nndescent``     — NN-Descent baseline + §IV-D refinement
   * ``dynamic``       — online insert / remove (§IV-C)
+  * ``hierarchy``     — coarse landmark level for hierarchical entry points
   * ``distributed``   — shard_map sharded build & scatter-gather search
   * ``segments``      — segmented-scan / group-by primitives (shared core)
   * ``counters``      — exact 64-bit device-side counters (BuildStats)
@@ -19,6 +20,7 @@ from repro.core import (
     counters,
     dynamic,
     graph,
+    hierarchy,
     merge,
     metrics,
     nndescent,
@@ -39,6 +41,7 @@ __all__ = [
     "Counter64",
     "dynamic",
     "graph",
+    "hierarchy",
     "merge",
     "metrics",
     "nndescent",

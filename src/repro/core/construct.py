@@ -54,10 +54,15 @@ class BuildConfig:
     # search parameters (Alg. 1/3 inner loop)
     beam: int = 40
     n_seeds: int = 8  # p
-    hash_slots: int = 2048
+    hash_slots: Optional[int] = None  # None = auto-size from beam/max_iters
     max_iters: int = 60
     use_pallas: Optional[bool] = None
     data_bf16: bool = False  # store the dataset bf16 (distances accum f32)
+    # hierarchical entry-point seeding (core.hierarchy)
+    seed_mode: str = "random"  # "random" | "coarse"
+    coarse_landmarks: Optional[int] = None  # L; None = ~4·√n (hierarchy)
+    coarse_members: int = 8  # M — member-cell ring capacity per landmark
+    coarse_top: int = 4  # T winning landmarks seeding each fine search
 
     def search_config(self) -> SearchConfig:
         return SearchConfig(
@@ -69,6 +74,8 @@ class BuildConfig:
             metric=self.metric,
             use_lgd_mask=self.lgd,
             use_pallas=self.use_pallas,
+            seed_mode=self.seed_mode,
+            coarse_top=self.coarse_top,
         )
 
 
@@ -277,13 +284,21 @@ def wave_core(
     cfg: BuildConfig,
     *,
     n_real: Optional[Array] = None,
-) -> tuple[KNNGraph, BuildStats]:
+    coarse=None,
+):
     """Traceable fused search+commit: one wave of W insertions, no host sync.
 
     This is the single implementation behind the jitted ``wave_step`` (local
     builds) and the shard-local step of ``core.distributed`` — both paths run
     the identical wave semantics.  ``n_real`` defaults to the in-range tail
     ``min(W, n - pos)``; distributed callers pass their shard-local count.
+
+    ``coarse`` (a ``core.hierarchy.CoarseLevel``) makes the wave's insertion
+    searches seed coarsely AND assigns each committed row to its winning
+    landmark cell for free (``SearchResult.seed_cell``).  With a coarse
+    level the return is the 3-tuple ``(graph, stats, coarse)``; without one
+    it stays ``(graph, stats)`` — ``cfg.seed_mode="coarse"`` falls back to
+    random seeding for this wave (the distributed shard step runs that way).
     """
     W = cfg.wave
     n = x.shape[0]
@@ -292,7 +307,10 @@ def wave_core(
         n_real = jnp.minimum(W, n - pos).astype(jnp.int32)
     q_ids = jnp.minimum(pos + jnp.arange(W, dtype=jnp.int32), n - 1)
     q = x[q_ids]
-    res = search_lib.search(g, x, q, key, cfg.search_config())
+    scfg = cfg.search_config()
+    if coarse is None and scfg.seed_mode == "coarse":
+        scfg = dataclasses.replace(scfg, seed_mode="random")
+    res = search_lib.search(g, x, q, key, scfg, coarse=coarse)
     res = res._replace(
         n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
     )
@@ -306,7 +324,14 @@ def wave_core(
         n_waves=stats.n_waves + 1,
         n_inserted_edges=stats.n_inserted_edges.add(edges),
     )
-    return g2, stats2
+    if coarse is None:
+        return g2, stats2
+    from repro.core import hierarchy  # late: hierarchy imports construct
+
+    lanes = jnp.arange(W, dtype=jnp.int32)
+    rows = jnp.where(lanes < n_real, pos + lanes, -1)
+    coarse2 = hierarchy.note_inserted(coarse, rows, res.seed_cell)
+    return g2, stats2, coarse2
 
 
 # The production wave step: one compiled call per wave with the graph and the
@@ -325,7 +350,9 @@ def build(
     wave_callback: Optional[Callable[[int, KNNGraph], None]] = None,
     callback_stride: int = 1,
     initial: Optional[tuple[KNNGraph, int]] = None,
-) -> tuple[KNNGraph, BuildStats]:
+    coarse=None,
+    return_coarse: bool = False,
+):
     """Build the k-NN graph over x with OLG (cfg.lgd=False) or LGD (True).
 
     The loop is host-round-trip free: each iteration is one fused jitted
@@ -347,8 +374,15 @@ def build(
         (``jax.device_get`` / ``jnp.copy``) before retaining it.
       callback_stride: waves between callback invocations (>= 1).
       initial: optional (graph, next_row) to resume from a checkpoint.
+      coarse: optional ``core.hierarchy.CoarseLevel``.  With
+        ``cfg.seed_mode == "coarse"`` and no level given, a fresh one is
+        bootstrapped before the wave loop: over the full x (comps charged to
+        the scanning rate) for a from-scratch build, or derived from the
+        resumed graph (maintenance, uncharged) when ``initial`` is set.
+      return_coarse: also return the (maintained) coarse level.
 
-    Returns: (graph, stats) — stats leaves are device scalars.
+    Returns: (graph, stats) — stats leaves are device scalars — plus the
+    coarse level when ``return_coarse``.
     """
     n = x.shape[0]
     if key is None:
@@ -356,12 +390,18 @@ def build(
     if callback_stride < 1:
         raise ValueError(f"callback_stride must be >= 1, got {callback_stride}")
 
+    from repro.core import hierarchy  # late: hierarchy imports construct
+
     if initial is not None:
         g, start = initial
         if compat.donation_enabled():
             # wave_step donates its graph argument; copy so the caller's
             # graph (e.g. dynamic.insert's input index) survives the build
             g = jax.tree.map(jnp.copy, g)
+        if coarse is None and cfg.seed_mode == "coarse" and int(start) > 0:
+            key, ck = jax.random.split(key)
+            coarse = hierarchy.derive_coarse(g, x, cfg, ck)
+        pre_charge = 0
     else:
         n_seed = min(cfg.n_seed_init, n)
         g = brute.exact_seed_graph(
@@ -369,21 +409,34 @@ def build(
             use_pallas=cfg.use_pallas,
         )
         start = n_seed
-    # seed-graph comparisons count toward the scanning rate
-    n_seed0 = int(start)
-    stats = zero_stats(n_seed0 * (n_seed0 - 1) // 2 if initial is None else 0)
+        # seed-graph comparisons count toward the scanning rate
+        pre_charge = n_seed * (n_seed - 1) // 2
+        if coarse is None and cfg.seed_mode == "coarse":
+            key, ck = jax.random.split(key)
+            coarse, coarse_comps = hierarchy.build_coarse(
+                x, cfg, ck, assign_rows=jnp.arange(n_seed, dtype=jnp.int32)
+            )
+            pre_charge += coarse_comps
+    stats = zero_stats(pre_charge)
     W = cfg.wave
 
     pos = int(start)
     n_waves = 0
     while pos < n:
         key, sk = jax.random.split(key)
-        g, stats = wave_step(g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg)
+        if coarse is None:
+            g, stats = wave_step(g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg)
+        else:
+            g, stats, coarse = wave_step(
+                g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg, coarse=coarse
+            )
         pos += min(W, n - pos)
         n_waves += 1
         if wave_callback is not None and n_waves % callback_stride == 0:
             wave_callback(n_waves, g)
 
+    if return_coarse:
+        return g, stats, coarse
     return g, stats
 
 
@@ -470,14 +523,19 @@ def build_parallel(
 
         def _one(s: int):
             lo, hi = int(bounds[s]), int(bounds[s + 1])
-            return build(x[lo:hi], cfg, jax.random.fold_in(key, s))
+            return build(
+                x[lo:hi], cfg, jax.random.fold_in(key, s), return_coarse=True
+            )
 
         with concurrent.futures.ThreadPoolExecutor(max_workers=shards) as ex:
             results = list(ex.map(_one, range(shards)))
-        graphs = [g for g, _ in results]
-        sub_comps = sum(int(st.n_comps) for _, st in results)
-        sub_waves = sum(int(st.n_waves) for _, st in results)
-        sub_edges = sum(int(st.n_inserted_edges) for _, st in results)
+        graphs = [g for g, _, _ in results]
+        # leaf coarse levels (shard-LOCAL ids) seed the level-0 merge
+        # cross-searches; None everywhere under random seeding
+        coarses = [c for _, _, c in results]
+        sub_comps = sum(int(st.n_comps) for _, st, _ in results)
+        sub_waves = sum(int(st.n_waves) for _, st, _ in results)
+        sub_edges = sum(int(st.n_inserted_edges) for _, st, _ in results)
 
     from repro.core import nndescent  # late: nndescent is a leaf consumer
 
@@ -485,6 +543,7 @@ def build_parallel(
     g, merge_comps = merge.merge_subgraphs(
         graphs, x, scfg, jax.random.fold_in(key, 1_000_000),
         search_chunk=search_chunk,
+        coarses=None if mesh is not None else coarses,
     )
 
     g, refine_comps = nndescent.refine(

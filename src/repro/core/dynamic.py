@@ -44,7 +44,8 @@ def insert(
     n_new: int,
     cfg: construct_lib.BuildConfig,
     key: Optional[Array] = None,
-) -> tuple[KNNGraph, construct_lib.BuildStats]:
+    coarse=None,
+):
     """Insert rows [n_valid, n_valid + n_new) of x into the graph online.
 
     ``x`` is the full (capacity, d) data array with the new samples already
@@ -53,12 +54,21 @@ def insert(
     waves run the same fused expansion step as the initial build —
     ``cfg.use_pallas`` selects the kernel/reference path exactly as in
     ``construct.build``.
+
+    Returns ``(graph, stats)``; with a ``coarse`` level passed in (or
+    ``cfg.seed_mode == "coarse"``, which derives one if missing) the return
+    is ``(graph, stats, coarse)`` — the level maintained through the waves
+    (new rows assigned to their winning cells).
     """
     start = int(g.n_valid)
     if key is None:
         key = jax.random.PRNGKey(start)
     sub = x[: start + n_new]
-    return construct_lib.build(sub, cfg, key, initial=(g, start))
+    with_coarse = coarse is not None or cfg.seed_mode == "coarse"
+    return construct_lib.build(
+        sub, cfg, key, initial=(g, start), coarse=coarse,
+        return_coarse=with_coarse,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "repair_lambda"))

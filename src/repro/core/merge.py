@@ -213,7 +213,7 @@ def stack_subgraphs(g_a, g_b, n_a: int):
     )
 
 
-def _chunked_cross_search(g, xg, queries, key, scfg, chunk: int):
+def _chunked_cross_search(g, xg, queries, key, scfg, chunk: int, coarse=None):
     """Search ``queries`` against sub-graph ``g`` in fixed-size chunks.
 
     Chunking bounds the (B, hash_slots) visited tables AND pins the jitted
@@ -226,6 +226,11 @@ def _chunked_cross_search(g, xg, queries, key, scfg, chunk: int):
     """
     from repro.core import search as search_lib  # search never imports merge
 
+    import dataclasses
+
+    if coarse is None and scfg.seed_mode == "coarse":
+        # no level for this sub-graph's id space — fall back to random seeds
+        scfg = dataclasses.replace(scfg, seed_mode="random")
     B = queries.shape[0]
     nchunks = -(-B // chunk)
     qp = jnp.pad(queries, ((0, nchunks * chunk - B), (0, 0)))
@@ -233,7 +238,7 @@ def _chunked_cross_search(g, xg, queries, key, scfg, chunk: int):
     for i in range(nchunks):
         res = search_lib.search(
             g, xg, qp[i * chunk : (i + 1) * chunk],
-            jax.random.fold_in(key, i), scfg,
+            jax.random.fold_in(key, i), scfg, coarse=coarse,
         )
         ids.append(res.ids)
         dists.append(res.dists)
@@ -249,6 +254,8 @@ def symmetric_merge(
     key: Optional[Array] = None,
     *,
     search_chunk: int = 512,
+    coarse_a=None,
+    coarse_b=None,
 ):
     """Merge two independently built sub-graphs into one graph (1908.00814).
 
@@ -272,6 +279,10 @@ def symmetric_merge(
       scfg: ``search.SearchConfig`` for the cross searches (k = graph degree).
       key: PRNG key for search entry points.
       search_chunk: cross-search batch size (bounds memory + compile count).
+      coarse_a, coarse_b: optional ``core.hierarchy.CoarseLevel`` per side,
+        in that side's LOCAL id space — the cross searches then seed
+        coarsely (``scfg.seed_mode == "coarse"``); a side without a level
+        falls back to random seeding.
 
     Returns:
       (merged KNNGraph, n_comps) — comps spent on cross candidate distances.
@@ -296,8 +307,12 @@ def symmetric_merge(
     ka, kb = jax.random.split(key)
 
     # cross-graph candidates: each side's points walk the other side's graph
-    ab_ids, ab_d, comps_a = _chunked_cross_search(g_b, xb, xa, ka, scfg, search_chunk)
-    ba_ids, ba_d, comps_b = _chunked_cross_search(g_a, xa, xb, kb, scfg, search_chunk)
+    ab_ids, ab_d, comps_a = _chunked_cross_search(
+        g_b, xb, xa, ka, scfg, search_chunk, coarse=coarse_b
+    )
+    ba_ids, ba_d, comps_b = _chunked_cross_search(
+        g_a, xa, xb, kb, scfg, search_chunk, coarse=coarse_a
+    )
 
     stacked = stack_subgraphs(g_a, g_b, n_a)
     cap = stacked.capacity
@@ -351,6 +366,7 @@ def merge_subgraphs(
     key: Optional[Array] = None,
     *,
     search_chunk: int = 512,
+    coarses=None,
 ):
     """Fold S adjacent sub-graphs into one via a balanced pairwise merge tree.
 
@@ -361,12 +377,22 @@ def merge_subgraphs(
     re-search every later shard) — and the merges within a level run on
     host threads, the same concurrency the sub-builds used.
 
+    ``coarses`` (optional, aligned with ``graphs``, entries may be None)
+    supplies each leaf's ``core.hierarchy.CoarseLevel`` for the level-0
+    cross searches; merged intermediates have no level, so deeper fold
+    levels seed randomly (log S − 1 of the log S levels for S = 2^m, and
+    none at the default S = 2 where the single fold IS level 0).
+
     Returns (merged KNNGraph over all of x, total cross-search comps).
     """
     import concurrent.futures
 
     if not graphs:
         raise ValueError("merge_subgraphs needs at least one sub-graph")
+    if coarses is not None and len(coarses) != len(graphs):
+        raise ValueError(
+            f"coarses has {len(coarses)} entries for {len(graphs)} sub-graphs"
+        )
     if sum(g.capacity for g in graphs) != x.shape[0]:
         raise ValueError(
             f"sub-graphs cover {sum(g.capacity for g in graphs)} rows, "
@@ -374,13 +400,13 @@ def merge_subgraphs(
         )
     if key is None:
         key = jax.random.PRNGKey(0)
-    # (graph, lo, hi): graph covers x[lo:hi] in slice-local ids.  Merging
-    # adjacent pairs keeps every node contiguous, so the final graph's ids
-    # are exactly the row indices of x.
+    # (graph, lo, hi, coarse): graph covers x[lo:hi] in slice-local ids.
+    # Merging adjacent pairs keeps every node contiguous, so the final
+    # graph's ids are exactly the row indices of x.
     nodes = []
     off = 0
-    for g in graphs:
-        nodes.append((g, off, off + g.capacity))
+    for s, g in enumerate(graphs):
+        nodes.append((g, off, off + g.capacity, coarses[s] if coarses else None))
         off += g.capacity
     total_comps = 0
     level = 0
@@ -391,14 +417,15 @@ def merge_subgraphs(
         carry = [nodes[-1]] if len(nodes) % 2 else []
 
         def _merge_pair(item):
-            i, ((ga, lo, mid), (gb, mid2, hi)) = item
+            i, ((ga, lo, mid, ca), (gb, mid2, hi, cb)) = item
             assert mid == mid2
             g, c = symmetric_merge(
                 ga, gb, x[lo:hi], scfg,
                 jax.random.fold_in(key, (level << 16) | i),
                 search_chunk=search_chunk,
+                coarse_a=ca, coarse_b=cb,
             )
-            return (g, lo, hi), c
+            return (g, lo, hi, None), c
 
         with concurrent.futures.ThreadPoolExecutor(
             max_workers=len(pairs)

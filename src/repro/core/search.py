@@ -66,12 +66,23 @@ class SearchConfig:
 
     The same flag also selects the seed-distance gather kernel
     (``kernels.ops.gather_distance``).
+
+    ``seed_mode`` selects the Alg. 1 line-5 entry points: ``"random"`` is the
+    paper's p uniform draws over [0, n); ``"coarse"`` first runs a short EHC
+    pass on a coarse landmark graph (``core.hierarchy.CoarseLevel``, passed
+    as the ``coarse`` operand of ``search``/``init_state``) and seeds the
+    full-graph beam from the winning landmarks' rows plus their assigned
+    member cells — the EFANNA-style hierarchical initialization that drops
+    the scanning rate from O(n) territory to polylog.
     """
 
     k: int = 10  # result size; also the improvement-termination horizon
     beam: int = 64  # beam width e >= k
     n_seeds: int = 8  # p random entry points
-    hash_slots: int = 2048  # H, power of two; ~4x expected comparisons
+    # H, power of two.  None auto-sizes from beam/max_iters (see
+    # __post_init__); explicit values are respected — the hash_full flag in
+    # SearchResult reports per-lane saturation either way.
+    hash_slots: Optional[int] = None
     hash_probes: int = 8  # linear-probe depth
     max_iters: int = 64  # straggler cap on expansions
     metric: str = "l2"
@@ -80,10 +91,32 @@ class SearchConfig:
     lgd_rev_lambda: bool = True  # look up λ of the forward twin for rev edges
     hard_diversify: bool = False  # ablation: skip any λ > 0 (DPG/FANNG style)
     use_pallas: Optional[bool] = None
+    seed_mode: str = "random"  # "random" | "coarse"
+    coarse_top: int = 4  # T winning landmarks whose cells seed the beam
+    coarse_beam: int = 16  # beam width of the coarse EHC pass
+    coarse_iters: int = 16  # max_iters of the coarse EHC pass
 
     def __post_init__(self):
         assert self.beam >= self.k, "beam must be >= k"
+        assert self.seed_mode in ("random", "coarse"), self.seed_mode
+        if self.hash_slots is None:
+            object.__setattr__(
+                self, "hash_slots", auto_hash_slots(self.beam, self.max_iters)
+            )
         assert self.hash_slots & (self.hash_slots - 1) == 0, "hash_slots must be 2^h"
+
+
+def auto_hash_slots(beam: int, max_iters: int) -> int:
+    """Default H for a (beam, max_iters) search shape: the next power of two
+    above ``beam * max_iters / 2`` (a per-row candidate width is beam-scale
+    and masking/convergence roughly halve the recorded entries), clamped to
+    [1024, 65536].  A heuristic, not a guarantee — ``SearchResult.hash_full``
+    is the ground truth for saturation."""
+    est = (beam * max_iters) // 2
+    H = 1024
+    while H < est and H < (1 << 16):
+        H <<= 1
+    return H
 
 
 class SearchResult(NamedTuple):
@@ -94,6 +127,12 @@ class SearchResult(NamedTuple):
     n_comps: Array  # (B,) int32 — distance computations (scanning rate)
     n_iters: Array  # (B,) int32 — expansions until convergence
     converged: Array  # (B,) bool — False = stopped by max_iters cap
+    hash_full: Array  # (B,) bool — True = some computed distance was NOT
+    #   recorded in the D array (insert failed: table saturated or slot
+    #   collision); n_comps may then overcount unique evaluations
+    seed_cell: Array  # (B,) int32 — winning coarse landmark (seed_mode=
+    #   "coarse"; -1 under random seeding).  Lets callers assign freshly
+    #   inserted rows to their cell without a separate brute pass.
 
 
 # The hash/beam primitives live next to the fused kernel that consumes them
@@ -121,6 +160,8 @@ class _LoopState(NamedTuple):
     n_iters: Array
     done: Array
     it: Array
+    hash_full: Array
+    seed_cell: Array
 
 
 def _candidates_from_expansion(
@@ -201,13 +242,23 @@ def _expand(
     )
 
 
+def _hash_fill(vis_ids: Array) -> Array:
+    """Occupied D-array slots per lane."""
+    return jnp.sum(vis_ids >= 0, axis=1).astype(jnp.int32)
+
+
 def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
     def step(st: _LoopState) -> _LoopState:
         cands, beam_exp = _prepare_expansion(g, st, cfg)
+        fill_before = _hash_fill(st.vis_ids)
         beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps = _expand(
             g, x, q, cands, beam_exp, st, cfg
         )
         n_comps = st.n_comps + comps
+        # every computed distance must land in the D array; a fill delta below
+        # the comparison count means an insert was dropped (probe depth
+        # exhausted on a saturated table, or a same-slot scatter collision)
+        hash_full = st.hash_full | (_hash_fill(vis_ids) - fill_before < comps)
         # -- convergence: best unexpanded cannot improve current top-k --------
         best_unexp = jnp.min(jnp.where(beam_exp, jnp.inf, beam_dist), axis=1)
         kth = beam_dist[:, cfg.k - 1]
@@ -223,9 +274,28 @@ def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
             n_iters,
             st.done | newly_done,
             st.it + 1,
+            hash_full,
+            st.seed_cell,
         )
 
     return step
+
+
+def coarse_config(cfg: SearchConfig) -> SearchConfig:
+    """The config of the short coarse-graph EHC pass implied by a
+    ``seed_mode="coarse"`` config: top-``coarse_top`` over a small beam and
+    few iterations, random seeding (so the recursion terminates), LGD
+    filtering off (the landmark graph is tiny and routing-only)."""
+    return dataclasses.replace(
+        cfg,
+        k=cfg.coarse_top,
+        beam=max(cfg.coarse_beam, cfg.coarse_top),
+        hash_slots=None,  # re-auto-size for the coarse shape
+        max_iters=cfg.coarse_iters,
+        use_lgd_mask=False,
+        hard_diversify=False,
+        seed_mode="random",
+    )
 
 
 def init_state(
@@ -234,20 +304,56 @@ def init_state(
     q: Array,
     key: Array,
     cfg: SearchConfig,
+    coarse=None,
 ) -> _LoopState:
-    """Pre-loop search state: p random seeds scored, hashed, and merged into
+    """Pre-loop search state: entry points scored, hashed, and merged into
     an otherwise-empty beam (Alg. 1 line 5).  Public so benchmarks and the
-    expansion parity suite can drive single EHC iterations directly."""
+    expansion parity suite can drive single EHC iterations directly.
+
+    ``seed_mode="random"`` draws p uniform seeds.  ``seed_mode="coarse"``
+    additionally runs a short EHC pass over ``coarse`` (a
+    ``core.hierarchy.CoarseLevel``) and seeds from the winning landmarks'
+    full-graph rows plus their assigned member cells; the coarse pass's
+    comparisons are pre-charged into ``n_comps`` so the scanning rate stays
+    honest, and its top-1 winner is carried out as ``seed_cell``."""
     B = q.shape[0]
     e, H = cfg.beam, cfg.hash_slots
 
-    # -- p random seeds (Alg. 1 line 5) --------------------------------------
-    seeds = jax.random.randint(
-        key, (B, cfg.n_seeds), 0, jnp.maximum(g.n_valid, 1), dtype=jnp.int32
-    )
+    # -- entry points (Alg. 1 line 5) ----------------------------------------
+    if cfg.seed_mode == "coarse":
+        if coarse is None:
+            raise ValueError(
+                "seed_mode='coarse' needs a coarse level (core.hierarchy."
+                "CoarseLevel) passed as the `coarse` operand"
+            )
+        key_c, key_r = jax.random.split(key)
+        cres = search(coarse.graph, coarse.points, q, key_c, coarse_config(cfg))
+        win = cres.ids  # (B, T) landmark indices, -1 padded
+        safe_win = jnp.maximum(win, 0)
+        lm_rows = jnp.where(win >= 0, coarse.landmark_rows[safe_win], -1)
+        members = jnp.where(
+            win[:, :, None] >= 0, coarse.members[safe_win], -1
+        ).reshape(B, -1)
+        rand = jax.random.randint(
+            key_r, (B, cfg.n_seeds), 0, jnp.maximum(g.n_valid, 1),
+            dtype=jnp.int32,
+        )
+        seeds = jnp.concatenate([lm_rows, members, rand], axis=1)
+        seed_cell = win[:, 0]
+        pre_comps = cres.n_comps
+        pre_full = cres.hash_full
+    else:
+        seeds = jax.random.randint(
+            key, (B, cfg.n_seeds), 0, jnp.maximum(g.n_valid, 1),
+            dtype=jnp.int32,
+        )
+        seed_cell = jnp.full((B,), -1, jnp.int32)
+        pre_comps = jnp.zeros((B,), jnp.int32)
+        pre_full = jnp.zeros((B,), bool)
     # dedupe seeds within a lane (sort-based segmented idiom)
     seeds = jnp.where(segments.mask_row_duplicates(seeds), -1, seeds)
-    seeds = jnp.where(g.alive[jnp.maximum(seeds, 0)] & (seeds >= 0), seeds, -1)
+    in_range = (seeds >= 0) & (seeds < g.n_valid)
+    seeds = jnp.where(in_range & g.alive[jnp.maximum(seeds, 0)], seeds, -1)
     seed_dist = ops.gather_distance(
         q, x, seeds, cfg.metric, sq_norms=g.sq_norms, use_pallas=cfg.use_pallas
     )
@@ -275,16 +381,19 @@ def init_state(
     beam_dist = -neg
     beam_exp = jnp.take_along_axis(cat_exp, sel, axis=1)
 
+    seed_comps = jnp.sum(seeds >= 0, axis=1).astype(jnp.int32)
     return _LoopState(
         beam_ids=beam_ids,
         beam_dist=beam_dist,
         beam_exp=beam_exp,
         vis_ids=vis_ids,
         vis_dist=vis_dist,
-        n_comps=jnp.sum(seeds >= 0, axis=1).astype(jnp.int32),
+        n_comps=pre_comps + seed_comps,
         n_iters=jnp.zeros((B,), jnp.int32),
         done=jnp.zeros((B,), bool),
         it=jnp.zeros((), jnp.int32),
+        hash_full=pre_full | (_hash_fill(vis_ids) < seed_comps),
+        seed_cell=seed_cell,
     )
 
 
@@ -295,6 +404,7 @@ def search(
     q: Array,
     key: Array,
     cfg: SearchConfig,
+    coarse=None,
 ) -> SearchResult:
     """Batched EHC search of queries q against graph g over dataset x.
 
@@ -302,12 +412,14 @@ def search(
       g: the (possibly under-construction) graph.
       x: (n, d) dataset backing the graph rows.
       q: (B, d) queries.
-      key: PRNG key for the p random entry points.
+      key: PRNG key for the entry points.
       cfg: static search configuration.
+      coarse: ``core.hierarchy.CoarseLevel`` operand, required when
+        ``cfg.seed_mode == "coarse"`` (ignored otherwise).
 
     Returns: SearchResult (top-k per lane + the comparison log).
     """
-    st = init_state(g, x, q, key, cfg)
+    st = init_state(g, x, q, key, cfg, coarse=coarse)
     step = _make_step(g, x, q, cfg)
     st = jax.lax.while_loop(
         lambda s: (~jnp.all(s.done)) & (s.it < cfg.max_iters), step, st
@@ -320,4 +432,6 @@ def search(
         n_comps=st.n_comps,
         n_iters=st.n_iters,
         converged=st.done,
+        hash_full=st.hash_full,
+        seed_cell=st.seed_cell,
     )

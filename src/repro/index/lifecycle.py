@@ -61,6 +61,7 @@ class OnlineIndex:
     graph: KNNGraph
     items: Array  # (capacity, d); rows beyond n_valid are free
     build_cfg: construct.BuildConfig
+    coarse: object = None  # hierarchy.CoarseLevel under seed_mode="coarse"
     free_ids: tuple = ()  # ledger of removed (dead) rows < n_valid
     pending: tuple = ()  # micro-batch ingest buffer: tuples of (m_i, d) arrays
     ingest_batch: int = 64  # coalesce threshold for buffered adds
@@ -142,7 +143,7 @@ class OnlineIndex:
             )
         n = items.shape[0]
         cap = capacity or n
-        g, _ = construct.build(items, cfg, key)
+        g, _, coarse = construct.build(items, cfg, key, return_coarse=True)
         if cap > n:
             g = graph_lib.grow_graph(g, cap)
             items = jnp.pad(items, ((0, cap - n), (0, 0)))
@@ -150,6 +151,7 @@ class OnlineIndex:
             graph=g,
             items=items,
             build_cfg=cfg,
+            coarse=coarse,
             ingest_batch=ingest_batch,
             auto_compact=auto_compact,
             growth_factor=growth_factor,
@@ -179,16 +181,29 @@ class OnlineIndex:
             new_items = new_items[None, :]
         if new_items.shape[0]:
             self.pending = self.pending + (new_items,)
-        if key is not None:
-            self.pending_key = key
+            # the key belongs to THIS batch: an empty add must not stash one
+            # (it would outlive this call and redirect a later, unrelated
+            # flush — the replica-determinism leak), so the stash rides the
+            # same condition as the buffer append and the invariant
+            # ``pending == () ⇒ pending_key is None`` holds everywhere
+            if key is not None:
+                self.pending_key = key
         do_flush = flush if flush is not None else self.n_pending >= self.ingest_batch
         if do_flush:
             self.flush(key=key)
         return self
 
     def flush(self, *, key: Optional[Array] = None) -> "OnlineIndex":
-        """Coalesce buffered adds into one insertion wave."""
+        """Coalesce buffered adds into one insertion wave.
+
+        Every exit clears ``pending_key``: a stale key surviving an
+        empty-buffer flush would silently redirect the next coalescing
+        flush's PRNG stream and break replica determinism (replaying the
+        same (items, key) sequence with different flush timing must build
+        the same graph).
+        """
         if not self.pending:
+            self.pending_key = None
             return self
         if key is None:
             key = self.pending_key
@@ -199,7 +214,13 @@ class OnlineIndex:
         self._ensure_room(m)
         n0 = int(self.graph.n_valid)
         items = self.items.at[n0 : n0 + m].set(batch)
-        g, _ = dynamic.insert(self.graph, items, m, self.build_cfg, key)
+        out = dynamic.insert(
+            self.graph, items, m, self.build_cfg, key, coarse=self.coarse
+        )
+        if len(out) == 3:
+            g, _, self.coarse = out
+        else:
+            g, _ = out
         self.graph, self.items = g, items
         # drained only after the wave landed: a failure above (growth OOM,
         # insert error) leaves the buffer intact for retry, not silently lost
@@ -239,6 +260,14 @@ class OnlineIndex:
             self.graph, self.items, jnp.asarray(padded, jnp.int32),
             self.metric,
         )
+        if self.coarse is not None:
+            # landmark victims are masked like any dead row; their frozen
+            # routing vectors keep steering the coarse walk
+            from repro.core import hierarchy
+
+            self.coarse = hierarchy.purge_rows(
+                self.coarse, jnp.asarray(newly_dead, jnp.int32)
+            )
         self.free_ids = self.free_ids + tuple(int(i) for i in newly_dead)
         return self
 
@@ -252,6 +281,10 @@ class OnlineIndex:
         """
         g, x, id_map = dynamic.compact(self.graph, self.items)
         self.graph, self.items = g, x
+        if self.coarse is not None:
+            from repro.core import hierarchy
+
+            self.coarse = hierarchy.remap_rows(self.coarse, id_map)
         self.free_ids = ()
         self.last_compact_map = np.asarray(id_map)
         return self.last_compact_map
@@ -276,6 +309,35 @@ class OnlineIndex:
 
     # -- search --------------------------------------------------------------
 
+    def search_config(
+        self, top_k: int, beam: Optional[int] = None
+    ) -> search_lib.SearchConfig:
+        """The serving SearchConfig: the build-time search parameters
+        (``build_cfg.search_config()`` — n_seeds, hash_slots, max_iters,
+        seed_mode, …) with only the per-request k/beam overridden.  Serving
+        with anything else would silently diverge from the configuration the
+        index was built and validated with (the old from-scratch
+        ``SearchConfig(...)`` here dropped every non-default build field)."""
+        return dataclasses.replace(
+            self.build_cfg.search_config(),
+            k=top_k,
+            beam=max(beam or 2 * top_k, top_k),
+        )
+
+    def _ensure_coarse(self):
+        """Lazily (re-)derive the coarse level when serving wants coarse
+        seeding but none is attached (pre-v2 snapshot, hand-built index, or
+        ``seed_mode`` flipped on after the build)."""
+        if self.coarse is None and self.build_cfg.seed_mode == "coarse":
+            if int(self.graph.n_valid) - len(self.free_ids) > 0:
+                from repro.core import hierarchy
+
+                self.coarse = hierarchy.derive_coarse(
+                    self.graph, self.items, self.build_cfg,
+                    jax.random.PRNGKey(int(self.graph.n_valid)),
+                )
+        return self.coarse
+
     def search(
         self,
         queries: Array,
@@ -292,33 +354,44 @@ class OnlineIndex:
         self.flush()
         if key is None:
             key = jax.random.PRNGKey(0)
-        scfg = search_lib.SearchConfig(
-            k=top_k,
-            beam=max(beam or 2 * top_k, top_k),
-            metric=self.metric,
-            use_lgd_mask=self.build_cfg.lgd,
-            use_pallas=self.build_cfg.use_pallas,
+        scfg = self.search_config(top_k, beam)
+        coarse = None
+        if scfg.seed_mode == "coarse":
+            coarse = self._ensure_coarse()
+            if coarse is None:  # nothing alive to derive from
+                scfg = dataclasses.replace(scfg, seed_mode="random")
+        return search_lib.search(
+            self.graph, self.items, queries, key, scfg, coarse=coarse
         )
-        return search_lib.search(self.graph, self.items, queries, key, scfg)
 
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> str:
-        """Snapshot graph + data + config (flushes buffered adds first)."""
+        """Snapshot graph + data + config + coarse level (flushes buffered
+        adds first)."""
         self.flush()
         return snapshot_lib.save(
             path,
             self.graph,
             self.items,
             self.build_cfg,
+            coarse=self.coarse,
             extra_meta={"free_ids": [int(i) for i in self.free_ids]},
         )
 
     @classmethod
     def load(cls, path: str, **lifecycle_kw) -> "OnlineIndex":
-        """Restore an index a snapshot-for-snapshot replica of the saved one."""
-        g, items, cfg, manifest = snapshot_lib.load(path)
+        """Restore an index a snapshot-for-snapshot replica of the saved one.
+
+        Pre-v2 snapshots carry no coarse payload; under
+        ``seed_mode="coarse"`` the level is re-derived here (offline
+        maintenance) so the replica serves coarsely from the first query."""
+        g, items, cfg, manifest, coarse = snapshot_lib.load(path, with_coarse=True)
         free = tuple(manifest.get("extra", {}).get("free_ids", []))
-        return cls(
-            graph=g, items=items, build_cfg=cfg, free_ids=free, **lifecycle_kw
+        idx = cls(
+            graph=g, items=items, build_cfg=cfg, coarse=coarse, free_ids=free,
+            **lifecycle_kw,
         )
+        if coarse is None and cfg.seed_mode == "coarse":
+            idx._ensure_coarse()
+        return idx

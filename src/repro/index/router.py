@@ -209,7 +209,7 @@ class ShardedIndex:
         if self.n_shards == 1:
             return self
 
-        graphs, parts, tables = [], [], []
+        graphs, parts, tables, coarses = [], [], [], []
         for s, shard in enumerate(self.shards):
             nv = int(shard.graph.n_valid)
             if nv == 0:
@@ -217,6 +217,10 @@ class ShardedIndex:
             graphs.append(graph_lib.trim_graph(shard.graph, nv))
             parts.append(shard.items[:nv])
             tables.append(self.gids[s][:nv])
+            # shard coarse levels live in shard-local rows — exactly the id
+            # space the level-0 merge cross-searches run in (post-compact,
+            # rows are dense in [0, nv))
+            coarses.append(shard.coarse)
         base = self.shards[0]
         if not graphs:  # an all-empty router collapses to empty shard 0
             self.shards = [base]
@@ -225,11 +229,14 @@ class ShardedIndex:
 
         x = jnp.concatenate(parts)
         scfg = base.build_cfg.search_config()
-        g, _ = merge_lib.merge_subgraphs(graphs, x, scfg, key)
+        g, _ = merge_lib.merge_subgraphs(graphs, x, scfg, key, coarses=coarses)
         g, _ = nndescent.refine(
             g, x, base.metric, rounds=refine_rounds,
             use_pallas=base.build_cfg.use_pallas,
         )
+        # no merged coarse level: the shard levels live in shard-local id
+        # spaces; under seed_mode="coarse" the merged index re-derives one
+        # lazily on first search (OnlineIndex._ensure_coarse)
         merged = OnlineIndex(
             graph=g,
             items=x,

@@ -32,6 +32,18 @@ and dtype drift:
 ``BuildConfig`` round-trips as a plain dict filtered against the dataclass's
 current fields: configs written before a field existed pick up its default,
 fields that were deleted are dropped.
+
+Format history:
+  * v1 — graph + items + config.
+  * v2 — optional coarse entry-point level (``core.hierarchy.CoarseLevel``):
+    ``coarse_*`` payload arrays carrying the landmark rows, frozen routing
+    points, member rings, and the coarse graph's FORWARD lists only — its
+    reverse side and norm cache are re-derived on load through the same
+    canonical repair paths as the main graph's.  v1 snapshots (no
+    ``coarse_*`` keys) load fine with ``coarse=None``; the lifecycle layer
+    re-derives a level when serving wants one.  Bump policy (ROADMAP): add
+    arrays/keys without a bump when absence has a sound default; bump when
+    the READER must behave differently to restore correctly.
 """
 
 from __future__ import annotations
@@ -52,7 +64,7 @@ from repro.core.graph import KNNGraph
 
 Array = jax.Array
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
 
 MANIFEST_NAME = "manifest.json"
 PAYLOAD_NAME = "payload.npz"
@@ -69,6 +81,14 @@ _CANONICAL = {
     "rev_ptr": np.int32,
     "alive": np.bool_,
     "items": np.float32,
+    # v2: coarse entry-point level (core.hierarchy.CoarseLevel)
+    "coarse_landmark_rows": np.int32,
+    "coarse_points": np.float32,
+    "coarse_members": np.int32,
+    "coarse_mem_ptr": np.int32,
+    "coarse_nbr_ids": np.int32,
+    "coarse_nbr_dist": np.float32,
+    "coarse_nbr_lam": np.int32,
 }
 
 
@@ -90,6 +110,7 @@ def save(
     items: Array,
     cfg: construct.BuildConfig,
     *,
+    coarse=None,
     extra_meta: Optional[dict] = None,
 ) -> str:
     """Write a versioned snapshot of (graph, data, config) under ``path``.
@@ -97,8 +118,11 @@ def save(
     ``items`` is the (capacity, d) data region backing the graph rows.  Data
     stored in a non-float32 dtype (e.g. ``data_bf16`` builds) is persisted as
     float32 — lossless for bf16 — with the original dtype recorded in the
-    manifest and restored on load.  The write is crash-atomic (staged then
-    swapped in), and overwriting an existing snapshot is safe.
+    manifest and restored on load.  ``coarse`` (optional
+    ``core.hierarchy.CoarseLevel``) persists as ``coarse_*`` arrays —
+    forward coarse graph only; reverse/norms re-derive on load.  The write
+    is crash-atomic (staged then swapped in), and overwriting an existing
+    snapshot is safe.
     """
     arrays = {
         "nbr_ids": np.asarray(g.nbr_ids),
@@ -110,6 +134,16 @@ def save(
         "alive": np.asarray(g.alive),
         "items": np.asarray(items.astype(jnp.float32)),
     }
+    if coarse is not None:
+        arrays.update(
+            coarse_landmark_rows=np.asarray(coarse.landmark_rows),
+            coarse_points=np.asarray(coarse.points.astype(jnp.float32)),
+            coarse_members=np.asarray(coarse.members),
+            coarse_mem_ptr=np.asarray(coarse.mem_ptr),
+            coarse_nbr_ids=np.asarray(coarse.graph.nbr_ids),
+            coarse_nbr_dist=np.asarray(coarse.graph.nbr_dist),
+            coarse_nbr_lam=np.asarray(coarse.graph.nbr_lam),
+        )
     arrays = {k: v.astype(_CANONICAL[k]) for k, v in arrays.items()}
     manifest = {
         "format_version": FORMAT_VERSION,
@@ -168,9 +202,14 @@ def _reverse_ok(g: KNNGraph) -> bool:
 
 
 def load(
-    path: str, *, validate_reverse: bool = True
-) -> tuple[KNNGraph, Array, construct.BuildConfig, dict]:
+    path: str, *, validate_reverse: bool = True, with_coarse: bool = False
+):
     """Restore (graph, items, config, manifest) from a snapshot directory.
+
+    With ``with_coarse`` the return gains a fifth element: the restored
+    ``core.hierarchy.CoarseLevel``, or None when the snapshot predates v2
+    (or was saved without one) — callers wanting coarse seeding then
+    re-derive via ``hierarchy.derive_coarse``.
 
     Raises ``ValueError`` for snapshots written by a NEWER format than this
     reader understands; older formats load with repairs (see module doc).
@@ -251,4 +290,36 @@ def load(
         g = graph_lib.rebuild_reverse(g)
 
     cfg = _config_from_dict(manifest.get("build_config", {}))
-    return g, items, cfg, manifest
+    if not with_coarse:
+        return g, items, cfg, manifest
+
+    coarse = None
+    if "coarse_landmark_rows" in raw:
+        from repro.core import hierarchy
+
+        points = jnp.asarray(arr("coarse_points"))
+        c_ids = arr("coarse_nbr_ids")
+        L, kc = c_ids.shape
+        gc = KNNGraph(
+            nbr_ids=jnp.asarray(c_ids),
+            nbr_dist=jnp.asarray(arr("coarse_nbr_dist")),
+            nbr_lam=jnp.asarray(arr("coarse_nbr_lam")),
+            rev_ids=jnp.full((L, 2 * kc), -1, jnp.int32),
+            rev_lam=jnp.zeros((L, 2 * kc), jnp.int32),
+            rev_ptr=jnp.zeros((L,), jnp.int32),
+            alive=jnp.ones((L,), bool),
+            n_valid=jnp.asarray(L, jnp.int32),
+            sq_norms=jnp.zeros((L,), jnp.float32),
+        )
+        # same restore policy as the main graph: forward lists are the
+        # payload, reverse side + norm cache re-derive canonically
+        gc = graph_lib.attach_sq_norms(gc, points)
+        gc = graph_lib.rebuild_reverse(gc)
+        coarse = hierarchy.CoarseLevel(
+            landmark_rows=jnp.asarray(arr("coarse_landmark_rows")),
+            points=points,
+            graph=gc,
+            members=jnp.asarray(arr("coarse_members")),
+            mem_ptr=jnp.asarray(arr("coarse_mem_ptr")),
+        )
+    return g, items, cfg, manifest, coarse

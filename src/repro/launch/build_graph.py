@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--metric", default="l2")
     ap.add_argument("--kind", default="clustered", choices=list(synthetic.GENERATORS))
     ap.add_argument("--algo", default="lgd", choices=["lgd", "olg"])
+    ap.add_argument("--seed-mode", default="random", choices=["random", "coarse"],
+                    help="entry-point seeding for the insertion searches: "
+                         "'coarse' routes through a landmark level "
+                         "(core.hierarchy) — polylog scanning rate at scale")
+    ap.add_argument("--coarse-landmarks", type=int, default=None, metavar="L",
+                    help="landmark count for --seed-mode coarse (default ~4·√n)")
     ap.add_argument("--wave", type=int, default=512)
     ap.add_argument("--parallel-shards", type=int, default=1, metavar="S",
                     help="divide-and-conquer build: S concurrent sub-graphs "
@@ -52,6 +58,7 @@ def main():
     cfg = construct.BuildConfig(
         k=args.k, metric=args.metric, wave=args.wave,
         lgd=(args.algo == "lgd"), beam=max(40, args.k), use_pallas=False,
+        seed_mode=args.seed_mode, coarse_landmarks=args.coarse_landmarks,
     )
 
     initial = None

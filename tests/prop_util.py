@@ -257,6 +257,77 @@ def check_append_reverse_ring(seed: int, R: int, t: int) -> None:
         assert got == expect, f"member {m}: ring holds {got}, want {expect}"
 
 
+def check_search_comps_accounting(seed: int, n: int, k: int, B: int) -> None:
+    """The scanning-rate ledger oracle (Eq. 2 numerator, per lane).
+
+    EHC charges ``n_comps`` once per distance evaluation, and every evaluated
+    vertex is recorded in the D array (vis_ids/vis_dist).  So whenever a lane
+    did NOT saturate its hash (``hash_full`` False):
+
+      * the recorded ids are unique — nothing was evaluated twice;
+      * every recorded distance equals the exact NumPy distance;
+      * ``n_comps`` == the number of recorded (= unique evaluated) vertices.
+
+    A saturated lane may overcount (inserts dropped, later re-evaluations
+    possible) — exactly what the flag is for — so there the ledger is only
+    bounded below by the recorded count.  The seed-graph pre-charge
+    (``construct.zero_stats``) is checked exactly: a build that is all seed
+    graph scans n(n-1)/2 pairs, no more, no less.
+    """
+    import jax
+
+    from repro.core import construct
+    from repro.core import search as search_lib
+
+    g, x = make_graph(seed, n, k)
+    rng = np.random.RandomState(seed ^ 0xACC7)
+    q = rng.rand(B, x.shape[1]).astype(np.float32)
+    kk = min(k, 8)
+    cfg = search_lib.SearchConfig(
+        k=kk, beam=max(16, kk), n_seeds=4, metric="l2", max_iters=24,
+        use_pallas=False,
+    )
+    res = search_lib.search(
+        g, jnp.asarray(x), jnp.asarray(q), jax.random.PRNGKey(seed), cfg
+    )
+    vis_ids = np.asarray(res.vis_ids)
+    vis_dist = np.asarray(res.vis_dist)
+    n_comps = np.asarray(res.n_comps)
+    full = np.asarray(res.hash_full)
+    d2 = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1).astype(np.float32)
+    for b in range(B):
+        rec = vis_ids[b] >= 0
+        ids_b = vis_ids[b][rec]
+        assert len(set(ids_b.tolist())) == len(ids_b), (
+            f"lane {b}: duplicate ids in the D array"
+        )
+        assert np.all(ids_b < n), f"lane {b}: out-of-range id recorded"
+        # the blocked engine computes ||q||^2 + ||x||^2 - 2 q.x in f32; allow
+        # the decomposition's last-ulp drift vs the direct NumPy difference
+        np.testing.assert_allclose(
+            vis_dist[b][rec], d2[b, ids_b], rtol=1e-4, atol=1e-5,
+            err_msg=f"lane {b}: D array distance != exact distance",
+        )
+        if not full[b]:
+            assert int(n_comps[b]) == int(rec.sum()), (
+                f"lane {b}: n_comps {int(n_comps[b])} != unique evaluations "
+                f"{int(rec.sum())} with hash not saturated"
+            )
+        else:  # saturated lanes may only overcount, never undercount
+            assert int(n_comps[b]) >= int(rec.sum())
+    # seed-graph pre-charge: zero_stats carries it verbatim, and a build that
+    # is ALL seed graph (n <= n_seed_init) charges exactly n(n-1)/2
+    assert int(construct.zero_stats(123.0).n_comps) == 123
+    n0 = min(n, 24)
+    bcfg = construct.BuildConfig(k=kk, metric="l2", wave=16, use_pallas=False)
+    _, st = construct.build(
+        jnp.asarray(x[:n0]), bcfg, jax.random.PRNGKey(0)
+    )
+    assert int(st.n_comps) == n0 * (n0 - 1) // 2, (
+        "seed-graph pre-charge must equal the exhaustive pair count"
+    )
+
+
 def check_topk_smallest_matches_numpy(seed: int, m: int, c: int, k: int) -> None:
     """ref.topk_smallest == NumPy partial sort, ids consistent with dists."""
     from repro.kernels import ref

@@ -1,0 +1,92 @@
+"""Visited-hash (D array) saturation accounting.
+
+Pins the PR-6 bugfix: a saturated per-lane hash used to fail SILENTLY — the
+search kept charging n_comps for evaluations it could no longer record (and
+could re-evaluate), so the scanning-rate ledger drifted with no signal.  Now:
+
+  * ``SearchConfig.hash_slots=None`` auto-sizes H from (beam, max_iters) —
+    and the formula deliberately lands on the historical H=2048 for both
+    long-standing default shapes, so nothing recompiles or slows down;
+  * ``SearchResult.hash_full`` is the per-lane ground truth: True iff some
+    computed distance was NOT recorded (saturation or slot collision).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import construct
+from repro.core import search as search_lib
+from repro.core.search import SearchConfig, auto_hash_slots
+
+N, D = 400, 8
+
+
+@pytest.fixture(scope="module")
+def graph_and_data():
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.rand(N, D).astype(np.float32))
+    cfg = construct.BuildConfig(
+        k=8, metric="l2", wave=128, lgd=True, beam=24, n_seeds=4,
+        hash_slots=512, max_iters=32,
+    )
+    g, _ = construct.build(x, cfg, jax.random.PRNGKey(0))
+    return g, x
+
+
+class TestAutoSize:
+    def test_formula_and_clamps(self):
+        assert auto_hash_slots(64, 64) == 2048  # old SearchConfig default
+        assert auto_hash_slots(40, 60) == 2048  # old BuildConfig default
+        assert auto_hash_slots(8, 8) == 1024  # floor clamp
+        assert auto_hash_slots(1024, 1024) == 1 << 16  # ceiling clamp
+
+    def test_none_resolves_explicit_respected(self):
+        assert SearchConfig(k=8, beam=16).hash_slots == auto_hash_slots(16, 64)
+        assert SearchConfig(k=8, beam=16, hash_slots=256).hash_slots == 256
+        big = SearchConfig(k=8, beam=256, max_iters=512)
+        assert big.hash_slots == auto_hash_slots(256, 512) == 1 << 16
+
+    def test_non_pow2_rejected(self):
+        with pytest.raises(AssertionError, match="2\\^h"):
+            SearchConfig(k=8, beam=16, hash_slots=300)
+
+    def test_bogus_seed_mode_rejected(self):
+        with pytest.raises(AssertionError):
+            SearchConfig(seed_mode="hierarchical")
+
+
+class TestHashFull:
+    def test_small_hash_saturates_and_flags(self, graph_and_data):
+        """An undersized D array must raise the flag, not lie: with H far
+        below the evaluation count every lane saturates; with generous H no
+        lane does and n_comps equals the recorded uniques exactly."""
+        g, x = graph_and_data
+        q = jnp.asarray(np.random.RandomState(5).rand(8, D).astype(np.float32))
+        starve = SearchConfig(
+            k=8, beam=32, n_seeds=8, hash_slots=32, max_iters=32,
+            metric="l2", use_pallas=False,
+        )
+        res = search_lib.search(g, x, q, jax.random.PRNGKey(1), starve)
+        assert bool(jnp.all(res.hash_full)), (
+            "32-slot hash with 32x32 search shape must saturate every lane"
+        )
+        roomy = SearchConfig(
+            k=8, beam=32, n_seeds=8, hash_slots=4096, max_iters=32,
+            metric="l2", use_pallas=False,
+        )
+        res2 = search_lib.search(g, x, q, jax.random.PRNGKey(1), roomy)
+        assert not bool(jnp.any(res2.hash_full))
+        fill = np.asarray((res2.vis_ids >= 0).sum(axis=1))
+        np.testing.assert_array_equal(np.asarray(res2.n_comps), fill)
+
+    def test_flag_off_on_default_shapes(self, graph_and_data):
+        """The auto-sized default must not saturate on an ordinary search —
+        the flag exists for genuine starvation, not routine traffic."""
+        g, x = graph_and_data
+        q = jnp.asarray(np.random.RandomState(6).rand(4, D).astype(np.float32))
+        cfg = SearchConfig(k=8, beam=24, n_seeds=4, metric="l2",
+                           use_pallas=False)
+        res = search_lib.search(g, x, q, jax.random.PRNGKey(2), cfg)
+        assert not bool(jnp.any(res.hash_full))

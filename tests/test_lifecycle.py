@@ -311,6 +311,89 @@ class TestIngestBuffer:
         assert set(np.asarray(ids).tolist()) & set(range(N, N + 4))
 
 
+class TestPendingKeyDeterminism:
+    """Regression (the pending_key leak): a PRNG key stashed by a buffered
+    add must die with its batch.  Pre-fix, an EMPTY keyed add stashed its key
+    anyway and flush()'s empty-buffer early return preserved it — so a later,
+    unrelated coalescing flush picked up the stale key and two replicas fed
+    the identical (items, key) sequence diverged on flush timing."""
+
+    def test_empty_keyed_add_stashes_nothing(self, data):
+        idx = OnlineIndex.build(
+            data, _cfg(), key=jax.random.PRNGKey(1), capacity=N + 64,
+            ingest_batch=64,
+        )
+        idx.add(jnp.zeros((0, D), jnp.float32), key=jax.random.PRNGKey(5))
+        assert idx.pending == () and idx.pending_key is None
+        # an empty-buffer flush clears any stale key too
+        idx.pending_key = jax.random.PRNGKey(6)
+        idx.flush()
+        assert idx.pending_key is None
+
+    def test_replicas_agree_across_flush_timing(self, data):
+        """Replica A sees an extra empty keyed add (a no-op write, e.g. a
+        drained upstream batch) before the real one; replica B only the real
+        one.  The graphs must come out identical — pre-fix, A's flush ran
+        under the leaked key and the insertion searches diverged."""
+        batch = jnp.asarray(
+            np.random.RandomState(29).rand(32, D).astype(np.float32)
+        )
+        a = OnlineIndex.build(
+            data, _cfg(), key=jax.random.PRNGKey(1), capacity=N + 64,
+            ingest_batch=16,
+        )
+        b = OnlineIndex.build(
+            data, _cfg(), key=jax.random.PRNGKey(1), capacity=N + 64,
+            ingest_batch=16,
+        )
+        a.add(jnp.zeros((0, D), jnp.float32), key=jax.random.PRNGKey(5))
+        a.add(batch)  # trips the threshold; flush must run unkeyed
+        b.add(batch)
+        assert a.pending == () and b.pending == ()
+        eq = _graph_fields_equal(a.graph, b.graph)
+        assert all(eq.values()), (
+            f"replicas diverged on {[f for f, ok in eq.items() if not ok]}"
+        )
+
+
+class TestServingConfigCarry:
+    """Regression (serving-config determinism): OnlineIndex.search used to
+    rebuild a SearchConfig from scratch, dropping every non-default
+    build-time search parameter (hash_slots, n_seeds, max_iters, ...) — a
+    saved replica served with different parameters than the index was built
+    and validated with."""
+
+    def test_search_config_carries_build_params(self, data, queries, tmp_path):
+        cfg = _cfg(hash_slots=512, n_seeds=3, max_iters=7)
+        idx = OnlineIndex.build(data, cfg, key=jax.random.PRNGKey(1))
+        idx2 = OnlineIndex.load(idx.save(str(tmp_path / "snap")))
+        for i in (idx, idx2):
+            scfg = i.search_config(5)
+            assert scfg.hash_slots == 512
+            assert scfg.n_seeds == 3
+            assert scfg.max_iters == 7
+            assert scfg.use_lgd_mask == cfg.lgd
+            assert scfg.k == 5 and scfg.beam == 10
+            # the D array a real search allocates is the configured one —
+            # the shape is the observable the old path silently changed
+            res = i.search(queries[:4], 5, key=jax.random.PRNGKey(7))
+            assert res.vis_ids.shape[1] == 512
+
+    def test_save_load_search_identity(self, data, queries, tmp_path):
+        """Same request, same key, before vs after the snapshot round trip:
+        identical results — i.e. the replica serves under the same config."""
+        cfg = _cfg(hash_slots=256, n_seeds=5, max_iters=9)
+        idx = OnlineIndex.build(data, cfg, key=jax.random.PRNGKey(1))
+        idx2 = OnlineIndex.load(idx.save(str(tmp_path / "snap")))
+        assert idx2.search_config(7, beam=32) == idx.search_config(7, beam=32)
+        r0 = idx.search(queries[:8], 7, key=jax.random.PRNGKey(3))
+        r1 = idx2.search(queries[:8], 7, key=jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+        np.testing.assert_array_equal(
+            np.asarray(r0.dists), np.asarray(r1.dists)
+        )
+
+
 class TestShardedRouter:
     @pytest.fixture(scope="class")
     def sharded(self, data):

@@ -72,6 +72,15 @@ def test_append_reverse_ring(seed, R, t):
     prop_util.check_append_reverse_ring(seed, R, t)
 
 
+@given(seeds, st.integers(16, 24), st.integers(3, 6), st.integers(1, 4))
+@settings(max_examples=10)  # each distinct shape compiles a search; keep the
+# schedule small — the oracle itself sweeps every lane of every example
+def test_search_comps_accounting(seed, n, k, B):
+    """n_comps == unique distance evaluations per lane (D-array oracle),
+    incl. the seed-graph pre-charge in construct.zero_stats."""
+    prop_util.check_search_comps_accounting(seed, n, k, B)
+
+
 @given(seeds, st.integers(1, 6), st.integers(1, 20), st.integers(1, 8))
 def test_topk_smallest_matches_numpy(seed, m, c, k):
     prop_util.check_topk_smallest_matches_numpy(seed, m, c, k)
