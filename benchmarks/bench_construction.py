@@ -43,7 +43,7 @@ def timed_build(x, cfg, seed: int, callback_stride: int = 0):
     n_seed = min(cfg.n_seed_init, n)
     g0 = brute.exact_seed_graph(
         x, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap,
-        use_pallas=cfg.use_pallas,
+        dispatch=cfg.dispatch,
     )
     jax.block_until_ready(
         construct.wave_step(
@@ -68,7 +68,7 @@ def quality_gate(n: int = 2000, d: int = 20, seed: int = 0) -> dict:
     true_ids = common.ground_truth(x, x, 11, "l2")[:, 1:]  # drop self
     cfg = construct.BuildConfig(
         k=20, metric="l2", wave=256, beam=40, n_seeds=8, lgd=True,
-        use_pallas=False,
+        dispatch="reference",
     )
     g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
     return {
@@ -96,7 +96,7 @@ def merge_build_gate(
     true_ids = common.ground_truth(x, x, 11, "l2")[:, 1:]  # drop self
     cfg = construct.BuildConfig(
         k=20, metric="l2", wave=256, beam=40, n_seeds=8, lgd=True,
-        use_pallas=False,
+        dispatch="reference",
     )
 
     def seq():
@@ -144,7 +144,7 @@ def run(n: int = 10_000, dims=DIMS, metrics=("l2", "l1"), k: int = 10, seed: int
             kk = min(max(d, 10), 50)  # paper: k close to dim, <= 50
             bcfg = construct.BuildConfig(
                 k=kk, metric=metric, wave=256, beam=max(kk, 20),
-                n_seeds=8, use_pallas=False,
+                n_seeds=8, dispatch="reference",
             )
             for name, lgd in (("OLG", False), ("LGD", True)):
                 cfg = construct.BuildConfig(**{**bcfg.__dict__, "lgd": lgd})

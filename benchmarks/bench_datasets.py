@@ -34,7 +34,7 @@ def run(n: int = 10_000, k: int = 20, seed: int = 0, datasets=DATASETS):
         for algo, lgd in (("OLG", False), ("LGD", True)):
             cfg = construct.BuildConfig(
                 k=k, metric=metric, wave=256, lgd=lgd, beam=max(k, 40),
-                n_seeds=8, use_pallas=False,
+                n_seeds=8, dispatch="reference",
             )
             g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
             tbl.add(

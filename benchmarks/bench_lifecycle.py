@@ -55,7 +55,7 @@ def churn_bench(
     q = common.dataset("uniform", n_q, d, seed + 1)
     cfg = construct.BuildConfig(
         k=k, metric="l2", wave=256, lgd=True, beam=40, n_seeds=8,
-        use_pallas=False,
+        dispatch="reference",
     )
     t0 = time.perf_counter()
     idx = OnlineIndex.build(base, cfg, key=jax.random.PRNGKey(seed))

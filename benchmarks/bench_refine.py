@@ -18,7 +18,7 @@ def run(n: int = 10_000, d: int = 32, k: int = 20, seed: int = 0, rounds: int = 
     x = common.dataset("uniform", n, d, seed)
     true_ids = common.ground_truth(x, x, k + 1, "l2")[:, 1:]
     cfg = construct.BuildConfig(
-        k=k, metric="l2", wave=256, lgd=True, beam=max(k, 40), use_pallas=False
+        k=k, metric="l2", wave=256, lgd=True, beam=max(k, 40), dispatch="reference"
     )
     g, stats = construct.build(x, cfg, jax.random.PRNGKey(seed))
     c0 = construct.scanning_rate(stats, n)

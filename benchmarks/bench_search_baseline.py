@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from benchmarks import common
 from repro.core import brute, nndescent
 from repro.core import search as search_lib
-from repro.core.graph import KNNGraph, rebuild_reverse, squared_norms
+from repro.core.graph import KNNGraph, rebuild_reverse, row_scales, squared_norms
 
 
 def true_graph(x, k: int, metric: str) -> KNNGraph:
@@ -35,6 +35,7 @@ def true_graph(x, k: int, metric: str) -> KNNGraph:
         alive=jnp.ones((n,), bool),
         n_valid=jnp.asarray(n, jnp.int32),
         sq_norms=sq,
+        row_scale=row_scales(x),
     )
     return rebuild_reverse(g)
 
@@ -58,7 +59,7 @@ def run(n: int = 10_000, d: int = 32, n_q: int = 200, k: int = 20, metric: str =
                 # knob the paper sweeps (recall measured at top-1)
                 scfg = search_lib.SearchConfig(
                     k=beam, beam=beam, n_seeds=8, metric=metric,
-                    use_reverse=use_rev, use_pallas=False,
+                    use_reverse=use_rev, dispatch="reference",
                 )
                 fn = lambda: search_lib.search(g, x, q, jax.random.PRNGKey(7), scfg)
                 t = common.timeit(fn, iters=2)

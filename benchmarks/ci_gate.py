@@ -35,6 +35,15 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
     ungated.  The record is opt-in (``benchmarks.run --hier``; minutes at
     canonical n) — an ABSENT record skips both checks, a present one is
     always gated.
+  * ``int8_gather_speedup_min`` + ``rerank_recall_delta_max`` — the
+    compressed distance engine (bench_search.run_precision, opt-in via
+    ``benchmarks.run --precision``, same absent-record rule as --hier):
+    the int8 candidate table must keep its memory-bandwidth edge over the
+    fp32 table at the memory-bound B=256/d=256/C=512 shape (floor), AND the
+    PQ rank-then-rerank search may lose at most ``rerank_recall_delta_max``
+    recall@10 vs the fp32 search on the same graph (CEILING — the exact
+    re-rank is what makes the cheap ADC first pass admissible).  The bf16
+    record rides along ungated.
 
 Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
 BENCH_ci.json artifact is uploaded either way so regressions come with data.
@@ -96,7 +105,26 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
              float(baseline["scanning_rate_max"]),
              hscan <= float(baseline["scanning_rate_max"]))
         )
+    if "precision_gate" in bench:  # opt-in record (benchmarks.run
+        # --precision); absent record skips, present record always gates
+        pspd = float(bench["precision_gate"]["gather"]["speedup"])
+        results.append(
+            ("int8_gather_speedup", pspd,
+             float(baseline["int8_gather_speedup_min"]),
+             pspd >= float(baseline["int8_gather_speedup_min"]))
+        )
+        pdelta = float(bench["precision_gate"]["rerank"]["recall_delta"])
+        results.append(
+            ("rerank_recall_delta", pdelta,
+             float(baseline["rerank_recall_delta_max"]),
+             pdelta <= float(baseline["rerank_recall_delta_max"]))
+        )
     return results
+
+
+# metrics whose bound is a CEILING (measured must stay <= the baseline);
+# "_rate"-suffixed names are ceilings by convention, the rest are listed here
+_CEILINGS = frozenset({"rerank_recall_delta"})
 
 
 def main() -> int:
@@ -110,7 +138,8 @@ def main() -> int:
     failed = False
     for name, measured, floor, ok in check(bench, baseline):
         status = "OK  " if ok else "FAIL"
-        bound = "ceiling" if name.endswith("_rate") else "floor"
+        bound = ("ceiling" if name.endswith("_rate") or name in _CEILINGS
+                 else "floor")
         print(f"[{status}] {name}: {measured:.4g} ({bound} {floor:.4g})")
         failed |= not ok
     if failed:

@@ -111,6 +111,40 @@ def render_gather_engine(rec: dict) -> str:
     return "\n".join(rows)
 
 
+def render_precision(rec: dict) -> str:
+    """Compressed-engine table (bench_search.run_precision record): bytes
+    fetched per candidate per precision against measured gather throughput.
+    The expansion loop sits at ~0.05 flop/byte, so bytes/candidate IS the
+    roofline lever — the table shows how much of each representation's byte
+    ratio survives the dequant ALU cost (int8 gated; bf16 informational;
+    PQ's per-candidate fetch is the code table, whose first-pass rank is
+    bounded by the rerank recall delta instead of a throughput floor)."""
+    from repro.kernels import precision as precision_lib
+
+    g = rec["gather"]
+    d = g["d"]
+    rows = [
+        "### Compressed distance engine "
+        f"(n={g['n']}, d={d}, B={g['B']}, C={g['C']}, cold rotating ids)",
+        "| precision | bytes/dim | bytes/candidate | t/pass | speedup vs fp32 |",
+        "|" + "---|" * 5,
+    ]
+    for prec in ("fp32", "bf16", "int8", "pq"):
+        bpd = precision_lib.bytes_per_dim(prec)
+        t_key = "t_fp32_s" if prec == "fp32" else f"t_{prec}_s"
+        t = fmt_t(g[t_key]) if t_key in g else "—"
+        spd = (f"{g[f'{prec}_speedup']:.2f}x" if f"{prec}_speedup" in g
+               else ("1.00x" if prec == "fp32" else "—"))
+        rows.append(f"| {prec} | {bpd:g} | {bpd * d:g} | {t} | {spd} |")
+    r = rec["rerank"]
+    rows.append(
+        f"\nPQ rank-then-rerank: recall@10 {r['recall_at_10_pq']:.4f} vs "
+        f"fp32 {r['recall_at_10_fp32']:.4f} "
+        f"(delta {r['recall_delta']:+.4f}, ceiling-gated)."
+    )
+    return "\n".join(rows)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.json"
     with open(path) as f:
@@ -123,6 +157,9 @@ def main():
         if "gather_engine" in records:
             print()
             print(render_gather_engine(records["gather_engine"]))
+        if "precision_gate" in records:
+            print()
+            print(render_precision(records["precision_gate"]))
         return
     print(render(records))
 

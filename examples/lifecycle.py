@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import OnlineIndex
 from repro.core import brute
-from repro.index import OnlineIndex
 from repro.serve import retrieval
 
 N, D, K = 4000, 16, 16

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BuildConfig, brute, build
+from repro import BuildConfig, build
+from repro.core import brute
 from repro.models import mace
 
 N_ATOMS, K = 3000, 8
@@ -26,7 +27,7 @@ def main():
     species = jax.random.randint(jax.random.fold_in(key, 1), (N_ATOMS,), 0, 4)
 
     # --- neighbor graph via the paper's online construction -----------------
-    cfg = BuildConfig(k=K, metric="l2", wave=256, lgd=True, use_pallas=False)
+    cfg = BuildConfig(k=K, metric="l2", wave=256, lgd=True, dispatch="reference")
     t0 = time.time()
     g, stats = build(pos, cfg, key)
     c = float(stats.n_comps) / (N_ATOMS * (N_ATOMS - 1) / 2)

@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ShardedIndex
 from repro.core import brute, construct, merge, nndescent
-from repro.index.router import ShardedIndex
 
 N, D, K, SHARDS = 6000, 16, 16, 4
 
@@ -40,7 +40,7 @@ def graph_recall(g, x, k=10):
 
 def main():
     x = jax.random.normal(jax.random.PRNGKey(0), (N, D))
-    cfg = construct.BuildConfig(k=K, metric="l2", wave=256, use_pallas=False)
+    cfg = construct.BuildConfig(k=K, metric="l2", wave=256, dispatch="reference")
 
     # -- 1. sequential baseline: one wave pipeline --------------------------
     t0 = time.perf_counter()

@@ -19,8 +19,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import BuildConfig, SearchConfig, brute, build, dynamic
-from repro.core.search import search
+from repro import BuildConfig, SearchConfig, build, search
+from repro.core import brute, dynamic
 from repro.core.graph import grow_graph
 from repro.data import synthetic
 
@@ -38,7 +38,7 @@ def main():
     # seed_mode="coarse" builds a landmark sub-graph (core.hierarchy) with
     # the same machinery and routes every insertion search through it; the
     # coarse work is charged to n_comps, so the scanning rate below is honest.
-    cfg = BuildConfig(k=K, metric="l2", wave=256, lgd=True, use_pallas=False,
+    cfg = BuildConfig(k=K, metric="l2", wave=256, lgd=True, dispatch="reference",
                       seed_mode="coarse")
     t0 = time.time()
     g, stats, coarse = build(x, cfg, key, return_coarse=True)
@@ -53,7 +53,7 @@ def main():
     print(f"graph recall@{K} vs exact: {rec:.3f}")
 
     # -- 2. k-NN search over the graph ----------------------------------------
-    scfg = SearchConfig(k=K, beam=40, use_lgd_mask=True, use_pallas=False,
+    scfg = SearchConfig(k=K, beam=40, use_lgd_mask=True, dispatch="reference",
                         seed_mode="coarse")
     t0 = time.time()
     res = search(g, x, q, jax.random.PRNGKey(1), scfg, coarse=coarse)

@@ -1,0 +1,40 @@
+"""repro — online approximate k-NN graph construction (the paper, end to end).
+
+The one-stop facade.  Everything a typical user needs lives here; the full
+surface stays importable from the subpackages:
+
+  * ``repro.core``    — algorithms: EHC search, OLG/LGD construction,
+                        NN-Descent, dynamic insert/remove, merge, hierarchy
+  * ``repro.kernels`` — the blocked Pallas distance engine + precision codecs
+  * ``repro.index``   — lifecycle (OnlineIndex), sharded serving
+                        (ShardedIndex), versioned snapshots
+  * ``repro.serve``   — retrieval-facing entry points
+  * ``repro.data`` / ``repro.models`` / ``repro.train`` — substrate
+
+Quick start::
+
+    import repro
+
+    g, stats = repro.build(x, repro.BuildConfig(k=20, precision="int8"))
+    idx = repro.OnlineIndex.build(x, repro.BuildConfig(k=20))
+    res = idx.search(queries, top_k=10)
+"""
+
+from repro.core.construct import BuildConfig, build, build_parallel
+from repro.core.search import SearchConfig, SearchResult, search
+from repro.index.lifecycle import OnlineIndex
+from repro.index.router import ShardedIndex
+
+__version__ = "0.7.0"  # tracks the PR sequence; PR 7 = precision API
+
+__all__ = [
+    "BuildConfig",
+    "SearchConfig",
+    "SearchResult",
+    "OnlineIndex",
+    "ShardedIndex",
+    "build",
+    "build_parallel",
+    "search",
+    "__version__",
+]

@@ -439,6 +439,7 @@ def _knn_plan(arch: str, shape: str, mesh: Mesh, mod) -> CellPlan:
         alive=SDS((n_total,), jnp.bool_),
         n_valid=SDS((), jnp.int32),
         sq_norms=SDS((n_total,), jnp.float32),
+        row_scale=SDS((n_total,), jnp.float32),
     )
     g_sh = _ns(mesh, dist.graph_pspec(fa))
     x_dtype = jnp.bfloat16 if getattr(cfg, "data_bf16", False) else jnp.float32

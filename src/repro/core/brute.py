@@ -25,7 +25,9 @@ from repro.kernels import ops
 Array = jax.Array
 
 
-@functools.partial(jax.jit, static_argnames=("k", "metric", "tile", "use_pallas"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "tile", "use_pallas", "dispatch")
+)
 def brute_force_knn(
     x: Array,
     q: Array,
@@ -37,6 +39,7 @@ def brute_force_knn(
     alive: Optional[Array] = None,
     tile: int = 8192,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
     sq_norms: Optional[Array] = None,
 ):
     """Exact top-k nearest neighbors of q among rows of x.
@@ -81,7 +84,8 @@ def brute_force_knn(
             snp, t * tile, tile, 0
         )
         dt = ops.pairwise_distance(
-            q, xt, metric, use_pallas=use_pallas, x_sq_norms=xn_t
+            q, xt, metric, use_pallas=use_pallas, dispatch=dispatch,
+            x_sq_norms=xn_t,
         )
         ids = t * tile + jnp.arange(tile, dtype=jnp.int32)[None, :]
         mask = (ids < n_valid)
@@ -107,6 +111,7 @@ def exact_seed_graph(
     capacity: Optional[int] = None,
     rev_capacity: Optional[int] = None,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
 ) -> graph_lib.KNNGraph:
     """Alg. 2 lines 4-6: exact k-NN graph over the first n_seed rows of x.
 
@@ -118,6 +123,7 @@ def exact_seed_graph(
     g = graph_lib.empty_graph(capacity, k, rev_capacity)
     seeds = x[:n_seed]
     seed_sq = graph_lib.squared_norms(seeds)  # seeds the graph norm cache
+    seed_sc = graph_lib.row_scales(seeds)  # ... and the int8 scale cache
     ids, dists = brute_force_knn(
         seeds,
         seeds,
@@ -125,6 +131,7 @@ def exact_seed_graph(
         metric,
         exclude_ids=jnp.arange(n_seed, dtype=jnp.int32),
         use_pallas=use_pallas,
+        dispatch=dispatch,
         sq_norms=seed_sq,
     )
     kk = ids.shape[1]
@@ -136,6 +143,7 @@ def exact_seed_graph(
         alive=g.alive.at[:n_seed].set(True),
         n_valid=jnp.asarray(n_seed, jnp.int32),
         sq_norms=g.sq_norms.at[:n_seed].set(seed_sq),
+        row_scale=g.row_scale.at[:n_seed].set(seed_sc),
     )
     return graph_lib.rebuild_reverse(g)
 

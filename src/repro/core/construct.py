@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -34,9 +35,10 @@ import jax.numpy as jnp
 from repro.core import brute, merge
 from repro.core import search as search_lib
 from repro.core.counters import Counter64
-from repro.core.graph import KNNGraph, squared_norms
+from repro.core.graph import KNNGraph, row_scales, squared_norms
 from repro.core.search import SearchConfig
 from repro.kernels import compat, ops
+from repro.kernels import precision as precision_lib
 
 Array = jax.Array
 
@@ -56,13 +58,37 @@ class BuildConfig:
     n_seeds: int = 8  # p
     hash_slots: Optional[int] = None  # None = auto-size from beam/max_iters
     max_iters: int = 60
-    use_pallas: Optional[bool] = None
+    use_pallas: Optional[bool] = None  # DEPRECATED -> dispatch
+    dispatch: Optional[str] = None  # None -> "auto"; see SearchConfig
+    # distance-engine precision of the insertion searches; the serving-side
+    # SearchConfig inherits it (index.lifecycle builds its search config here)
+    precision: str = "fp32"  # "fp32" | "bf16" | "int8" | "pq"
+    rerank_factor: int = 4  # pq: exact re-rank width = rerank_factor * k
     data_bf16: bool = False  # store the dataset bf16 (distances accum f32)
     # hierarchical entry-point seeding (core.hierarchy)
     seed_mode: str = "random"  # "random" | "coarse"
     coarse_landmarks: Optional[int] = None  # L; None = ~4·√n (hierarchy)
     coarse_members: int = 8  # M — member-cell ring capacity per landmark
     coarse_top: int = 4  # T winning landmarks seeding each fine search
+
+    def __post_init__(self):
+        if self.use_pallas is not None:
+            warnings.warn(
+                "BuildConfig.use_pallas is deprecated; use dispatch="
+                "'auto'|'pallas'|'interpret'|'reference' instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if self.dispatch is None:
+                object.__setattr__(
+                    self, "dispatch",
+                    "pallas" if self.use_pallas else "reference",
+                )
+            object.__setattr__(self, "use_pallas", None)
+        if self.dispatch is None:
+            object.__setattr__(self, "dispatch", "auto")
+        assert self.dispatch in ops.DISPATCHES, self.dispatch
+        precision_lib.validate_precision(self.precision)
 
     def search_config(self) -> SearchConfig:
         return SearchConfig(
@@ -73,7 +99,9 @@ class BuildConfig:
             max_iters=self.max_iters,
             metric=self.metric,
             use_lgd_mask=self.lgd,
-            use_pallas=self.use_pallas,
+            dispatch=self.dispatch,
+            precision=self.precision,
+            rerank_factor=self.rerank_factor,
             seed_mode=self.seed_mode,
             coarse_top=self.coarse_top,
         )
@@ -146,16 +174,18 @@ def commit_wave(
     q_ids = q_start + lanes
     q_mask = lanes < n_real
     xq = x[jnp.minimum(q_ids, cap - 1)]
-    # wave-row ‖x‖²: computed ONCE here, reused by the intra-wave tile and
-    # written into the graph-resident norm cache at commit (step 4) — the
-    # cache's incremental maintenance point for insertions
+    # wave-row ‖x‖² and int8 scales: computed ONCE here, the norms reused by
+    # the intra-wave tile, and both written into their graph-resident caches
+    # at commit (step 4) — the caches' incremental maintenance point for
+    # insertions (sq_norms and row_scale share owners everywhere)
     xq_sq = squared_norms(xq)
+    xq_sc = row_scales(xq)
 
     # ---- 1. new-row lists: search results ‖ intra-wave candidates ----------
     new_ids, new_dist = res.ids, res.dists
     if cfg.intra_wave and W > 1:
         tile = ops.pairwise_distance(
-            xq, xq, cfg.metric, use_pallas=cfg.use_pallas,
+            xq, xq, cfg.metric, dispatch=cfg.dispatch,
             x_sq_norms=xq_sq if cfg.metric == "l2" else None,
         )
         off = ~(q_mask[None, :] & q_mask[:, None]) | jnp.eye(W, dtype=bool)
@@ -235,8 +265,9 @@ def commit_wave(
     nbr_dist = m_dist.at[drop_q].set(new_dist, mode="drop")
     # λ init 0 on join (Alg. 3)
     nbr_lam = m_lam.at[drop_q].set(jnp.zeros_like(new_ids), mode="drop")
-    # norm-cache maintenance
+    # norm- and scale-cache maintenance (shared owners, side by side)
     sq_norms = g.sq_norms.at[drop_q].set(xq_sq, mode="drop")
+    row_scale = g.row_scale.at[drop_q].set(xq_sc, mode="drop")
 
     # ---- 5. reverse-list appends --------------------------------------------
     # (a) new rows list their members; (b) inserted queries join target rows.
@@ -266,6 +297,7 @@ def commit_wave(
         alive=alive,
         n_valid=n_valid,
         sq_norms=sq_norms,
+        row_scale=row_scale,
     )
     return g2, mres.n_inserted
 
@@ -285,6 +317,7 @@ def wave_core(
     *,
     n_real: Optional[Array] = None,
     coarse=None,
+    enc=None,
 ):
     """Traceable fused search+commit: one wave of W insertions, no host sync.
 
@@ -299,6 +332,13 @@ def wave_core(
     level the return is the 3-tuple ``(graph, stats, coarse)``; without one
     it stays ``(graph, stats)`` — ``cfg.seed_mode="coarse"`` falls back to
     random seeding for this wave (the distributed shard step runs that way).
+
+    ``enc`` is the compressed companion table of ``x`` when
+    ``cfg.precision != "fp32"`` — ``build`` encodes the full dataset once
+    up front and threads it through every wave (rows not yet inserted are
+    never candidates, so the eager whole-dataset encode is exact); passing
+    None makes the search re-derive it per wave, which is correct but
+    wasteful.
     """
     W = cfg.wave
     n = x.shape[0]
@@ -310,7 +350,7 @@ def wave_core(
     scfg = cfg.search_config()
     if coarse is None and scfg.seed_mode == "coarse":
         scfg = dataclasses.replace(scfg, seed_mode="random")
-    res = search_lib.search(g, x, q, key, scfg, coarse=coarse)
+    res = search_lib.search(g, x, q, key, scfg, coarse=coarse, enc=enc)
     res = res._replace(
         n_comps=jnp.where(jnp.arange(W) < n_real, res.n_comps, 0)
     )
@@ -389,6 +429,13 @@ def build(
         key = jax.random.PRNGKey(0)
     if callback_stride < 1:
         raise ValueError(f"callback_stride must be >= 1, got {callback_stride}")
+    # one whole-dataset encode feeds every wave's insertion searches — rows
+    # not yet inserted are masked out of candidate sets, so this is exact
+    enc = (
+        precision_lib.encode_dataset(x, cfg.precision)
+        if cfg.precision != "fp32"
+        else None
+    )
 
     from repro.core import hierarchy  # late: hierarchy imports construct
 
@@ -406,7 +453,7 @@ def build(
         n_seed = min(cfg.n_seed_init, n)
         g = brute.exact_seed_graph(
             x, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap,
-            use_pallas=cfg.use_pallas,
+            dispatch=cfg.dispatch,
         )
         start = n_seed
         # seed-graph comparisons count toward the scanning rate
@@ -425,10 +472,13 @@ def build(
     while pos < n:
         key, sk = jax.random.split(key)
         if coarse is None:
-            g, stats = wave_step(g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg)
+            g, stats = wave_step(
+                g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg, enc=enc
+            )
         else:
             g, stats, coarse = wave_step(
-                g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg, coarse=coarse
+                g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg,
+                coarse=coarse, enc=enc,
             )
         pos += min(W, n - pos)
         n_waves += 1
@@ -547,7 +597,7 @@ def build_parallel(
     )
 
     g, refine_comps = nndescent.refine(
-        g, x, cfg.metric, rounds=refine_rounds, use_pallas=cfg.use_pallas
+        g, x, cfg.metric, rounds=refine_rounds, dispatch=cfg.dispatch
     )
 
     stats = BuildStats(

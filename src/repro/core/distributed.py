@@ -62,6 +62,7 @@ def graph_pspec(axes) -> KNNGraph:
         alive=P(axes),
         n_valid=P(),
         sq_norms=P(axes),
+        row_scale=P(axes),
     )
 
 
@@ -235,7 +236,7 @@ def build_subgraphs(
     def seed_local(xs):
         return brute.exact_seed_graph(
             xs, n_seed, cfg.k, cfg.metric, rev_capacity=cfg.rev_cap,
-            use_pallas=cfg.use_pallas,
+            dispatch=cfg.dispatch,
         )
 
     seed_fn = compat.shard_map(
@@ -277,6 +278,7 @@ def build_subgraphs(
                 alive=jnp.asarray(gh.alive[lo:hi]),
                 n_valid=jnp.asarray(n_local, jnp.int32),
                 sq_norms=jnp.asarray(gh.sq_norms[lo:hi]),
+                row_scale=jnp.asarray(gh.row_scale[lo:hi]),
             )
         )
     return graphs, int(total_comps), n_waves * n_dev, int(total_edges)

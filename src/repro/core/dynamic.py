@@ -165,8 +165,9 @@ def remove(
         rev_ptr=rev_ptr,
         alive=alive,
         n_valid=g.n_valid,
-        # norm-cache invariant: removed rows drop back to 0
+        # norm-/scale-cache invariant: removed rows drop back to 0
         sq_norms=jnp.where(removed, 0.0, g.sq_norms),
+        row_scale=jnp.where(removed, 0.0, g.row_scale),
     )
 
 
@@ -237,6 +238,7 @@ def compact(g: KNNGraph, x: Array) -> tuple[KNNGraph, Array, Array]:
         alive=filled,
         n_valid=n_alive,
         sq_norms=pack(g.sq_norms, 0.0),
+        row_scale=pack(g.row_scale, 0.0),
     )
     g2 = graph_lib.rebuild_reverse(g2)
     x2 = pack(x, 0)

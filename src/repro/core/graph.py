@@ -25,6 +25,13 @@ as vectorized gathers/scatters:
   ``dynamic.remove`` (zeroes victims); hand-built graphs attach it with
   ``attach_sq_norms``.  No search/construction path recomputes norms per
   iteration.
+* ``row_scale``: (cap,) per-row symmetric int8 quantization scales
+  (``max|x_i|/127``) backing the compressed distance engine
+  (``precision="int8"``).  Same invariant and the same owners as
+  ``sq_norms`` — the two tables are maintained side by side everywhere, and
+  ``attach_sq_norms`` fills both.  Rows with scale 0 (unallocated, removed,
+  or the all-zero vector) dequantize through a scale of 1 in the engine, so
+  a stale zero can never produce NaNs.
 * ``rev_lam``: (cap, R) snapshot of the forward twin's λ for each reverse
   edge — Ḡ[i] entry j means i ∈ G[j], and ``rev_lam[i, slot]`` is λ of i
   inside G[j] at append/rebuild time.  Search's LGD reverse-edge filter
@@ -60,6 +67,7 @@ class KNNGraph(NamedTuple):
     alive: Array  # (cap,) bool
     n_valid: Array  # () int32 — rows [0, n_valid) are allocated
     sq_norms: Array  # (cap,) float32 — ‖x_i‖² cache (0 where unallocated)
+    row_scale: Array  # (cap,) float32 — int8 quant scale cache (0 where unallocated)
 
     @property
     def capacity(self) -> int:
@@ -87,6 +95,7 @@ def empty_graph(capacity: int, k: int, rev_capacity: int | None = None) -> KNNGr
         alive=jnp.zeros((capacity,), bool),
         n_valid=jnp.zeros((), jnp.int32),
         sq_norms=jnp.zeros((capacity,), jnp.float32),
+        row_scale=jnp.zeros((capacity,), jnp.float32),
     )
 
 
@@ -100,19 +109,42 @@ def squared_norms(x: Array) -> Array:
     return jnp.sum(xf * xf, axis=-1)
 
 
+def row_scales(x: Array) -> Array:
+    """(n, d) data -> (n,) float32 symmetric int8 scales (``max|x_i|/127``).
+
+    The one place the scale-table contents are defined; every owner of
+    ``KNNGraph.row_scale`` computes its entries through here (mirroring
+    ``squared_norms`` for the norm cache).
+
+    Written as a multiply by the precomputed f32 reciprocal, NOT ``/ 127.0``:
+    XLA's algebraic simplifier rewrites the constant divide into exactly this
+    multiply inside jit, so the explicit form yields the same bits from
+    eager owners (``attach_sq_norms`` on a hand-built graph) and jitted
+    owners (wave commit) — a plain divide diverges by one ulp on ~4% of
+    rows depending on compilation context.
+    """
+    xf = x.astype(jnp.float32)
+    return jnp.max(jnp.abs(xf), axis=-1) * jnp.float32(1.0 / 127.0)
+
+
 def attach_sq_norms(g: KNNGraph, x: Array) -> KNNGraph:
-    """Populate the norm cache of a hand-built graph from its backing data.
+    """Populate the norm and scale caches of a hand-built graph from its
+    backing data.
 
     Rows at or beyond ``n_valid`` — and dead rows — keep 0 per the cache
     invariant.
     """
     cap = g.capacity
     sq = squared_norms(x[:cap])
+    sc = row_scales(x[:cap])
     if sq.shape[0] < cap:
         sq = jnp.pad(sq, (0, cap - sq.shape[0]))
+        sc = jnp.pad(sc, (0, cap - sc.shape[0]))
     row = jnp.arange(cap, dtype=jnp.int32)
+    allocated = (row < g.n_valid) & g.alive
     return g._replace(
-        sq_norms=jnp.where((row < g.n_valid) & g.alive, sq, 0.0)
+        sq_norms=jnp.where(allocated, sq, 0.0),
+        row_scale=jnp.where(allocated, sc, 0.0),
     )
 
 
@@ -132,6 +164,7 @@ def grow_graph(g: KNNGraph, new_capacity: int) -> KNNGraph:
         alive=jnp.concatenate([g.alive, jnp.zeros((extra,), bool)]),
         n_valid=g.n_valid,
         sq_norms=jnp.concatenate([g.sq_norms, jnp.zeros((extra,), jnp.float32)]),
+        row_scale=jnp.concatenate([g.row_scale, jnp.zeros((extra,), jnp.float32)]),
     )
 
 
@@ -159,6 +192,7 @@ def trim_graph(g: KNNGraph, new_capacity: int) -> KNNGraph:
         alive=g.alive[:new_capacity],
         n_valid=g.n_valid,
         sq_norms=g.sq_norms[:new_capacity],
+        row_scale=g.row_scale[:new_capacity],
     )
 
 

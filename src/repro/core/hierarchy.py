@@ -82,13 +82,15 @@ def nearest_landmark(
     metric: str,
     *,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
     chunk: int = 4096,
 ) -> Array:
     """Brute top-1 landmark per row of xs, chunked: (T,) int32 cell ids."""
     outs = []
     for lo in range(0, xs.shape[0], chunk):
         d = ops.pairwise_distance(
-            xs[lo : lo + chunk], points, metric, use_pallas=use_pallas
+            xs[lo : lo + chunk], points, metric,
+            use_pallas=use_pallas, dispatch=dispatch,
         )
         outs.append(jnp.argmin(d, axis=1).astype(jnp.int32))
     if not outs:
@@ -166,7 +168,7 @@ def _assemble(
     )
     if assign_rows is not None and assign_rows.shape[0]:
         cells = nearest_landmark(
-            points, x[assign_rows], cfg.metric, use_pallas=cfg.use_pallas
+            points, x[assign_rows], cfg.metric, dispatch=cfg.dispatch
         )
         comps += int(assign_rows.shape[0]) * L
         level = note_inserted(level, assign_rows.astype(jnp.int32), cells)

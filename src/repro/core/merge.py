@@ -210,6 +210,7 @@ def stack_subgraphs(g_a, g_b, n_a: int):
         alive=jnp.concatenate([g_a.alive, g_b.alive]),
         n_valid=jnp.asarray(cap, jnp.int32),
         sq_norms=jnp.concatenate([g_a.sq_norms, g_b.sq_norms]),
+        row_scale=jnp.concatenate([g_a.row_scale, g_b.row_scale]),
     )
 
 

@@ -29,6 +29,13 @@ from repro.kernels import ops
 Array = jax.Array
 
 
+def _dispatch_of(dispatch, use_pallas):
+    """Fold the deprecated tri-state into the dispatch enum (ops semantics)."""
+    if dispatch is not None or use_pallas is None:
+        return dispatch
+    return "pallas" if use_pallas else "reference"
+
+
 @dataclasses.dataclass(frozen=True)
 class NNDescentConfig:
     k: int = 20
@@ -37,7 +44,8 @@ class NNDescentConfig:
     delta: float = 0.001  # stop when updates < delta * n * k
     rev_sample: Optional[int] = None  # reverse neighbors joined per node (default k)
     node_chunk: int = 2048  # nodes per local-join tile (bounds the (B,C,C) buffer)
-    use_pallas: Optional[bool] = None
+    use_pallas: Optional[bool] = None  # DEPRECATED -> dispatch
+    dispatch: Optional[str] = None  # kernels.ops dispatch enum
 
 
 class NNDescentState(NamedTuple):
@@ -46,7 +54,7 @@ class NNDescentState(NamedTuple):
     is_new: Array  # (n, k) — entry not yet joined
 
 
-def _random_init(x: Array, k: int, metric: str, key: Array, use_pallas) -> NNDescentState:
+def _random_init(x: Array, k: int, metric: str, key: Array, dispatch) -> NNDescentState:
     n = x.shape[0]
     # k distinct-ish random neighbors per node (collisions masked)
     ids = jax.random.randint(key, (n, k + 4), 0, n, dtype=jnp.int32)
@@ -54,7 +62,7 @@ def _random_init(x: Array, k: int, metric: str, key: Array, use_pallas) -> NNDes
     ids = jnp.where(ids == row, -1, ids)
     dup = jnp.triu((ids[:, None, :] == ids[:, :, None]) & (ids[:, None, :] >= 0), k=1)
     ids = jnp.where(jnp.any(dup, axis=1), -1, ids)
-    d = ops.gather_distance(x, x, ids, metric, use_pallas=use_pallas)
+    d = ops.gather_distance(x, x, ids, metric, dispatch=dispatch)
     d, ids = ops.topk_smallest(d, ids, k)
     ids = jnp.where(jnp.isfinite(d), ids, -1)
     return NNDescentState(ids=ids, dist=jnp.where(ids >= 0, d, jnp.inf), is_new=ids >= 0)
@@ -75,7 +83,7 @@ def _reverse_sample(ids: Array, is_new: Array, r: int):
     return rev_ids, rev_new
 
 
-def _local_join_chunk(x, cand_ids, cand_new, metric, use_pallas):
+def _local_join_chunk(x, cand_ids, cand_new, metric, dispatch):
     """Join all (new x any) pairs inside each node's candidate list.
 
     Args:
@@ -112,7 +120,7 @@ def _local_join_chunk(x, cand_ids, cand_new, metric, use_pallas):
     return v, q, dd, n_comps
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "use_pallas", "chunk_size"))
+@functools.partial(jax.jit, static_argnames=("metric", "dispatch", "chunk_size"))
 def _join_round(
     x: Array,
     ids: Array,
@@ -121,7 +129,7 @@ def _join_round(
     rev_ids: Array,
     rev_new: Array,
     metric: str,
-    use_pallas,
+    dispatch,
     chunk_size: int,
 ):
     n, k = ids.shape
@@ -140,7 +148,7 @@ def _join_round(
         cur_ids, cur_dist, cur_new, tot, ins = carry
         ci = jax.lax.dynamic_slice_in_dim(cand_ids, i * chunk_size, chunk_size, 0)
         cn = jax.lax.dynamic_slice_in_dim(cand_new, i * chunk_size, chunk_size, 0)
-        v, q, d, nc = _local_join_chunk(x, ci, cn, metric, use_pallas)
+        v, q, d, nc = _local_join_chunk(x, ci, cn, metric, dispatch)
         res = merge.merge_candidates(cur_ids, cur_dist, lam0, v, q, d)
         # carried entries keep their flag, fresh inserts are new, and the
         # just-joined chunk's (fwd) entries become old — Dong's incremental
@@ -173,7 +181,7 @@ def build(
     if key is None:
         key = jax.random.PRNGKey(0)
     k = cfg.k
-    st = _random_init(x, k, cfg.metric, key, cfg.use_pallas)
+    st = _random_init(x, k, cfg.metric, key, _dispatch_of(cfg.dispatch, cfg.use_pallas))
     total_comps = float(n)  # init distances ~ n*k but pairs may repeat; count k*n
     total_comps = float(n * k)
     r = cfg.rev_sample or k
@@ -188,7 +196,7 @@ def build(
             rev_ids,
             rev_new,
             cfg.metric,
-            cfg.use_pallas,
+            _dispatch_of(cfg.dispatch, cfg.use_pallas),
             cfg.node_chunk,
         )
         st = NNDescentState(ids=ids, dist=dist, is_new=is_new)
@@ -206,6 +214,7 @@ def build(
         alive=jnp.ones((n,), bool),
         n_valid=jnp.asarray(n, jnp.int32),
         sq_norms=graph_lib.squared_norms(x),
+        row_scale=graph_lib.row_scales(x),
     )
     g = rebuild_reverse(g)
     stats = {
@@ -225,6 +234,7 @@ def local_join_refine(
     rounds: int = 1,
     node_chunk: int = 2048,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
 ) -> tuple[KNNGraph, float]:
     """§IV-D refinement: NN-Descent join round(s) over an existing graph.
 
@@ -238,7 +248,8 @@ def local_join_refine(
     for _ in range(rounds):
         rev_ids, rev_new = _reverse_sample(ids, is_new, k)
         ids, dist, is_new, c, _ = _join_round(
-            x, ids, dist, is_new, rev_ids, rev_new, metric, use_pallas, node_chunk
+            x, ids, dist, is_new, rev_ids, rev_new, metric,
+            _dispatch_of(dispatch, use_pallas), node_chunk,
         )
         comps += float(c)
     g = g._replace(nbr_ids=ids, nbr_dist=dist, nbr_lam=jnp.zeros_like(ids))
@@ -253,6 +264,7 @@ def refine(
     rounds: int = 1,
     node_chunk: int = 2048,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
 ) -> tuple[KNNGraph, float]:
     """Bounded refinement sweep: the EFANNA-style recall-recovery pass.
 
@@ -266,5 +278,5 @@ def refine(
         return g, 0.0
     return local_join_refine(
         g, x, metric, rounds=rounds, node_chunk=node_chunk,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, dispatch=dispatch,
     )

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -42,6 +43,7 @@ from repro.core import segments
 from repro.core.graph import KNNGraph
 from repro.kernels import expand as expand_lib
 from repro.kernels import ops
+from repro.kernels import precision as precision_lib
 
 Array = jax.Array
 
@@ -50,22 +52,35 @@ Array = jax.Array
 class SearchConfig:
     """Static EHC search configuration.
 
-    ``use_pallas`` selects the execution path of the fused expansion step
+    ``dispatch`` selects the execution path of the fused expansion step
     (``kernels.ops.expand_step`` — one call per EHC iteration covering hash
     probe, candidate-row gather + distance, hash record, and beam top-k
-    merge).  Three-way dispatch:
+    merge) and of the seed-distance gather.  One enum, resolved only in
+    ``kernels.ops``:
 
-      * ``None`` (default): auto — the compiled fused Pallas kernel on TPU,
-        the pure-JAX reference elsewhere (XLA fuses it into the jitted
-        search loop; the fast CPU path);
-      * ``True``: always the fused kernel — compiled on TPU, interpret mode
-        off-TPU (slow, but bit-identical to compiled semantics; what the
-        parity tests sweep);
-      * ``False``: always the pure-JAX reference (``kernels.expand
-        .expand_reference``).
+      * ``"auto"`` (default): the compiled fused Pallas kernel on TPU, the
+        pure-JAX reference elsewhere (XLA fuses it into the jitted search
+        loop; the fast CPU path);
+      * ``"pallas"``: always the kernel — compiled on TPU, interpret mode
+        off-TPU (slow, but bit-identical to compiled semantics);
+      * ``"interpret"``: the kernel in interpret mode everywhere (what the
+        parity/correctness tests sweep);
+      * ``"reference"``: always the pure-JAX reference path.
 
-    The same flag also selects the seed-distance gather kernel
-    (``kernels.ops.gather_distance``).
+    ``use_pallas`` is the DEPRECATED tri-state ancestor of ``dispatch``
+    (None/True/False = auto/pallas/reference).  Setting it still works —
+    it is mapped onto ``dispatch`` with a ``DeprecationWarning`` — so old
+    callers and old snapshots keep loading.
+
+    ``precision`` selects the candidate representation the distance engine
+    fetches (``kernels.precision``): ``"fp32"`` (exact, the default —
+    bit-identical to the pre-precision engine), ``"bf16"``/``"int8"``
+    (compressed tiles, fp32 accumulation, tolerance-suite accuracy), or
+    ``"pq"`` (ADC first-pass rank + exact fp32 re-rank of the top
+    ``rerank_factor * k`` fresh candidates per expansion; only exact
+    distances enter the visited hash or beam).  The compressed companion
+    table rides as the ``enc`` operand of ``search`` and is derived from
+    the dataset (and the graph-resident ``row_scale`` table) when absent.
 
     ``seed_mode`` selects the Alg. 1 line-5 entry points: ``"random"`` is the
     paper's p uniform draws over [0, n); ``"coarse"`` first runs a short EHC
@@ -90,7 +105,10 @@ class SearchConfig:
     use_lgd_mask: bool = False  # λ <= mean-λ expansion filter (Alg. 3)
     lgd_rev_lambda: bool = True  # look up λ of the forward twin for rev edges
     hard_diversify: bool = False  # ablation: skip any λ > 0 (DPG/FANNG style)
-    use_pallas: Optional[bool] = None
+    use_pallas: Optional[bool] = None  # DEPRECATED -> dispatch
+    dispatch: Optional[str] = None  # None -> "auto" (post-init)
+    precision: str = "fp32"  # "fp32" | "bf16" | "int8" | "pq"
+    rerank_factor: int = 4  # pq: exact re-rank width = rerank_factor * k
     seed_mode: str = "random"  # "random" | "coarse"
     coarse_top: int = 4  # T winning landmarks whose cells seed the beam
     coarse_beam: int = 16  # beam width of the coarse EHC pass
@@ -99,6 +117,26 @@ class SearchConfig:
     def __post_init__(self):
         assert self.beam >= self.k, "beam must be >= k"
         assert self.seed_mode in ("random", "coarse"), self.seed_mode
+        if self.use_pallas is not None:
+            warnings.warn(
+                "SearchConfig.use_pallas is deprecated; use dispatch="
+                "'auto'|'pallas'|'interpret'|'reference' instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if self.dispatch is None:
+                object.__setattr__(
+                    self, "dispatch",
+                    "pallas" if self.use_pallas else "reference",
+                )
+            # normalize so dataclasses.replace round trips don't re-warn and
+            # configs differing only in the legacy spelling compare equal
+            object.__setattr__(self, "use_pallas", None)
+        if self.dispatch is None:
+            object.__setattr__(self, "dispatch", "auto")
+        assert self.dispatch in ops.DISPATCHES, self.dispatch
+        precision_lib.validate_precision(self.precision)
+        assert self.rerank_factor >= 1, "rerank_factor must be >= 1"
         if self.hash_slots is None:
             object.__setattr__(
                 self, "hash_slots", auto_hash_slots(self.beam, self.max_iters)
@@ -228,17 +266,20 @@ def _prepare_expansion(
 
 def _expand(
     g: KNNGraph, x: Array, q: Array, cands: Array, beam_exp: Array,
-    st: _LoopState, cfg: SearchConfig,
+    st: _LoopState, cfg: SearchConfig, enc=None,
 ):
     """The fused expansion: probe the visited hash, compute surviving
     distances (blocked MXU engine fed by the graph-resident norm cache),
-    record them, merge into the beam.  One ``ops.expand_step`` call — Pallas
-    kernel or pure-JAX reference per ``cfg.use_pallas``."""
+    record them, merge into the beam.  One ``ops.expand_step`` call —
+    engine per ``cfg.dispatch``, candidate representation per
+    ``cfg.precision`` (``enc`` is the compressed companion table)."""
     return ops.expand_step(
         q, x, cands, st.beam_ids, st.beam_dist, beam_exp,
         st.vis_ids, st.vis_dist,
         metric=cfg.metric, hash_probes=cfg.hash_probes,
-        sq_norms=g.sq_norms, use_pallas=cfg.use_pallas,
+        sq_norms=g.sq_norms, dispatch=cfg.dispatch,
+        enc=enc, precision=cfg.precision,
+        rerank_keep=cfg.rerank_factor * cfg.k,
     )
 
 
@@ -247,12 +288,12 @@ def _hash_fill(vis_ids: Array) -> Array:
     return jnp.sum(vis_ids >= 0, axis=1).astype(jnp.int32)
 
 
-def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig):
+def _make_step(g: KNNGraph, x: Array, q: Array, cfg: SearchConfig, enc=None):
     def step(st: _LoopState) -> _LoopState:
         cands, beam_exp = _prepare_expansion(g, st, cfg)
         fill_before = _hash_fill(st.vis_ids)
         beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps = _expand(
-            g, x, q, cands, beam_exp, st, cfg
+            g, x, q, cands, beam_exp, st, cfg, enc
         )
         n_comps = st.n_comps + comps
         # every computed distance must land in the D array; a fill delta below
@@ -285,7 +326,9 @@ def coarse_config(cfg: SearchConfig) -> SearchConfig:
     """The config of the short coarse-graph EHC pass implied by a
     ``seed_mode="coarse"`` config: top-``coarse_top`` over a small beam and
     few iterations, random seeding (so the recursion terminates), LGD
-    filtering off (the landmark graph is tiny and routing-only)."""
+    filtering off (the landmark graph is tiny and routing-only), and exact
+    fp32 distances (the landmark table is tiny — compressing it buys nothing
+    and would demand a second enc table for the coarse points)."""
     return dataclasses.replace(
         cfg,
         k=cfg.coarse_top,
@@ -295,6 +338,7 @@ def coarse_config(cfg: SearchConfig) -> SearchConfig:
         use_lgd_mask=False,
         hard_diversify=False,
         seed_mode="random",
+        precision="fp32",
     )
 
 
@@ -305,6 +349,7 @@ def init_state(
     key: Array,
     cfg: SearchConfig,
     coarse=None,
+    enc=None,
 ) -> _LoopState:
     """Pre-loop search state: entry points scored, hashed, and merged into
     an otherwise-empty beam (Alg. 1 line 5).  Public so benchmarks and the
@@ -354,8 +399,14 @@ def init_state(
     seeds = jnp.where(segments.mask_row_duplicates(seeds), -1, seeds)
     in_range = (seeds >= 0) & (seeds < g.n_valid)
     seeds = jnp.where(in_range & g.alive[jnp.maximum(seeds, 0)], seeds, -1)
+    # Seed distances enter the beam and the visited hash, so they follow the
+    # engine precision for bf16/int8 (those ARE the engine's distances) but
+    # stay exact under pq — ADC scores never land in the hash by policy, and
+    # p seeds are too few for the prerank to pay for itself.
+    seed_precision = cfg.precision if cfg.precision in ("bf16", "int8") else "fp32"
     seed_dist = ops.gather_distance(
-        q, x, seeds, cfg.metric, sq_norms=g.sq_norms, use_pallas=cfg.use_pallas
+        q, x, seeds, cfg.metric, sq_norms=g.sq_norms, dispatch=cfg.dispatch,
+        enc=enc if seed_precision != "fp32" else None, precision=seed_precision,
     )
 
     beam_ids = jnp.full((B, e), -1, jnp.int32)
@@ -405,6 +456,7 @@ def search(
     key: Array,
     cfg: SearchConfig,
     coarse=None,
+    enc=None,
 ) -> SearchResult:
     """Batched EHC search of queries q against graph g over dataset x.
 
@@ -416,11 +468,25 @@ def search(
       cfg: static search configuration.
       coarse: ``core.hierarchy.CoarseLevel`` operand, required when
         ``cfg.seed_mode == "coarse"`` (ignored otherwise).
+      enc: ``kernels.precision.EncodedData`` companion table matching
+        ``cfg.precision`` (ignored for fp32).  Derived from ``x`` at trace
+        time when absent — fine for one-off calls, but persistent callers
+        (``index.lifecycle.OnlineIndex``) pass a cached table so encoding
+        isn't redone per search; int8 reuses the graph-resident
+        ``g.row_scale`` cache either way.
 
     Returns: SearchResult (top-k per lane + the comparison log).
     """
-    st = init_state(g, x, q, key, cfg, coarse=coarse)
-    step = _make_step(g, x, q, cfg)
+    if cfg.precision != "fp32" and enc is None:
+        reuse_scale = (
+            cfg.precision == "int8" and g.row_scale.shape[0] == x.shape[0]
+        )
+        enc = precision_lib.encode_dataset(
+            x, cfg.precision,
+            row_scale=g.row_scale if reuse_scale else None,
+        )
+    st = init_state(g, x, q, key, cfg, coarse=coarse, enc=enc)
+    step = _make_step(g, x, q, cfg, enc)
     st = jax.lax.while_loop(
         lambda s: (~jnp.all(s.done)) & (s.it < cfg.max_iters), step, st
     )

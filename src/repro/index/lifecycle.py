@@ -69,6 +69,8 @@ class OnlineIndex:
     growth_factor: float = 2.0  # amortized-doubling factor
     last_compact_map: Optional[np.ndarray] = None  # old->new rows, last compact
     pending_key: Optional[Array] = None  # PRNG key stashed by buffered adds
+    pq_codebook: Optional[Array] = None  # trained PQ code space (precision="pq")
+    _enc: object = None  # cached kernels.precision.EncodedData (serving table)
     _ledger_synced: bool = False  # reconciliation ran (clones inherit True)
 
     def __post_init__(self):
@@ -222,6 +224,7 @@ class OnlineIndex:
         else:
             g, _ = out
         self.graph, self.items = g, items
+        self._enc = None  # compressed serving table re-derives lazily
         # drained only after the wave landed: a failure above (growth OOM,
         # insert error) leaves the buffer intact for retry, not silently lost
         self.pending = ()
@@ -269,6 +272,7 @@ class OnlineIndex:
                 self.coarse, jnp.asarray(newly_dead, jnp.int32)
             )
         self.free_ids = self.free_ids + tuple(int(i) for i in newly_dead)
+        self._enc = None  # victims' rows must drop out of the serving table
         return self
 
     def compact(self) -> np.ndarray:
@@ -287,6 +291,7 @@ class OnlineIndex:
             self.coarse = hierarchy.remap_rows(self.coarse, id_map)
         self.free_ids = ()
         self.last_compact_map = np.asarray(id_map)
+        self._enc = None  # rows moved; compressed serving table re-derives
         return self.last_compact_map
 
     def _ensure_room(self, m: int) -> None:
@@ -338,6 +343,31 @@ class OnlineIndex:
                 )
         return self.coarse
 
+    def _ensure_enc(self):
+        """Lazily (re-)encode the compressed serving table when the build
+        precision is not fp32 — the ``_ensure_coarse`` pattern for the
+        distance engine's companion data.  Invalidated by every mutation of
+        the rows (``flush``/``remove``/``compact``), re-derived once here
+        rather than per search; int8 scales come from the graph-resident
+        ``row_scale`` cache, and the PQ codebook is trained ONCE and pinned
+        (``pq_codebook``) so churn never shifts the code space under a
+        serving replica."""
+        precision = self.build_cfg.precision
+        if precision == "fp32":
+            return None
+        if self._enc is None:
+            from repro.kernels import precision as precision_lib
+
+            self._enc = precision_lib.encode_dataset(
+                self.items.astype(jnp.float32),
+                precision,
+                row_scale=self.graph.row_scale if precision == "int8" else None,
+                codebook=self.pq_codebook if precision == "pq" else None,
+            )
+            if precision == "pq" and self.pq_codebook is None:
+                self.pq_codebook = self._enc.codebook
+        return self._enc
+
     def search(
         self,
         queries: Array,
@@ -349,7 +379,10 @@ class OnlineIndex:
         """Per-query EHC search (flushes buffered adds first).
 
         This is the raw (B, k) search surface; the serving-side merge/dedupe
-        and score convention live in ``serve.retrieval.retrieve``.
+        and score convention live in ``serve.retrieval.retrieve``.  Serving
+        inherits the builder's precision (``search_config``); the compressed
+        companion table is cached on the index and re-derived only after
+        catalog churn.
         """
         self.flush()
         if key is None:
@@ -361,14 +394,17 @@ class OnlineIndex:
             if coarse is None:  # nothing alive to derive from
                 scfg = dataclasses.replace(scfg, seed_mode="random")
         return search_lib.search(
-            self.graph, self.items, queries, key, scfg, coarse=coarse
+            self.graph, self.items, queries, key, scfg, coarse=coarse,
+            enc=self._ensure_enc(),
         )
 
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> str:
-        """Snapshot graph + data + config + coarse level (flushes buffered
-        adds first)."""
+        """Snapshot graph + data + config + coarse level + PQ codebook
+        (flushes buffered adds first).  The compressed tiles/codes/scales are
+        not persisted — they re-derive canonically on load — but a trained PQ
+        codebook is, so the replica serves the same code space."""
         self.flush()
         return snapshot_lib.save(
             path,
@@ -376,6 +412,7 @@ class OnlineIndex:
             self.items,
             self.build_cfg,
             coarse=self.coarse,
+            pq_codebook=self.pq_codebook,
             extra_meta={"free_ids": [int(i) for i in self.free_ids]},
         )
 
@@ -385,12 +422,17 @@ class OnlineIndex:
 
         Pre-v2 snapshots carry no coarse payload; under
         ``seed_mode="coarse"`` the level is re-derived here (offline
-        maintenance) so the replica serves coarsely from the first query."""
-        g, items, cfg, manifest, coarse = snapshot_lib.load(path, with_coarse=True)
+        maintenance) so the replica serves coarsely from the first query.
+        Pre-v3 snapshots carry no PQ codebook; a ``precision="pq"`` config
+        then retrains deterministically from the restored items on first
+        search."""
+        g, items, cfg, manifest, coarse, pq_cb = snapshot_lib.load(
+            path, with_coarse=True, with_pq_codebook=True
+        )
         free = tuple(manifest.get("extra", {}).get("free_ids", []))
         idx = cls(
             graph=g, items=items, build_cfg=cfg, coarse=coarse, free_ids=free,
-            **lifecycle_kw,
+            pq_codebook=pq_cb, **lifecycle_kw,
         )
         if coarse is None and cfg.seed_mode == "coarse":
             idx._ensure_coarse()

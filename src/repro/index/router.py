@@ -232,7 +232,7 @@ class ShardedIndex:
         g, _ = merge_lib.merge_subgraphs(graphs, x, scfg, key, coarses=coarses)
         g, _ = nndescent.refine(
             g, x, base.metric, rounds=refine_rounds,
-            use_pallas=base.build_cfg.use_pallas,
+            dispatch=base.build_cfg.dispatch,
         )
         # no merged coarse level: the shard levels live in shard-local id
         # spaces; under seed_mode="coarse" the merged index re-derives one

@@ -19,11 +19,14 @@ and dtype drift:
 
   * every array is cast back to its canonical dtype on load (a payload
     written by a future JAX that changed a default dtype still restores);
-  * ``sq_norms`` is NOT stored: it is re-derived through
-    ``graph.squared_norms`` / ``graph.attach_sq_norms`` — the single
-    definition of the norm-cache contents — so a snapshot can never smuggle
-    in a stale cache, and a format bump that changes the cache definition
-    re-materializes it correctly on load;
+  * the ``sq_norms``/``row_scale`` caches are persisted VERBATIM by v3
+    writers and restored verbatim (they are graph state maintained by the
+    same owners as every other field, and re-deriving them on load is not
+    bit-stable: XLA codegen differences between the jitted build owners and
+    an eager load-time recompute shift ~4% of entries by one ulp, breaking
+    the round-trip bit-exactness contract).  v1/v2 payloads carry neither
+    cache and re-derive both through ``graph.attach_sq_norms`` — the single
+    definition of the cache contents;
   * the reverse side is validated against the structural contract of
     ``graph.rebuild_reverse`` (ids in range, live owners); a payload that
     predates ``rev_lam`` (or fails validation) is repaired by rebuilding the
@@ -44,6 +47,31 @@ Format history:
     re-derives a level when serving wants one.  Bump policy (ROADMAP): add
     arrays/keys without a bump when absence has a sound default; bump when
     the READER must behave differently to restore correctly.
+  * v3 — precision API (``BuildConfig.precision``/``dispatch`` in the config
+    dict) and an optional ``pq_codebook`` payload array: the (M, K, dsub)
+    trained PQ codebook, persisted so a restored ``precision="pq"`` index
+    serves the SAME code space it was built with (retraining on a churned
+    dataset would silently shift every ADC score).  v3 also persists the
+    ``sq_norms``/``row_scale`` cache tables verbatim (see restore policy
+    above).  The per-row PQ *codes* and the bf16/int8 tiles are NOT stored —
+    they re-derive from ``items`` through the one definition in
+    ``kernels.precision``.
+
+    Version-compat matrix (reader = this module):
+
+        payload   reader<=2                reader v3
+        v1        loads (coarse=None)      loads; fp32 config defaults;
+                                           row_scale/enc re-derived
+        v2        loads                    loads; fp32 config defaults;
+                                           row_scale/enc re-derived
+        v3        REFUSED (newer format)   loads; pq_codebook + caches
+                                           restored verbatim, codes/tiles
+                                           re-derived
+
+    v1/v2 payloads carry no precision state at all — on a v3 reader they
+    restore as fp32 indexes whose ``row_scale`` table is re-derived by
+    ``attach_sq_norms``, and a caller switching them to a compressed
+    precision triggers a fresh (deterministic) encode.
 """
 
 from __future__ import annotations
@@ -64,7 +92,7 @@ from repro.core.graph import KNNGraph
 
 Array = jax.Array
 
-FORMAT_VERSION = 2
+FORMAT_VERSION = 3
 
 MANIFEST_NAME = "manifest.json"
 PAYLOAD_NAME = "payload.npz"
@@ -89,6 +117,11 @@ _CANONICAL = {
     "coarse_nbr_ids": np.int32,
     "coarse_nbr_dist": np.float32,
     "coarse_nbr_lam": np.int32,
+    # v3: trained PQ codebook (codes/tiles re-derive from items) + the cache
+    # tables, persisted verbatim for bit-exact restore
+    "pq_codebook": np.float32,
+    "sq_norms": np.float32,
+    "row_scale": np.float32,
 }
 
 
@@ -111,6 +144,7 @@ def save(
     cfg: construct.BuildConfig,
     *,
     coarse=None,
+    pq_codebook: Optional[Array] = None,
     extra_meta: Optional[dict] = None,
 ) -> str:
     """Write a versioned snapshot of (graph, data, config) under ``path``.
@@ -120,9 +154,11 @@ def save(
     float32 — lossless for bf16 — with the original dtype recorded in the
     manifest and restored on load.  ``coarse`` (optional
     ``core.hierarchy.CoarseLevel``) persists as ``coarse_*`` arrays —
-    forward coarse graph only; reverse/norms re-derive on load.  The write
-    is crash-atomic (staged then swapped in), and overwriting an existing
-    snapshot is safe.
+    forward coarse graph only; reverse/norms re-derive on load.
+    ``pq_codebook`` (optional, v3) persists the trained (M, K, dsub) PQ
+    codebook so a ``precision="pq"`` index restores into the same code
+    space; per-row codes re-derive on demand.  The write is crash-atomic
+    (staged then swapped in), and overwriting an existing snapshot is safe.
     """
     arrays = {
         "nbr_ids": np.asarray(g.nbr_ids),
@@ -133,6 +169,8 @@ def save(
         "rev_ptr": np.asarray(g.rev_ptr),
         "alive": np.asarray(g.alive),
         "items": np.asarray(items.astype(jnp.float32)),
+        "sq_norms": np.asarray(g.sq_norms),
+        "row_scale": np.asarray(g.row_scale),
     }
     if coarse is not None:
         arrays.update(
@@ -144,6 +182,8 @@ def save(
             coarse_nbr_dist=np.asarray(coarse.graph.nbr_dist),
             coarse_nbr_lam=np.asarray(coarse.graph.nbr_lam),
         )
+    if pq_codebook is not None:
+        arrays["pq_codebook"] = np.asarray(pq_codebook)
     arrays = {k: v.astype(_CANONICAL[k]) for k, v in arrays.items()}
     manifest = {
         "format_version": FORMAT_VERSION,
@@ -202,14 +242,21 @@ def _reverse_ok(g: KNNGraph) -> bool:
 
 
 def load(
-    path: str, *, validate_reverse: bool = True, with_coarse: bool = False
+    path: str,
+    *,
+    validate_reverse: bool = True,
+    with_coarse: bool = False,
+    with_pq_codebook: bool = False,
 ):
     """Restore (graph, items, config, manifest) from a snapshot directory.
 
     With ``with_coarse`` the return gains a fifth element: the restored
     ``core.hierarchy.CoarseLevel``, or None when the snapshot predates v2
     (or was saved without one) — callers wanting coarse seeding then
-    re-derive via ``hierarchy.derive_coarse``.
+    re-derive via ``hierarchy.derive_coarse``.  With ``with_pq_codebook``
+    it gains a further element: the persisted (M, K, dsub) PQ codebook, or
+    None when the snapshot predates v3 (or was saved without one) — PQ
+    serving then retrains deterministically from the restored items.
 
     Raises ``ValueError`` for snapshots written by a NEWER format than this
     reader understands; older formats load with repairs (see module doc).
@@ -279,10 +326,18 @@ def load(
         alive=jnp.asarray(alive_np),
         n_valid=n_valid,
         sq_norms=jnp.zeros((cap,), jnp.float32),
+        row_scale=jnp.zeros((cap,), jnp.float32),
     )
-    # norm cache: always re-derived from the data through the one definition
-    # of its contents — never trusted from disk
-    g = graph_lib.attach_sq_norms(g, items.astype(jnp.float32))
+    # norm and int8-scale caches: v3 payloads carry them verbatim (re-derive
+    # is one-ulp unstable across jit/eager codegen — see module doc); older
+    # payloads re-derive through the one definition of the cache contents
+    if "sq_norms" in raw and "row_scale" in raw:
+        g = g._replace(
+            sq_norms=jnp.asarray(arr("sq_norms")),
+            row_scale=jnp.asarray(arr("row_scale")),
+        )
+    else:
+        g = graph_lib.attach_sq_norms(g, items.astype(jnp.float32))
     # reverse side: repair payloads that predate rev_lam or fail the
     # structural contract by rebuilding from the forward lists
     rev_missing = "rev_ids" not in raw or "rev_lam" not in raw
@@ -290,7 +345,12 @@ def load(
         g = graph_lib.rebuild_reverse(g)
 
     cfg = _config_from_dict(manifest.get("build_config", {}))
+    pq_cb = None
+    if "pq_codebook" in raw:
+        pq_cb = jnp.asarray(arr("pq_codebook"))
     if not with_coarse:
+        if with_pq_codebook:
+            return g, items, cfg, manifest, pq_cb
         return g, items, cfg, manifest
 
     coarse = None
@@ -310,6 +370,7 @@ def load(
             alive=jnp.ones((L,), bool),
             n_valid=jnp.asarray(L, jnp.int32),
             sq_norms=jnp.zeros((L,), jnp.float32),
+            row_scale=jnp.zeros((L,), jnp.float32),
         )
         # same restore policy as the main graph: forward lists are the
         # payload, reverse side + norm cache re-derive canonically
@@ -322,4 +383,6 @@ def load(
             members=jnp.asarray(arr("coarse_members")),
             mem_ptr=jnp.asarray(arr("coarse_mem_ptr")),
         )
+    if with_pq_codebook:
+        return g, items, cfg, manifest, coarse, pq_cb
     return g, items, cfg, manifest, coarse

@@ -198,6 +198,8 @@ def expand_reference(
     metric: str = "l2",
     probes: int = 8,
     sq_norms: Optional[Array] = None,
+    enc=None,
+    precision: str = "fp32",
     pallas_distances: bool = False,
     interpret: Optional[bool] = None,
 ):
@@ -211,20 +213,32 @@ def expand_reference(
     giving the exact per-block numerics of the fused kernel — that variant
     is what the parity suite diffs ``fused_expand`` against bit-for-bit.
     ``sq_norms`` is the graph-resident ``‖x‖²`` cache (derived once per call
-    when absent).
+    when absent).  ``enc``/``precision`` select the compressed candidate
+    representation (``kernels.precision``) the distance gather fetches from;
+    fp32 leaves both paths untouched.
     """
+    if precision == "pq":
+        # PQ is a *rank*, not a distance: only exact distances may enter the
+        # visited hash / beam.  The ADC prerank + fp32 re-rank composition
+        # lives one layer up, in kernels.ops.expand_step.
+        raise ValueError("expansion kernels take fp32/bf16/int8; pq is an ops-level prerank")
     present, _, _ = hash_probe_state(vis_ids, cands, probes)
     fresh = (cands >= 0) & ~present
     cand_ids = jnp.where(fresh, cands, -1)
     if pallas_distances:
+        x_eng = x if enc is None or precision == "fp32" else enc.data
+        row_scale = enc.scale if enc is not None and precision == "int8" else None
         dists = _gather_dist.gather_distance(
-            q, x, cand_ids, metric=metric, sq_norms=sq_norms,
-            interpret=interpret,
+            q, x_eng, cand_ids, metric=metric, sq_norms=sq_norms,
+            row_scale=row_scale, interpret=interpret,
         )
     else:
         from repro.kernels import ref as _ref  # lazy: see module note
 
-        dists = _ref.gather_distance(q, x, cand_ids, metric, sq_norms=sq_norms)
+        dists = _ref.gather_distance(
+            q, x, cand_ids, metric, sq_norms=sq_norms,
+            enc=enc, precision=precision,
+        )
     return _probe_mask_record_merge(
         cands, dists, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, probes
     )
@@ -245,23 +259,21 @@ def _fused_expand_kernel(
     be_ref,  # (1, e) int32 beam expanded flags (bool cast at the boundary)
     vi_ref,  # (1, H) int32 visited-hash ids
     vd_ref,  # (1, H) f32 visited-hash dists
-    x_ref,  # (n, d) ANY (HBM)
-    obi_ref,  # (1, e) int32 out
-    obd_ref,  # (1, e) f32 out
-    obe_ref,  # (1, e) int32 out
-    ovi_ref,  # (1, H) int32 out
-    ovd_ref,  # (1, H) f32 out
-    oc_ref,  # (1, 1) int32 out — comparisons charged this step
-    dist_buf,  # (1, C_pad) f32 VMEM scratch
-    tile_buf,  # (2, C_blk, d) VMEM scratch (block double buffer)
-    sems,  # (2, C_blk) DMA semaphores
-    *,
+    *rest,  # [xs_ref (1, C_pad) — int8 only], x_ref ANY, outs, scratch
     n_cand: int,
     n_blocks: int,
     c_blk: int,
     metric: str,
     probes: int,
+    quantized: bool = False,
 ):
+    if quantized:
+        (xs_ref, x_ref, obi_ref, obd_ref, obe_ref, ovi_ref, ovd_ref, oc_ref,
+         dist_buf, tile_buf, sems) = rest
+    else:
+        (x_ref, obi_ref, obd_ref, obe_ref, ovi_ref, ovd_ref, oc_ref,
+         dist_buf, tile_buf, sems) = rest
+        xs_ref = None
     b = pl.program_id(0)
     q = q_ref[...].astype(jnp.float32)  # (1, d)
 
@@ -275,7 +287,7 @@ def _fused_expand_kernel(
     # only charge fresh candidates, matching the unfused path.
     _gather_dist.blocked_gather_phase(
         b, idx_ref, cand_ref, q, xn_ref, x_ref, dist_buf, tile_buf, sems,
-        n_blocks=n_blocks, c_blk=c_blk, metric=metric,
+        n_blocks=n_blocks, c_blk=c_blk, metric=metric, xs_ref=xs_ref,
     )
 
     # -- phase 2: probe / record / merge, all VMEM-resident ------------------
@@ -299,7 +311,9 @@ def _fused_expand_kernel(
     oc_ref[0, 0] = comps[0]
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "probes", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("metric", "probes", "interpret", "precision")
+)
 def fused_expand(
     q: Array,
     x: Array,
@@ -313,6 +327,8 @@ def fused_expand(
     metric: str = "l2",
     probes: int = 8,
     sq_norms: Optional[Array] = None,
+    enc=None,
+    precision: str = "fp32",
     interpret: Optional[bool] = None,
 ):
     """One fused EHC expansion step for a batch of queries.
@@ -320,8 +336,14 @@ def fused_expand(
     Same signature and return contract as ``expand_reference``:
     (beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps (B,) int32).
     ``sq_norms`` is the graph-resident ``‖x‖²`` cache backing the blocked
-    distance engine (derived once per call when absent).
+    distance engine (derived once per call when absent).  With
+    ``precision="bf16"``/``"int8"`` (and ``enc`` the matching
+    ``precision.EncodedData``) phase 1 DMAs the compressed table instead —
+    2-/1-byte candidate rows, cast at the block reduction; int8 also rides a
+    gathered scale operand.  fp32 keeps the exact pre-precision operands.
     """
+    if precision == "pq":
+        raise ValueError("expansion kernels take fp32/bf16/int8; pq is an ops-level prerank")
     if interpret is None:
         interpret = compat.default_interpret()
     kernel_metric = metric
@@ -342,29 +364,48 @@ def fused_expand(
         cands_p = jnp.pad(cands_p, ((0, 0), (0, cp - C)), constant_values=-1)
     xn = _gather_dist.gathered_sq_norms(x, cands_p, sq_norms)  # (B, cp)
 
+    x_eng = x if (enc is None or precision == "fp32") else enc.data
+    quantized = enc is not None and precision == "int8"
+
     kern = functools.partial(
         _fused_expand_kernel, n_cand=C, n_blocks=cp // cb, c_blk=cb,
-        metric=kernel_metric, probes=probes,
+        metric=kernel_metric, probes=probes, quantized=quantized,
     )
     row = lambda w: pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0))
+    in_specs = [
+        row(cp),  # cands (vector phase; first C entries are the originals)
+        row(d),  # q
+        row(cp),  # xn
+        row(e),  # beam_ids
+        row(e),  # beam_dist
+        row(e),  # beam_exp
+        row(H),  # vis_ids
+        row(H),  # vis_dist
+    ]
+    operands = [
+        cands_p,
+        cands_p,
+        q,
+        xn,
+        beam_ids,
+        beam_dist,
+        beam_exp.astype(jnp.int32),
+        vis_ids,
+        vis_dist,
+    ]
+    if quantized:
+        in_specs.append(row(cp))  # xs (gathered int8 dequant scales)
+        operands.append(_gather_dist.gathered_row_scales(cands_p, enc.scale))
+    in_specs.append(pl.BlockSpec(memory_space=compat.ANY))  # x
+    operands.append(x_eng)
     grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B,),
-        in_specs=[
-            row(cp),  # cands (vector phase; first C entries are the originals)
-            row(d),  # q
-            row(cp),  # xn
-            row(e),  # beam_ids
-            row(e),  # beam_dist
-            row(e),  # beam_exp
-            row(H),  # vis_ids
-            row(H),  # vis_dist
-            pl.BlockSpec(memory_space=compat.ANY),  # x
-        ],
+        in_specs=in_specs,
         out_specs=[row(e), row(e), row(e), row(H), row(H), row(1)],
         scratch_shapes=[
             compat.VMEM((1, cp), jnp.float32),
-            compat.VMEM((2, cb, d), jnp.float32),
+            compat.VMEM((2, cb, d), x_eng.dtype),  # tile in storage dtype
             compat.SemaphoreType.DMA((2, cb)),
         ],
     )
@@ -380,17 +421,6 @@ def fused_expand(
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        cands_p,
-        cands_p,
-        q,
-        xn,
-        beam_ids,
-        beam_dist,
-        beam_exp.astype(jnp.int32),
-        vis_ids,
-        vis_dist,
-        x,
-    )
+    )(*operands)
     bi, bd, be, vi, vd, comps = outs
     return bi, bd, be > 0, vi, vd, comps[:, 0]

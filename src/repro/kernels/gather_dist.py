@@ -66,7 +66,10 @@ def padded_c(n_cand: int) -> int:
     return -(-n_cand // cb) * cb
 
 
-def block_distance(q: Array, tile: Array, xn: Array, metric: str) -> Array:
+def block_distance(
+    q: Array, tile: Array, xn: Array, metric: str,
+    xscale: Optional[Array] = None,
+) -> Array:
     """Distances between one query and one block of candidate rows.
 
     The single in-kernel distance formula, shared by this kernel and the
@@ -75,9 +78,15 @@ def block_distance(q: Array, tile: Array, xn: Array, metric: str) -> Array:
 
     Args:
       q: (1, d) query.
-      tile: (C_blk, d) candidate rows.
+      tile: (C_blk, d) candidate rows — fp32, or a reduced-precision tile
+        (bf16/int8) cast to fp32 on read; accumulation is always fp32.
       xn: (1, C_blk) cached ``‖x‖²`` per row (consumed by l2 and cos;
         ignored by ip/dot/l1/chi2).
+      xscale: optional (1, C_blk) per-row int8 dequant scales
+        (``KNNGraph.row_scale`` gathered; 1 at padding).  Applied to the
+        *dot* term for the matmul metrics — the norm term stays exact from
+        the cache — and to the tile for l1/chi2.  None (fp32/bf16) leaves
+        the formula untouched, so the fp32 jaxpr is unchanged.
 
     Returns (1, C_blk) float32 distances.  ``"dot"`` is the raw inner
     product; ``"cos"`` expects a pre-normalized query and *raw* data rows —
@@ -85,11 +94,15 @@ def block_distance(q: Array, tile: Array, xn: Array, metric: str) -> Array:
     """
     q = q.astype(jnp.float32)
     tile = tile.astype(jnp.float32)
+    if xscale is not None and metric in ("l1", "chi2"):
+        tile = tile * xscale.reshape(-1, 1)
     if metric in ("l2", "ip", "dot", "cos"):
         dots = jax.lax.dot_general(
             q, tile, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )  # (1, C_blk) — one MXU pass covers the whole block
+        if xscale is not None:
+            dots = dots * xscale
         if metric == "l2":
             qn = jnp.sum(q * q, axis=1, keepdims=True)
             return jnp.maximum(qn + xn - 2.0 * dots, 0.0)
@@ -128,6 +141,19 @@ def gathered_sq_norms(x: Array, idx: Array, sq_norms: Optional[Array]) -> Array:
     return jnp.where(idx >= 0, sq_norms[safe].astype(jnp.float32), 0.0)
 
 
+def gathered_row_scales(idx: Array, row_scale: Array) -> Array:
+    """(B, C) candidate ids -> (B, C) float32 dequant scales; 1 at padding.
+
+    ``row_scale`` is the graph-resident int8 scale table
+    (``KNNGraph.row_scale``).  Zero entries (unallocated/removed rows, the
+    all-zero vector) map to 1 — mirroring ``precision.quantize_int8``'s
+    guard — so the engine never divides or multiplies by 0 into NaN lanes.
+    """
+    safe = jnp.clip(idx, 0, row_scale.shape[0] - 1)
+    s = row_scale[safe].astype(jnp.float32)
+    return jnp.where((idx >= 0) & (s > 0), s, 1.0)
+
+
 def blocked_gather_phase(
     b,  # scalar: which query lane (grid position)
     idx_ref,  # (B, C_pad) int32 SMEM (scalar prefetch) — drives the DMAs
@@ -142,6 +168,7 @@ def blocked_gather_phase(
     n_blocks: int,
     c_blk: int,
     metric: str,
+    xs_ref=None,  # (1, C_pad) f32 VMEM — int8 dequant scales (None: fp32/bf16)
 ):
     """The blocked candidate-distance phase, shared verbatim by the
     gather-distance kernel and the fused expansion kernel's phase 1 — one
@@ -149,6 +176,12 @@ def blocked_gather_phase(
 
     Block j+1's row DMAs are in flight while block j reduces on the
     MXU/VPU.  Padding lanes (id < 0) fetch row 0 and are masked to +inf.
+
+    Reduced precision rides the same discipline: ``x_ref``/``tile_buf`` may
+    be bf16 or int8 (cast-on-DMA — the tile lands in its storage dtype and
+    is cast to fp32 at the reduction), and ``xs_ref`` carries the gathered
+    int8 dequant scales.  With ``xs_ref=None`` and fp32 operands the body
+    traces to exactly the pre-precision jaxpr.
     """
 
     def row_copy(blk, r, slot):
@@ -186,7 +219,8 @@ def blocked_gather_phase(
         tile = tile_buf[slot].astype(jnp.float32)  # (C_blk, d)
         ids_blk = ids_ref[0:1, pl.ds(off, c_blk)]  # (1, C_blk)
         xn_blk = xn_ref[0:1, pl.ds(off, c_blk)]
-        dist = block_distance(q, tile, xn_blk, metric)
+        xs_blk = None if xs_ref is None else xs_ref[0:1, pl.ds(off, c_blk)]
+        dist = block_distance(q, tile, xn_blk, metric, xscale=xs_blk)
         out_ref[0:1, pl.ds(off, c_blk)] = jnp.where(ids_blk >= 0, dist, jnp.inf)
         return ()
 
@@ -198,20 +232,22 @@ def _gather_dist_kernel(
     ids_ref,  # (1, C_pad) int32 VMEM
     q_ref,  # (1, d) VMEM
     xn_ref,  # (1, C_pad) VMEM
-    x_ref,  # (n, d) ANY (HBM)
-    o_ref,  # (1, C_pad) VMEM
-    tile_buf,  # (2, C_blk, d) VMEM scratch
-    sems,  # (2, C_blk) DMA semaphores
-    *,
+    *rest,  # [xs_ref (1, C_pad) — int8 only], x_ref ANY, o_ref, tile_buf, sems
     n_blocks: int,
     c_blk: int,
     metric: str,
+    quantized: bool = False,
 ):
+    if quantized:
+        xs_ref, x_ref, o_ref, tile_buf, sems = rest
+    else:
+        x_ref, o_ref, tile_buf, sems = rest
+        xs_ref = None
     b = pl.program_id(0)
     q = q_ref[...].astype(jnp.float32)  # (1, d)
     blocked_gather_phase(
         b, idx_ref, ids_ref, q, xn_ref, x_ref, o_ref, tile_buf, sems,
-        n_blocks=n_blocks, c_blk=c_blk, metric=metric,
+        n_blocks=n_blocks, c_blk=c_blk, metric=metric, xs_ref=xs_ref,
     )
 
 
@@ -223,6 +259,7 @@ def gather_distance(
     *,
     metric: str = "l2",
     sq_norms: Optional[Array] = None,
+    row_scale: Optional[Array] = None,
     interpret: Optional[bool] = None,
 ) -> Array:
     """(b, d) queries, (n, d) data, (b, c) int32 ids -> (b, c) f32 distances.
@@ -231,6 +268,13 @@ def gather_distance(
     are derived once per call.  ``interpret=None`` resolves to compiled on
     TPU and interpret mode elsewhere — the execution-path *choice* (kernel vs
     pure-JAX reference) belongs to ``kernels.ops`` dispatch, not here.
+
+    Reduced precision: pass ``x`` as the *encoded* table (bf16 or int8 —
+    ``precision.EncodedData.data``) and, for int8, ``row_scale`` as the
+    graph-resident scale table.  The candidate blocks then move as 2- or
+    1-byte rows (cast-on-DMA) and dequantize at the block reduction; fp32
+    callers pass raw ``x`` and the kernel is unchanged.  PQ never reaches
+    this kernel — the ADC first-pass rank lives in ``kernels.ops``.
     """
     if interpret is None:
         interpret = compat.default_interpret()
@@ -248,24 +292,37 @@ def gather_distance(
     idx = idx.astype(jnp.int32)
     if cp != c:
         idx = jnp.pad(idx, ((0, 0), (0, cp - c)), constant_values=-1)
+    if x.dtype == jnp.int8 and sq_norms is None:
+        raise ValueError("int8 tables need the exact sq_norms cache")
     xn = gathered_sq_norms(x, idx, sq_norms)  # (b, cp)
+    quantized = x.dtype == jnp.int8
+    operands = [idx, idx, q, xn]
+    row = lambda w: pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0))
+    in_specs = [
+        row(cp),  # ids (vector phase masking)
+        row(d),  # q
+        row(cp),  # xn
+    ]
+    if quantized:
+        if row_scale is None:
+            raise ValueError("int8 tables need the row_scale table")
+        xs = gathered_row_scales(idx, row_scale)  # (b, cp)
+        operands.append(xs)
+        in_specs.append(row(cp))
+    operands.append(x)
+    in_specs.append(pl.BlockSpec(memory_space=compat.ANY))  # x
 
     kern = functools.partial(
-        _gather_dist_kernel, n_blocks=cp // cb, c_blk=cb, metric=kernel_metric
+        _gather_dist_kernel, n_blocks=cp // cb, c_blk=cb,
+        metric=kernel_metric, quantized=quantized,
     )
-    row = lambda w: pl.BlockSpec((1, w), lambda i, idx_ref: (i, 0))
     grid_spec = compat.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b,),
-        in_specs=[
-            row(cp),  # ids (vector phase masking)
-            row(d),  # q
-            row(cp),  # xn
-            pl.BlockSpec(memory_space=compat.ANY),  # x
-        ],
+        in_specs=in_specs,
         out_specs=row(cp),
         scratch_shapes=[
-            compat.VMEM((2, cb, d), jnp.float32),
+            compat.VMEM((2, cb, d), x.dtype),  # tile lands in storage dtype
             compat.SemaphoreType.DMA((2, cb)),
         ],
     )
@@ -274,5 +331,5 @@ def gather_distance(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
         interpret=interpret,
-    )(idx, idx, q, xn, x)
+    )(*operands)
     return out[:, :c]

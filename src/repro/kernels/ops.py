@@ -1,12 +1,31 @@
 """Dispatching wrappers over the Pallas kernels.
 
-Every call site in ``repro.core`` goes through these functions.  On TPU the
-Pallas kernels run compiled (``interpret=False``); on CPU the default is the
-pure-jnp reference path (fast under XLA:CPU) while ``use_pallas=True`` forces
-the interpreted kernel (what the correctness tests sweep).  The
-interpret-vs-compiled decision is made HERE (and only here) and passed down
-explicitly — the kernels' own ``interpret=None`` defaults merely resolve to
-the same backend check for direct callers.
+Every call site in ``repro.core`` goes through these functions, and the two
+execution-surface policies of the framework are resolved HERE and only here:
+
+* **dispatch** — which engine implementation runs.  One enum replaces the old
+  tri-state ``use_pallas`` flag:
+
+    - ``"auto"``      compiled Pallas kernel on TPU, pure-JAX reference
+                      elsewhere (the old ``use_pallas=None``);
+    - ``"pallas"``    the Pallas kernel — compiled on TPU, interpret mode
+                      elsewhere (the old ``use_pallas=True``);
+    - ``"interpret"`` the Pallas kernel in interpret mode everywhere (what
+                      kernel-correctness tests sweep, even on TPU);
+    - ``"reference"`` the pure-JAX reference path everywhere (the old
+                      ``use_pallas=False``).
+
+  The legacy ``use_pallas`` keyword is still accepted (None/True/False map to
+  auto/pallas/reference); config-level deprecation lives in
+  ``core.search.SearchConfig``.
+
+* **precision** — which candidate representation the engine fetches
+  (``"fp32"|"bf16"|"int8"|"pq"``, see ``kernels.precision``).  Callers pass
+  the raw dataset ``x`` plus the compressed companion ``enc``; no call site
+  ever handles dtypes itself.  ``"pq"`` composes as rank-then-rerank inside
+  ``expand_step``: ADC first-pass rank on the fresh candidates, exact fp32
+  distances for the surviving top ``rerank_keep`` — only exact distances
+  enter the visited hash or the beam.
 
 ``sq_norms`` / ``x_sq_norms`` thread the graph-resident ``‖x‖²`` cache
 (``KNNGraph.sq_norms``) into the blocked distance engine so no path — brute
@@ -26,11 +45,41 @@ from repro.kernels import compat
 from repro.kernels import distance as _distance
 from repro.kernels import expand as _expand
 from repro.kernels import gather_dist as _gather_dist
+from repro.kernels import precision as _precision
 from repro.kernels import ref as _ref
 
 Array = jax.Array
 
 _on_tpu = compat.on_tpu
+
+DISPATCHES = ("auto", "pallas", "interpret", "reference")
+
+
+def resolve_dispatch(
+    dispatch: Optional[str] = None, use_pallas: Optional[bool] = None
+) -> tuple[bool, bool]:
+    """The one resolution point for the execution-path enum.
+
+    Returns ``(use_kernel, interpret)``.  ``dispatch=None`` falls back to the
+    legacy ``use_pallas`` tri-state (None -> auto, True -> pallas, False ->
+    reference) so old callers and old snapshots keep working.
+    """
+    if dispatch is None:
+        if use_pallas is None:
+            dispatch = "auto"
+        else:
+            dispatch = "pallas" if use_pallas else "reference"
+    if dispatch == "auto":
+        return _on_tpu(), False
+    if dispatch == "pallas":
+        return True, not _on_tpu()
+    if dispatch == "interpret":
+        return True, True
+    if dispatch == "reference":
+        return False, False
+    raise ValueError(
+        f"unknown dispatch {dispatch!r}; expected one of {DISPATCHES}"
+    )
 
 
 def pairwise_distance(
@@ -39,7 +88,10 @@ def pairwise_distance(
     metric: str = "l2",
     *,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
     x_sq_norms: Optional[Array] = None,
+    enc: Optional[_precision.EncodedData] = None,
+    precision: str = "fp32",
     bm: int = 128,
     bn: int = 128,
     bd: int = 128,
@@ -47,11 +99,17 @@ def pairwise_distance(
     """(m, d) x (n, d) -> (m, n) float32 distances.
 
     ``x_sq_norms``: optional cached ``‖x‖²`` of the x side (l2 consumes it;
-    other metrics ignore it).
+    other metrics ignore it).  Compressed precisions run the reference
+    engine regardless of dispatch — pairwise feeds seeding/brute-force
+    tiles, not the expansion hot loop, and the Pallas pairwise kernel stays
+    fp32-only.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    use_kernel, _ = resolve_dispatch(dispatch, use_pallas)
+    if enc is not None and precision != "fp32":
+        return _ref.pairwise_distance(
+            q, x, metric, x_sq_norms=x_sq_norms, enc=enc, precision=precision
+        )
+    if use_kernel:
         return _distance.pairwise_distance(
             q, x, metric=metric, x_sq_norms=x_sq_norms,
             bm=bm, bn=bn, bd=bd, interpret=not _on_tpu(),
@@ -66,21 +124,38 @@ def gather_distance(
     metric: str = "l2",
     *,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
     sq_norms: Optional[Array] = None,
+    enc: Optional[_precision.EncodedData] = None,
+    precision: str = "fp32",
 ) -> Array:
     """(b, d) queries vs rows x[idx] -> (b, c) float32; inf at idx < 0.
 
     ``sq_norms``: optional (n,) graph-resident ``‖x‖²`` cache feeding the
-    blocked engine's norms decomposition.
+    blocked engine's norms decomposition.  ``enc``/``precision`` select the
+    candidate representation: bf16/int8 ride the kernel *or* reference
+    engine (per dispatch); ``"pq"`` is always the reference ADC rank — the
+    in-kernel tile path has no code-table form, and the exact re-rank
+    composes in ``expand_step``.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
-        return _gather_dist.gather_distance(
-            q, x, idx, metric=metric, sq_norms=sq_norms,
-            interpret=not _on_tpu(),
+    use_kernel, interpret = resolve_dispatch(dispatch, use_pallas)
+    compressed = enc is not None and precision != "fp32"
+    if compressed and precision == "pq":
+        return _ref.gather_distance(
+            q, x, idx, metric, sq_norms=sq_norms, enc=enc, precision=precision
         )
-    return _ref.gather_distance(q, x, idx, metric, sq_norms=sq_norms)
+    if use_kernel:
+        x_eng = enc.data if compressed else x
+        row_scale = enc.scale if compressed and precision == "int8" else None
+        return _gather_dist.gather_distance(
+            q, x_eng, idx, metric=metric, sq_norms=sq_norms,
+            row_scale=row_scale, interpret=interpret,
+        )
+    return _ref.gather_distance(
+        q, x, idx, metric, sq_norms=sq_norms,
+        enc=enc if compressed else None,
+        precision=precision if compressed else "fp32",
+    )
 
 
 def topk_smallest(dists: Array, ids: Array, k: int):
@@ -102,6 +177,10 @@ def expand_step(
     hash_probes: int = 8,
     sq_norms: Optional[Array] = None,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
+    enc: Optional[_precision.EncodedData] = None,
+    precision: str = "fp32",
+    rerank_keep: int = 0,
 ):
     """One EHC expansion step (Alg. 1/3 inner loop) for a batch of queries.
 
@@ -112,23 +191,74 @@ def expand_step(
     into the beam top-k.  Returns
     ``(beam_ids, beam_dist, beam_exp, vis_ids, vis_dist, comps)``.
 
-    Three-way dispatch (the policy ``SearchConfig.use_pallas`` documents):
-      * on TPU (``use_pallas`` None or True): the compiled fused Pallas
-        kernel (``kernels.expand.fused_expand``);
-      * ``use_pallas=True`` off-TPU: the same kernel in interpret mode (what
-        the parity/correctness tests sweep);
-      * otherwise: ``kernels.expand.expand_reference``, the pure-JAX op chain
-        XLA fuses into the surrounding jitted search loop.
+    Precision: ``"bf16"``/``"int8"`` fetch candidate rows from the
+    compressed table inside whichever engine dispatch selects.  ``"pq"``
+    runs rank-then-rerank: the fresh candidates get an ADC first-pass rank
+    from the code table, only the best ``rerank_keep`` go through the exact
+    fp32 expansion, and the ADC-scanned-but-dropped candidates still charge
+    ``comps`` (scanning-rate honesty — every fresh candidate was evaluated
+    once).  Only exact distances ever enter the visited hash or the beam.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if enc is not None and precision == "pq":
+        if rerank_keep <= 0:
+            raise ValueError("pq expansion needs rerank_keep > 0")
+        return _pq_rank_then_rerank(
+            q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
+            metric=metric, hash_probes=hash_probes, sq_norms=sq_norms,
+            use_pallas=use_pallas, dispatch=dispatch, enc=enc,
+            rerank_keep=rerank_keep,
+        )
+    use_kernel, interpret = resolve_dispatch(dispatch, use_pallas)
+    compressed = enc is not None and precision != "fp32"
+    if use_kernel:
         return _expand.fused_expand(
             q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
             metric=metric, probes=hash_probes, sq_norms=sq_norms,
-            interpret=not _on_tpu(),
+            enc=enc if compressed else None,
+            precision=precision if compressed else "fp32",
+            interpret=interpret,
         )
     return _expand.expand_reference(
         q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
         metric=metric, probes=hash_probes, sq_norms=sq_norms,
+        enc=enc if compressed else None,
+        precision=precision if compressed else "fp32",
     )
+
+
+def _pq_rank_then_rerank(
+    q, x, cands, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
+    *, metric, hash_probes, sq_norms, use_pallas, dispatch, enc, rerank_keep
+):
+    """ADC first-pass rank -> exact fp32 re-rank of the survivors.
+
+    The prerank never touches the visited hash: the same ``hash_probe_state``
+    the inner expansion will run classifies fresh candidates, the ADC ranks
+    them, and everything below the top ``rerank_keep`` is masked to -1 before
+    the (unchanged, exact) expansion step executes.  Dropped candidates are
+    *not* recorded anywhere — they may be rediscovered by a later expansion,
+    which re-charges them; that is the price of keeping the hash exact.
+    """
+    C = cands.shape[1]
+    keep = min(rerank_keep, C)
+    present, _, _ = _expand.hash_probe_state(vis_ids, cands, hash_probes)
+    fresh = (cands >= 0) & ~present
+    cand_ids = jnp.where(fresh, cands, -1)
+    adc = _ref.gather_distance(
+        q, x, cand_ids, metric, sq_norms=sq_norms, enc=enc, precision="pq"
+    )  # (B, C); +inf at masked
+    # survivors: the `keep` smallest ADC scores per row
+    _, sel = jax.lax.top_k(-adc, keep)  # (B, keep)
+    B_idx = jnp.broadcast_to(jnp.arange(q.shape[0])[:, None], sel.shape)
+    survive = jnp.zeros(cands.shape, bool).at[B_idx, sel].set(True)
+    cands_kept = jnp.where(survive, cands, -1)
+    out = expand_step(
+        q, x, cands_kept, beam_ids, beam_dist, beam_exp, vis_ids, vis_dist,
+        metric=metric, hash_probes=hash_probes, sq_norms=sq_norms,
+        use_pallas=use_pallas, dispatch=dispatch, enc=None, precision="fp32",
+    )
+    bi, bd, be, vi, vd, _comps_exact = out
+    # scanning-rate honesty: every fresh candidate cost one (ADC) evaluation;
+    # the exact re-ranks are a subset, not an addition.
+    comps = jnp.sum(fresh, axis=1).astype(jnp.int32)
+    return bi, bd, be, vi, vd, comps

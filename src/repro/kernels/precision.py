@@ -1,0 +1,253 @@
+"""Compressed candidate-table codecs for the blocked distance engine.
+
+The expansion hot loop is memory-bound (roofline arithmetic intensity
+~0.04), so bytes-per-candidate is the lever: this module defines the three
+reduced-precision representations the engine can fetch candidates from, and
+the single ``precision`` vocabulary the whole API speaks:
+
+* ``"fp32"``  — the uncompressed baseline; no encoding, the engine reads the
+  raw dataset and its path stays bit-identical to the pre-precision engine.
+* ``"bf16"``  — candidate rows stored bfloat16 (2 bytes/dim), cast to fp32 at
+  tile load; accumulation is always fp32.
+* ``"int8"``  — symmetric per-row quantization (1 byte/dim):
+  ``x8 = round(x / s)`` with ``s = max|x| / 127`` per row.  The scale table
+  is graph-resident (``KNNGraph.row_scale``, maintained next to
+  ``sq_norms``) and the engine applies it to the *dot product*, not the
+  tile: exact cached ``‖x‖²`` supplies the norm term of the decomposition,
+  so only the ``q·x`` term carries quantization error.
+* ``"pq"``    — product-quantization codes (``M`` bytes/row) for a cheap
+  first-pass rank by asymmetric distance (ADC); survivors are re-ranked with
+  exact fp32 distances inside the expansion step (``kernels.ops.expand_step``).
+
+``EncodedData`` is a pytree of arrays so it can ride through jitted callers;
+which fields are populated is a static function of the precision string, so
+pytree structure is stable per compiled call.
+
+ADC additivity: ``l2`` (squared), ``ip``/``dot``, ``l1`` and ``chi2`` all
+decompose as sums of per-subspace terms, so one (B, M, K) lookup table per
+query batch covers them.  ``cosine`` is not additive; it is served from the
+additive *dot* table plus the exact cached norms.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PRECISIONS = ("fp32", "bf16", "int8", "pq")
+
+# PQ defaults: dsub dims per subspace (M = d / dsub), K centroids per
+# subspace (uint8 codes).  d not divisible by _PQ_DSUB falls back to the
+# largest divisor of d that is <= _PQ_DSUB (worst case 1).
+_PQ_DSUB = 8
+_PQ_K = 256
+_PQ_TRAIN_SAMPLE = 2048
+_PQ_TRAIN_ITERS = 8
+
+
+def validate_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    return precision
+
+
+class EncodedData(NamedTuple):
+    """Compressed companion of a dataset, consumed by the distance engine.
+
+    Populated fields by precision (always the same structure for a given
+    precision string, so jitted callers see a stable pytree):
+
+    * bf16: ``data`` (n, d) bfloat16.
+    * int8: ``data`` (n, d) int8 + ``scale`` (n,) float32.
+    * pq:   ``codes`` (n, M) uint8 + ``codebook`` (M, K, dsub) float32.
+    """
+
+    data: Optional[Array] = None
+    scale: Optional[Array] = None
+    codes: Optional[Array] = None
+    codebook: Optional[Array] = None
+
+
+def pq_subspaces(d: int) -> int:
+    """Number of PQ subspaces for dimension d (largest dsub <= _PQ_DSUB)."""
+    for dsub in range(min(_PQ_DSUB, d), 0, -1):
+        if d % dsub == 0:
+            return d // dsub
+    return d
+
+
+def quantize_int8(x: Array, scale: Array) -> Array:
+    """(n, d) rows, (n,) per-row scales -> (n, d) int8 codes.
+
+    Zero scales (all-zero rows, unallocated slots) quantize through 1 so the
+    result is defined everywhere; the engine's dequant mirrors the guard.
+    """
+    safe = jnp.where(scale > 0, scale, 1.0)[:, None]
+    q = jnp.round(x.astype(jnp.float32) / safe)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def train_pq_codebook(x: Array, d: Optional[int] = None) -> Array:
+    """Train per-subspace centroids with a few Lloyd iterations.
+
+    Deterministic (head sample, strided init) so snapshot round trips and
+    repeated calls agree.  Returns (M, K, dsub) float32.
+    """
+    if d is None:
+        d = x.shape[1]
+    M = pq_subspaces(d)
+    dsub = d // M
+    n = x.shape[0]
+    ns = min(n, _PQ_TRAIN_SAMPLE)
+    sub = x[:ns].astype(jnp.float32).reshape(ns, M, dsub)
+    sub = jnp.moveaxis(sub, 1, 0)  # (M, ns, dsub)
+    init_idx = (jnp.arange(_PQ_K) * ns) // _PQ_K
+    cb = sub[:, jnp.clip(init_idx, 0, ns - 1), :]  # (M, K, dsub)
+
+    def assign(cb):
+        # (M, ns, K) squared distances via the matmul expansion.
+        xn = jnp.sum(sub * sub, axis=-1, keepdims=True)  # (M, ns, 1)
+        cn = jnp.sum(cb * cb, axis=-1)[:, None, :]  # (M, 1, K)
+        dots = jnp.einsum("msd,mkd->msk", sub, cb)
+        return jnp.argmin(xn + cn - 2.0 * dots, axis=-1)  # (M, ns)
+
+    def step(cb, _):
+        a = assign(cb)
+        onehot = jax.nn.one_hot(a, _PQ_K, dtype=jnp.float32)  # (M, ns, K)
+        counts = jnp.sum(onehot, axis=1)  # (M, K)
+        sums = jnp.einsum("msk,msd->mkd", onehot, sub)
+        new = sums / jnp.maximum(counts, 1.0)[:, :, None]
+        # empty clusters keep their old centroid
+        cb = jnp.where((counts > 0)[:, :, None], new, cb)
+        return cb, None
+
+    cb, _ = jax.lax.scan(step, cb, None, length=_PQ_TRAIN_ITERS)
+    return cb
+
+
+def pq_encode(x: Array, codebook: Array) -> Array:
+    """(n, d) rows -> (n, M) uint8 nearest-centroid codes."""
+    M, K, dsub = codebook.shape
+    n = x.shape[0]
+    sub = x.astype(jnp.float32).reshape(n, M, dsub)
+    cn = jnp.sum(codebook * codebook, axis=-1)  # (M, K)
+    dots = jnp.einsum("nmd,mkd->nmk", sub, codebook)
+    # ‖x_m‖² is constant per (n, m) — argmin over K ignores it.
+    codes = jnp.argmin(cn[None, :, :] - 2.0 * dots, axis=-1)
+    return codes.astype(jnp.uint8)
+
+
+def encode_dataset(
+    x: Array,
+    precision: str,
+    *,
+    row_scale: Optional[Array] = None,
+    codebook: Optional[Array] = None,
+) -> Optional[EncodedData]:
+    """Build the engine-side compressed table for ``x``.
+
+    ``row_scale``: reuse the graph-resident scale table when the caller has
+    one (int8); derived from ``x`` otherwise.  ``codebook``: reuse a trained
+    PQ codebook (snapshot restore); trained deterministically otherwise.
+    Returns None for fp32 — the engine reads the raw dataset directly.
+    """
+    validate_precision(precision)
+    if precision == "fp32":
+        return None
+    if precision == "bf16":
+        return EncodedData(data=x.astype(jnp.bfloat16))
+    if precision == "int8":
+        if row_scale is None:
+            from repro.core.graph import row_scales  # lazy: kernels load first
+
+            row_scale = row_scales(x)
+        return EncodedData(
+            data=quantize_int8(x, row_scale),
+            scale=row_scale.astype(jnp.float32),
+        )
+    # pq
+    if codebook is None:
+        codebook = train_pq_codebook(x)
+    return EncodedData(codes=pq_encode(x, codebook), codebook=codebook)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def adc_tables(q: Array, codebook: Array, metric: str) -> Array:
+    """(B, d) queries -> (B, M, K) per-subspace ADC lookup tables.
+
+    Additive metrics get their own per-subspace term; ``cosine`` gets the
+    *dot* table (the caller divides by the exact cached norms).
+    """
+    B, d = q.shape
+    M, K, dsub = codebook.shape
+    qs = q.astype(jnp.float32).reshape(B, M, dsub)
+    if metric in ("l2",):
+        qn = jnp.sum(qs * qs, axis=-1, keepdims=True)  # (B, M, 1)
+        cn = jnp.sum(codebook * codebook, axis=-1)[None]  # (1, M, K)
+        dots = jnp.einsum("bmd,mkd->bmk", qs, codebook)
+        return jnp.maximum(qn + cn - 2.0 * dots, 0.0)
+    if metric in ("ip", "dot", "cosine", "cos"):
+        dots = jnp.einsum("bmd,mkd->bmk", qs, codebook)
+        return -dots if metric == "ip" else dots
+    if metric == "l1":
+        return jnp.sum(
+            jnp.abs(qs[:, :, None, :] - codebook[None]), axis=-1
+        )
+    if metric == "chi2":
+        num = (codebook[None] - qs[:, :, None, :]) ** 2
+        den = codebook[None] + qs[:, :, None, :]
+        return jnp.sum(
+            jnp.where(den > 1e-12, num / jnp.maximum(den, 1e-12), 0.0), axis=-1
+        )
+    raise KeyError(metric)
+
+
+def adc_gather(
+    lut: Array, codes: Array, idx: Array, metric: str,
+    sq_norms: Optional[Array] = None,
+) -> Array:
+    """ADC distances for gathered candidates.
+
+    Args:
+      lut: (B, M, K) from ``adc_tables``.
+      codes: (n, M) uint8 code table.
+      idx: (B, C) candidate ids (< 0 = padding -> +inf).
+      sq_norms: exact ``‖x‖²`` cache — required for cosine (denominator).
+
+    Returns (B, C) float32 approximate distances.
+    """
+    B, M, K = lut.shape
+    C = idx.shape[1]
+    safe = jnp.clip(idx, 0, codes.shape[0] - 1)
+    cand_codes = codes[safe].astype(jnp.int32)  # (B, C, M)
+    flat_idx = (jnp.arange(M, dtype=jnp.int32)[None, None, :] * K + cand_codes)
+    terms = jnp.take_along_axis(
+        lut.reshape(B, M * K), flat_idx.reshape(B, C * M), axis=1
+    ).reshape(B, C, M)
+    d = jnp.sum(terms, axis=-1)
+    if metric in ("cosine", "cos"):
+        if sq_norms is None:
+            raise ValueError("cosine ADC requires the sq_norms cache")
+        xn = sq_norms[safe].astype(jnp.float32)
+        d = 1.0 - d / jnp.maximum(jnp.sqrt(xn), 1e-12)
+    elif metric == "ip":
+        pass  # lut already negated
+    return jnp.where(idx >= 0, d.astype(jnp.float32), jnp.inf)
+
+
+def bytes_per_dim(precision: str) -> float:
+    """Candidate-fetch bytes per dimension for the roofline report.
+
+    PQ reads one code byte per subspace (dsub dims), i.e. 1/dsub bytes per
+    dim for the first-pass rank; the report scales by the actual d.
+    """
+    return {"fp32": 4.0, "bf16": 2.0, "int8": 1.0, "pq": 1.0 / _PQ_DSUB}[
+        validate_precision(precision)
+    ]

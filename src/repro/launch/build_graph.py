@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--coarse-landmarks", type=int, default=None, metavar="L",
                     help="landmark count for --seed-mode coarse (default ~4·√n)")
     ap.add_argument("--wave", type=int, default=512)
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "int8", "pq"],
+                    help="distance-engine representation for the insertion "
+                         "searches (kernels.precision): compressed tiles "
+                         "(bf16/int8) or PQ rank-then-rerank")
     ap.add_argument("--parallel-shards", type=int, default=1, metavar="S",
                     help="divide-and-conquer build: S concurrent sub-graphs "
                          "merged via core.merge.symmetric_merge (S=1: the "
@@ -57,7 +62,8 @@ def main():
     x = synthetic.make(args.kind, jax.random.PRNGKey(0), args.n, args.d)
     cfg = construct.BuildConfig(
         k=args.k, metric=args.metric, wave=args.wave,
-        lgd=(args.algo == "lgd"), beam=max(40, args.k), use_pallas=False,
+        lgd=(args.algo == "lgd"), beam=max(40, args.k), dispatch="reference",
+        precision=args.precision,
         seed_mode=args.seed_mode, coarse_landmarks=args.coarse_landmarks,
     )
 
@@ -102,7 +108,8 @@ def main():
     if args.eval:
         tids, _ = brute.brute_force_knn(
             x, x, args.k, args.metric,
-            exclude_ids=jnp.arange(args.n, dtype=jnp.int32), use_pallas=False)
+            exclude_ids=jnp.arange(args.n, dtype=jnp.int32),
+            dispatch="reference")
         r1 = float(brute.recall_at_k(g.nbr_ids[:, :1], tids[:, :1], 1))
         rk = float(brute.recall_at_k(g.nbr_ids, tids, args.k))
         print(f"graph recall@1={r1:.4f} recall@{args.k}={rk:.4f}")

@@ -62,17 +62,22 @@ def build_index(
     key: Optional[Array] = None,
     beam: int = 40,
     use_pallas: Optional[bool] = None,
+    dispatch: Optional[str] = None,
+    precision: str = "fp32",
 ) -> OnlineIndex:
     """Index a candidate bank with online LGD construction.
 
-    ``use_pallas`` follows the three-way dispatch of ``SearchConfig``: the
-    default ``None`` rides the fused Pallas expansion kernel on TPU and the
-    pure-JAX reference elsewhere; the choice is stored in ``build_cfg`` so
-    serving (``retrieve``) and catalog churn (``add_items``, via
-    ``dynamic.insert``) run the same path as the build.
+    ``dispatch`` follows the four-way enum of ``SearchConfig`` (the default
+    ``"auto"`` rides the fused Pallas expansion kernel on TPU and the
+    pure-JAX reference elsewhere); ``use_pallas`` is the deprecated
+    tri-state spelling.  ``precision`` selects the distance-engine
+    representation (``"fp32"|"bf16"|"int8"|"pq"``).  All three are stored in
+    ``build_cfg`` so serving (``retrieve``) and catalog churn
+    (``add_items``, via ``dynamic.insert``) run the same path as the build.
     """
     cfg = construct.BuildConfig(
-        k=k, metric=metric, wave=wave, lgd=True, beam=beam, use_pallas=use_pallas
+        k=k, metric=metric, wave=wave, lgd=True, beam=beam,
+        use_pallas=use_pallas, dispatch=dispatch, precision=precision,
     )
     return OnlineIndex.build(items, cfg, capacity=capacity, key=key)
 

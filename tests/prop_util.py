@@ -27,6 +27,7 @@ from repro.core.graph import (
     graph_invariants_ok,
     grow_graph,
     rebuild_reverse,
+    row_scales,
     squared_norms,
     trim_graph,
 )
@@ -97,6 +98,24 @@ def assert_norm_cache(g: KNNGraph, x: np.ndarray, context: str = "") -> None:
     assert np.all(sq[~live] == 0.0), f"norm cache nonzero on dead rows {context}"
 
 
+def assert_scale_table(g: KNNGraph, x: np.ndarray, context: str = "") -> None:
+    """The PR-7 scale-table invariant (mirrors the norm cache): exact
+    ``max|x_i|/127`` for alive allocated rows, 0 everywhere else.  Zero
+    scales dequantize through 1, so a stale nonzero entry on a dead row
+    would silently corrupt int8 distances after the row is recycled."""
+    sc = np.asarray(g.row_scale)
+    want = np.asarray(row_scales(jnp.asarray(x[: g.capacity])))
+    if want.shape[0] < g.capacity:  # grown graphs: unallocated tail rows
+        want = np.pad(want, (0, g.capacity - want.shape[0]))
+    rows = np.arange(g.capacity)
+    live = (rows < int(g.n_valid)) & np.asarray(g.alive)
+    np.testing.assert_allclose(
+        sc[live], want[live], rtol=1e-6,
+        err_msg=f"scale table drifted on alive rows {context}",
+    )
+    assert np.all(sc[~live] == 0.0), f"scale table nonzero on dead rows {context}"
+
+
 # ---------------------------------------------------------------------------
 # Checkers (one property each)
 # ---------------------------------------------------------------------------
@@ -106,6 +125,7 @@ def check_generated_graph_invariants(seed: int, n: int, k: int) -> None:
     g, x = make_graph(seed, n, k)
     assert_invariants(g, "(freshly generated)")
     assert_norm_cache(g, x, "(freshly generated)")
+    assert_scale_table(g, x, "(freshly generated)")
 
 
 def check_remove_preserves_invariants(seed: int, n: int, k: int, n_rm: int) -> None:
@@ -117,6 +137,7 @@ def check_remove_preserves_invariants(seed: int, n: int, k: int, n_rm: int) -> N
     g2 = dynamic.remove(g, jnp.asarray(x), jnp.asarray(victims), "l2")
     assert_invariants(g2, f"(after remove {victims.tolist()})")
     assert_norm_cache(g2, x, "(after remove)")
+    assert_scale_table(g2, x, "(after remove)")
     dead = set(int(v) for v in victims if 0 <= v < n)
     alive = np.asarray(g2.alive)
     assert not any(alive[v] for v in dead)
@@ -139,6 +160,34 @@ def check_grow_trim_cache_carry(seed: int, n: int, k: int, extra: int) -> None:
             np.asarray(getattr(g3, field)), np.asarray(getattr(g, field)),
             err_msg=f"trim(grow(g)) != g on {field}",
         )
+
+
+def check_scale_table_lifecycle(seed: int, n0: int, extra: int, k: int) -> None:
+    """``KNNGraph.row_scale`` rides every lifecycle op exactly like the norm
+    cache: build -> grow -> insert -> remove -> compact, with zeros on
+    recycled rows at every stage."""
+    import jax
+
+    from repro.core import construct
+
+    rng = np.random.RandomState(seed)
+    x = rng.rand(n0 + extra, 8).astype(np.float32)
+    cfg = construct.BuildConfig(
+        k=k, metric="l2", wave=32, beam=16, n_seeds=4, max_iters=20,
+        dispatch="reference",
+    )
+    g, _ = construct.build(jnp.asarray(x[:n0]), cfg, jax.random.PRNGKey(seed))
+    assert_scale_table(g, x[:n0], "(after build)")
+    g = grow_graph(g, n0 + extra)
+    assert_scale_table(g, x, "(after grow)")
+    g, _ = dynamic.insert(g, jnp.asarray(x), extra, cfg,
+                          jax.random.PRNGKey(seed + 1))
+    assert_scale_table(g, x, "(after insert)")
+    victims = rng.choice(n0 + extra, size=min(3, n0), replace=False).astype(np.int32)
+    g = dynamic.remove(g, jnp.asarray(x), jnp.asarray(victims), "l2")
+    assert_scale_table(g, x, "(after remove)")
+    g2, x2, _ = dynamic.compact(g, jnp.asarray(x))
+    assert_scale_table(g2, np.asarray(x2), "(after compact)")
 
 
 def check_reverse_structural_contract(seed: int, n: int, k: int) -> None:

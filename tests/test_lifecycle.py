@@ -59,7 +59,7 @@ def _graph_fields_equal(a: graph_lib.KNNGraph, b: graph_lib.KNNGraph) -> dict:
     return {
         f: np.array_equal(np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
         for f in ("nbr_ids", "nbr_dist", "nbr_lam", "rev_ids", "rev_lam",
-                  "rev_ptr", "alive", "sq_norms")
+                  "rev_ptr", "alive", "sq_norms", "row_scale")
     }
 
 

@@ -223,7 +223,7 @@ def test_merge_shards_snapshot_roundtrip_bit_exact(tmp_path):
     np.testing.assert_array_equal(r2.gids[0], r.gids[0])
     g, g2 = r.shards[0].graph, r2.shards[0].graph
     for f in ("nbr_ids", "nbr_dist", "nbr_lam", "rev_ids", "rev_lam",
-              "rev_ptr", "alive", "sq_norms"):
+              "rev_ptr", "alive", "sq_norms", "row_scale"):
         np.testing.assert_array_equal(
             np.asarray(getattr(g, f)), np.asarray(getattr(g2, f)),
             err_msg=f"graph field {f} drifted across save/load",

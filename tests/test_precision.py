@@ -1,0 +1,404 @@
+"""PR-7 precision tolerance suite: the compressed distance engine vs oracles.
+
+Two tiers, per precision:
+
+  * **defined-computation oracle** (tight): decode the library's own codes in
+    float64 NumPy and mirror the engine's documented decomposition (exact
+    ``‖x‖²`` cache for the norm terms, per-row scale applied to the *dot*).
+    The engine may only lose fp32-accumulation ulps against this oracle, so
+    any drift here is an implementation bug, not quantization.
+  * **true-distance bound** (analytic/loose): the compressed distances vs the
+    exact float64 distances, bounded by the representation's worst-case
+    quantization error.  This pins the *quality* of the compression, which
+    the tight oracle alone cannot.
+
+Data is drawn non-negative (uniform [0, 1)) so ``chi2`` is well defined and
+the int8 error bound is exercised away from the trivial all-zero case.
+Candidate-count sweeps cross the engine's 128-wide block boundaries, and id
+arrays carry ``-1`` padding lanes (must map to ``+inf`` in every precision).
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import construct
+from repro.core import search as search_lib
+from repro.core.graph import squared_norms
+from repro.kernels import ops
+from repro.kernels import precision as precision_lib
+
+METRICS = ["l2", "ip", "cosine", "l1", "chi2"]
+
+
+# ---------------------------------------------------------------------------
+# float64 oracles (NumPy only — independent of every jitted path under test)
+# ---------------------------------------------------------------------------
+
+
+def _make_case(seed, n, d, b, c):
+    rng = np.random.RandomState(seed)
+    x = rng.rand(n, d).astype(np.float32)
+    q = rng.rand(b, d).astype(np.float32)
+    idx = rng.randint(0, n, size=(b, c)).astype(np.int32)
+    idx[:, :: max(c // 7, 1)] = -1  # padding lanes interleaved
+    return x, q, idx
+
+
+def _oracle_true(q, x, idx, metric):
+    """Exact float64 distances (the no-compression ground truth)."""
+    q = q.astype(np.float64)
+    x = x.astype(np.float64)
+    safe = np.clip(idx, 0, x.shape[0] - 1)
+    cand = x[safe]  # (b, c, d)
+    if metric == "l2":
+        d = ((q[:, None, :] - cand) ** 2).sum(-1)
+    elif metric == "ip":
+        d = -(q[:, None, :] * cand).sum(-1)
+    elif metric == "cosine":
+        qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        cn = cand / np.maximum(
+            np.linalg.norm(cand, axis=-1, keepdims=True), 1e-12
+        )
+        d = 1.0 - (qn[:, None, :] * cn).sum(-1)
+    elif metric == "l1":
+        d = np.abs(q[:, None, :] - cand).sum(-1)
+    elif metric == "chi2":
+        num = (q[:, None, :] - cand) ** 2
+        den = q[:, None, :] + cand
+        d = np.where(den > 1e-12, num / np.maximum(den, 1e-12), 0.0).sum(-1)
+    else:
+        raise KeyError(metric)
+    return np.where(idx >= 0, d, np.inf)
+
+
+def _decode_tile(x, idx, enc, precision):
+    """Decode the library's own codes for the gathered tile, float64."""
+    safe = np.clip(idx, 0, x.shape[0] - 1)
+    if precision == "bf16":
+        dec = np.asarray(enc.data.astype(jnp.float32)).astype(np.float64)
+        return dec[safe], None
+    codes = np.asarray(enc.data).astype(np.float64)
+    scale = np.asarray(enc.scale).astype(np.float64)
+    s = np.where(scale[safe] > 0, scale[safe], 1.0)  # (b, c)
+    return codes[safe], s
+
+
+def _oracle_compressed(q, x, idx, metric, enc, precision):
+    """float64 mirror of the engine's defined bf16/int8 computation:
+    compressed tile feeds the dot / elementwise term, exact norms feed the
+    norm terms, int8 scales multiply the dot (not the tile) for matmul
+    metrics."""
+    q64 = q.astype(np.float64)
+    xn_all = (x.astype(np.float64) ** 2).sum(-1)
+    safe = np.clip(idx, 0, x.shape[0] - 1)
+    cand, s = _decode_tile(x, idx, enc, precision)
+    if metric in ("l2", "ip", "cosine"):
+        qf = q64
+        if metric == "cosine":
+            qf = qf / np.maximum(
+                np.linalg.norm(qf, axis=-1, keepdims=True), 1e-12
+            )
+        dots = (qf[:, None, :] * cand).sum(-1)
+        if s is not None:
+            dots = dots * s
+        xn = xn_all[safe]
+        if metric == "l2":
+            qn = (qf * qf).sum(-1)[:, None]
+            d = np.maximum(qn + xn - 2.0 * dots, 0.0)
+        elif metric == "cosine":
+            d = 1.0 - dots / np.maximum(np.sqrt(xn), 1e-12)
+        else:
+            d = -dots
+    else:  # VPU metrics dequantize the tile itself
+        candf = cand if s is None else cand * s[..., None]
+        if metric == "l1":
+            d = np.abs(q64[:, None, :] - candf).sum(-1)
+        else:  # chi2
+            num = (q64[:, None, :] - candf) ** 2
+            den = q64[:, None, :] + candf
+            d = np.where(den > 1e-12, num / np.maximum(den, 1e-12), 0.0).sum(-1)
+    return np.where(idx >= 0, d, np.inf)
+
+
+def _oracle_pq(q, x, idx, metric, enc):
+    """float64 mirror of the ADC rank path (per-subspace LUT + code gather)."""
+    codes = np.asarray(enc.codes)
+    cb = np.asarray(enc.codebook).astype(np.float64)
+    M, K, dsub = cb.shape
+    q64 = q.astype(np.float64)
+    if metric == "cosine":
+        q64 = q64 / np.maximum(np.linalg.norm(q64, axis=-1, keepdims=True), 1e-12)
+    qs = q64.reshape(q.shape[0], M, dsub)
+    if metric == "l2":
+        qn = (qs * qs).sum(-1)[:, :, None]
+        cn = (cb * cb).sum(-1)[None]
+        dots = np.einsum("bmd,mkd->bmk", qs, cb)
+        lut = np.maximum(qn + cn - 2.0 * dots, 0.0)
+    elif metric in ("ip", "cosine"):
+        dots = np.einsum("bmd,mkd->bmk", qs, cb)
+        lut = -dots if metric == "ip" else dots
+    elif metric == "l1":
+        lut = np.abs(qs[:, :, None, :] - cb[None]).sum(-1)
+    else:  # chi2
+        num = (cb[None] - qs[:, :, None, :]) ** 2
+        den = cb[None] + qs[:, :, None, :]
+        lut = np.where(den > 1e-12, num / np.maximum(den, 1e-12), 0.0).sum(-1)
+    safe = np.clip(idx, 0, x.shape[0] - 1)
+    cand_codes = codes[safe]  # (b, c, M)
+    b, c = idx.shape
+    terms = lut[
+        np.arange(b)[:, None, None], np.arange(M)[None, None, :], cand_codes
+    ]
+    d = terms.sum(-1)
+    if metric == "cosine":
+        xn = (x.astype(np.float64) ** 2).sum(-1)[safe]
+        d = 1.0 - d / np.maximum(np.sqrt(xn), 1e-12)
+    return np.where(idx >= 0, d, np.inf)
+
+
+def _engine(q, x, idx, metric, precision, enc):
+    return np.asarray(
+        ops.gather_distance(
+            jnp.asarray(q), jnp.asarray(x), jnp.asarray(idx), metric,
+            dispatch="reference", sq_norms=squared_norms(jnp.asarray(x)),
+            enc=enc, precision=precision,
+        )
+    )
+
+
+def _finite_close(got, want, rtol, atol, msg):
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(want), err_msg=msg)
+    f = np.isfinite(want)
+    np.testing.assert_allclose(got[f], want[f], rtol=rtol, atol=atol, err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# tier 1: defined-computation oracles (tight)
+# ---------------------------------------------------------------------------
+
+
+class TestDefinedOracle:
+    @pytest.mark.parametrize("metric", METRICS)
+    def test_fp32_baseline(self, metric):
+        x, q, idx = _make_case(0, 500, 32, 4, 200)
+        got = _engine(q, x, idx, metric, "fp32", None)
+        _finite_close(got, _oracle_true(q, x, idx, metric), 2e-4, 2e-5,
+                      f"fp32 {metric} drifted from the exact oracle")
+
+    @pytest.mark.parametrize("metric", METRICS)
+    @pytest.mark.parametrize("precision", ["bf16", "int8"])
+    def test_compressed_metric_sweep(self, metric, precision):
+        x, q, idx = _make_case(1, 500, 32, 4, 129)
+        enc = precision_lib.encode_dataset(jnp.asarray(x), precision)
+        got = _engine(q, x, idx, metric, precision, enc)
+        want = _oracle_compressed(q, x, idx, metric, enc, precision)
+        _finite_close(got, want, 1e-3, 1e-3,
+                      f"{precision} {metric} drifted from its defined oracle")
+
+    @pytest.mark.parametrize("metric", METRICS)
+    def test_pq_metric_sweep(self, metric):
+        x, q, idx = _make_case(2, 500, 32, 4, 129)
+        enc = precision_lib.encode_dataset(jnp.asarray(x), "pq")
+        got = _engine(q, x, idx, metric, "pq", enc)
+        want = _oracle_pq(q, x, idx, metric, enc)
+        _finite_close(got, want, 1e-3, 1e-3,
+                      f"pq {metric} drifted from the ADC oracle")
+
+    @pytest.mark.parametrize("d", [4, 8, 96])
+    @pytest.mark.parametrize("precision", ["bf16", "int8", "pq"])
+    def test_dim_sweep(self, d, precision):
+        x, q, idx = _make_case(3, 400, d, 3, 200)
+        enc = precision_lib.encode_dataset(jnp.asarray(x), precision)
+        got = _engine(q, x, idx, "l2", precision, enc)
+        want = (_oracle_pq(q, x, idx, "l2", enc) if precision == "pq"
+                else _oracle_compressed(q, x, idx, "l2", enc, precision))
+        _finite_close(got, want, 1e-3, 1e-3,
+                      f"{precision} l2 drifted at d={d}")
+
+    @pytest.mark.parametrize("c", [1, 127, 128, 129, 300])
+    @pytest.mark.parametrize("precision", ["bf16", "int8"])
+    def test_block_boundary_sweep(self, c, precision):
+        """The chunked dequant-dot must be seamless across its 128-wide
+        chunk edges (and at C=1, below one chunk)."""
+        x, q, idx = _make_case(4, 500, 32, 3, c)
+        enc = precision_lib.encode_dataset(jnp.asarray(x), precision)
+        got = _engine(q, x, idx, "l2", precision, enc)
+        want = _oracle_compressed(q, x, idx, "l2", enc, precision)
+        _finite_close(got, want, 1e-3, 1e-3,
+                      f"{precision} l2 drifted at C={c}")
+
+
+# ---------------------------------------------------------------------------
+# tier 2: true-distance bounds (the compression-quality pin)
+# ---------------------------------------------------------------------------
+
+
+class TestTrueDistanceBounds:
+    def test_bf16_within_two_percent(self):
+        x, q, idx = _make_case(5, 500, 32, 4, 200)
+        enc = precision_lib.encode_dataset(jnp.asarray(x), "bf16")
+        for metric, atol in (("l2", 0.05), ("cosine", 0.02), ("ip", 0.05)):
+            got = _engine(q, x, idx, metric, "bf16", enc)
+            want = _oracle_true(q, x, idx, metric)
+            f = np.isfinite(want)
+            np.testing.assert_allclose(
+                got[f], want[f], rtol=0.02, atol=atol,
+                err_msg=f"bf16 {metric} strayed >2% from the true distance",
+            )
+
+    def test_int8_analytic_bound(self):
+        """|d_int8 - d_true| <= 2 * (s/2) * Σ|q|: only the dot carries
+        quantization error, at most half a step per dimension."""
+        x, q, idx = _make_case(6, 500, 64, 4, 200)
+        enc = precision_lib.encode_dataset(jnp.asarray(x), "int8")
+        got = _engine(q, x, idx, "l2", "int8", enc)
+        want = _oracle_true(q, x, idx, "l2")
+        safe = np.clip(idx, 0, x.shape[0] - 1)
+        s = np.asarray(enc.scale).astype(np.float64)[safe]  # (b, c)
+        bound = 2.0 * (s / 2.0) * np.abs(q.astype(np.float64)).sum(-1)[:, None]
+        f = np.isfinite(want)
+        err = np.abs(got - want)[f]
+        assert np.all(err <= bound[f] * (1 + 1e-3) + 1e-4), (
+            f"int8 l2 error {err.max():.5f} exceeds the analytic bound "
+            f"{bound[f].max():.5f}"
+        )
+
+    def test_pq_rank_quality(self):
+        """ADC is a *rank* heuristic, not a distance estimate: its top picks
+        must be systematically closer than the candidate pool average."""
+        x, q, idx = _make_case(7, 500, 32, 6, 200)
+        idx = np.abs(idx)  # full pool, no padding, for a clean average
+        enc = precision_lib.encode_dataset(jnp.asarray(x), "pq")
+        adc = _engine(q, x, idx, "l2", "pq", enc)
+        true = _oracle_true(q, x, idx, "l2")
+        top = np.argsort(adc, axis=1)[:, :8]
+        picked = np.take_along_axis(true, top, axis=1).mean(axis=1)
+        assert np.all(picked < true.mean(axis=1)), (
+            "ADC top-8 candidates are no closer than a random draw"
+        )
+
+
+# ---------------------------------------------------------------------------
+# end-to-end composition + API contract
+# ---------------------------------------------------------------------------
+
+
+class TestEndToEnd:
+    def _built(self, precision="fp32", **over):
+        rng = np.random.RandomState(11)
+        x = rng.rand(400, 16).astype(np.float32)
+        cfg = construct.BuildConfig(
+            k=8, metric="l2", wave=64, beam=16, n_seeds=4, max_iters=20,
+            dispatch="reference", precision=precision, **over,
+        )
+        g, _ = construct.build(jnp.asarray(x), cfg, jax.random.PRNGKey(0))
+        return g, x, cfg
+
+    def test_pq_rerank_keep_all_equals_fp32(self):
+        """With rerank_keep >= C nothing is dropped by the ADC prerank, so
+        rank-then-rerank must reproduce the fp32 search bit-for-bit (only
+        exact distances ever enter the hash or the beam)."""
+        g, x, _ = self._built("fp32")
+        q = np.random.RandomState(12).rand(16, 16).astype(np.float32)
+        base = search_lib.SearchConfig(
+            k=8, beam=16, n_seeds=4, metric="l2", dispatch="reference",
+        )
+        res32 = search_lib.search(
+            g, jnp.asarray(x), jnp.asarray(q), jax.random.PRNGKey(3), base)
+        cfg_pq = dataclasses.replace(base, precision="pq", rerank_factor=1000)
+        respq = search_lib.search(
+            g, jnp.asarray(x), jnp.asarray(q), jax.random.PRNGKey(3), cfg_pq)
+        np.testing.assert_array_equal(np.asarray(res32.ids), np.asarray(respq.ids))
+        np.testing.assert_array_equal(
+            np.asarray(res32.dists), np.asarray(respq.dists))
+
+    def test_compressed_search_tracks_fp32(self):
+        """bf16/int8/pq searches on an fp32-built graph stay within a few
+        percent of the fp32 result set (top-k id overlap)."""
+        g, x, _ = self._built("fp32")
+        q = np.random.RandomState(13).rand(32, 16).astype(np.float32)
+        base = search_lib.SearchConfig(
+            k=8, beam=24, n_seeds=4, metric="l2", dispatch="reference",
+        )
+        ids32 = np.asarray(search_lib.search(
+            g, jnp.asarray(x), jnp.asarray(q), jax.random.PRNGKey(5), base).ids)
+        for precision in ("bf16", "int8", "pq"):
+            cfg = dataclasses.replace(base, precision=precision)
+            ids = np.asarray(search_lib.search(
+                g, jnp.asarray(x), jnp.asarray(q), jax.random.PRNGKey(5), cfg).ids)
+            overlap = np.mean([
+                len(set(a.tolist()) & set(b.tolist())) / ids32.shape[1]
+                for a, b in zip(ids, ids32)
+            ])
+            assert overlap >= 0.9, f"{precision} overlap {overlap:.3f} < 0.9"
+
+    def test_compressed_build_works(self):
+        """An int8-precision build produces a structurally valid graph whose
+        recall matches an fp32 build on the same data."""
+        from repro.core import brute
+        g8, x, _ = self._built("int8")
+        g32, _, _ = self._built("fp32")
+        tids, _ = brute.brute_force_knn(
+            jnp.asarray(x), jnp.asarray(x), 8, "l2",
+            exclude_ids=jnp.arange(400, dtype=jnp.int32), dispatch="reference")
+        r8 = float(brute.recall_at_k(g8.nbr_ids, tids, 8))
+        r32 = float(brute.recall_at_k(g32.nbr_ids, tids, 8))
+        assert r8 >= r32 - 0.05, f"int8 build recall {r8:.3f} << fp32 {r32:.3f}"
+
+
+class TestDispatchDeprecation:
+    @pytest.mark.parametrize("cls", [search_lib.SearchConfig, construct.BuildConfig])
+    def test_use_pallas_warns_and_maps(self, cls):
+        with pytest.warns(DeprecationWarning, match="use_pallas is deprecated"):
+            cfg = cls(use_pallas=False)
+        assert cfg.dispatch == "reference" and cfg.use_pallas is None
+        with pytest.warns(DeprecationWarning):
+            cfg = cls(use_pallas=True)
+        assert cfg.dispatch == "pallas"
+
+    @pytest.mark.parametrize("cls", [search_lib.SearchConfig, construct.BuildConfig])
+    def test_replace_does_not_rewarn(self, cls):
+        with pytest.warns(DeprecationWarning):
+            cfg = cls(use_pallas=False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            cfg2 = dataclasses.replace(cfg, k=12)
+        assert cfg2.dispatch == "reference"
+
+    def test_explicit_dispatch_wins(self):
+        with pytest.warns(DeprecationWarning):
+            cfg = search_lib.SearchConfig(use_pallas=True, dispatch="reference")
+        assert cfg.dispatch == "reference"
+
+    def test_bad_values_rejected(self):
+        with pytest.raises(AssertionError):
+            search_lib.SearchConfig(dispatch="gpu")
+        with pytest.raises(ValueError):
+            search_lib.SearchConfig(precision="fp8")
+        with pytest.raises(AssertionError):
+            search_lib.SearchConfig(rerank_factor=0)
+
+    def test_deprecated_path_bitwise_equals_new(self):
+        """use_pallas=False and dispatch='reference' are the same engine."""
+        rng = np.random.RandomState(21)
+        x = rng.rand(300, 12).astype(np.float32)
+        cfg_new = construct.BuildConfig(
+            k=6, wave=64, beam=16, n_seeds=4, max_iters=15,
+            dispatch="reference")
+        with pytest.warns(DeprecationWarning):
+            cfg_old = construct.BuildConfig(
+                k=6, wave=64, beam=16, n_seeds=4, max_iters=15,
+                use_pallas=False)
+        g_new, _ = construct.build(jnp.asarray(x), cfg_new, jax.random.PRNGKey(2))
+        g_old, _ = construct.build(jnp.asarray(x), cfg_old, jax.random.PRNGKey(2))
+        for field in ("nbr_ids", "nbr_dist", "rev_ids", "row_scale"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(g_new, field)),
+                np.asarray(getattr(g_old, field)),
+                err_msg=f"dispatch compat shim changed the build ({field})",
+            )

@@ -47,6 +47,13 @@ def test_grow_trim_cache_carry(seed, n, k, extra):
     prop_util.check_grow_trim_cache_carry(seed, n, k, extra)
 
 
+@given(seeds, st.integers(32, 64), st.integers(4, 16), st.integers(3, 6))
+@settings(max_examples=6)  # each case runs a full build + churn cycle
+def test_scale_table_lifecycle(seed, n0, extra, k):
+    """row_scale stays exact-or-zero through build/grow/insert/remove/compact."""
+    prop_util.check_scale_table_lifecycle(seed, n0, extra, k)
+
+
 @given(seeds, st.integers(5, 12), st.integers(2, 4))
 def test_reverse_structural_contract(seed, n, k):
     """rebuild_reverse: membership, min(in_degree, R) fill, exact rev_lam

@@ -29,6 +29,11 @@ def test_grow_trim_cache_carry(seed, n, k, extra):
     prop_util.check_grow_trim_cache_carry(seed, n, k, extra)
 
 
+@pytest.mark.parametrize("seed,n0,extra,k", [(0, 48, 12, 4), (1, 64, 16, 6)])
+def test_scale_table_lifecycle(seed, n0, extra, k):
+    prop_util.check_scale_table_lifecycle(seed, n0, extra, k)
+
+
 @pytest.mark.parametrize("seed,n,k", CASES)
 def test_reverse_structural_contract(seed, n, k):
     prop_util.check_reverse_structural_contract(seed, n, k)
