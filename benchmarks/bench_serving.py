@@ -1,0 +1,202 @@
+"""Sustained-load serving benchmark: the instrumented ServingLoop under CI.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving
+
+The paper's central claim is *online* operation — the graph answers queries
+while it is being churned — and ``serve.loop.ServingLoop`` is the serving
+front end that exercises it: queries arrive in bursts, are coalesced into
+pow2-bucketed waves, and churn (insert + remove) lands between waves.  This
+benchmark drives that loop under a sustained arrival pattern and emits the
+``serving_load`` record:
+
+  * ``recall_at_10``     — fresh-search recall of the loop's query reservoir
+    against alive-aware brute force on the post-churn index.  HARD CI gate
+    (floor in baseline_ci.json): a serving path that degrades recall has
+    lost the paper's property regardless of its speed.
+  * ``p50/p99_latency_ms``, ``qps`` — enqueue→synced-result percentiles and
+    sustained throughput.  Wall-clock on shared CI runners is too noisy to
+    floor, so these are *recorded* — the in-repo trajectory every later perf
+    PR reads — and only their SHAPE is gated:
+  * ``p99_p50_ratio``    — sanity ceiling.  The loop serves a steady
+    synthetic arrival pattern with warm caches; a p99 hundreds of times p50
+    means the measurement is broken (compile inside the timed window, a
+    stray host sync in the hot path), not that the machine is slow.  The
+    ceiling is deliberately generous — it polices the harness, not the
+    hardware.
+
+Churn here is deliberately light (~1.5% of the catalog per churn event):
+the churn-torture number lives in ``bench_lifecycle`` (whose 0.90 floor
+reflects 19%-of-catalog churn); serving measures steady-state quality, so
+its floor holds at 0.95.
+
+A ``JsonlTracker`` trace (spans + per-wave metrics) is written next to the
+CI artifact when ``--trace`` / ``trace_path`` is given; the bench-smoke job
+uploads it alongside BENCH_ci.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import construct
+from repro.index import OnlineIndex
+from repro.obs import JsonlTracker
+from repro.serve.loop import ServeLoopConfig, ServingLoop
+
+
+def serving_bench(
+    n: int = 4096,
+    d: int = 20,
+    k: int = 20,
+    rounds: int = 24,
+    burst: int = 40,
+    churn: int = 16,
+    churn_every: int = 4,
+    top_k: int = 10,
+    beam: int = 64,
+    max_batch: int = 64,
+    seed: int = 0,
+    trace_path: Optional[str] = None,
+) -> dict:
+    """Drive a ServingLoop under sustained load; see module doc.
+
+    Each round submits a ``burst`` of queries and pumps the loop; every
+    ``churn_every``-th round also removes ``churn`` random live rows and
+    inserts ``churn`` fresh ones (buffered — the loop flushes them at the
+    next wave boundary, which is what the interleave is supposed to absorb).
+    An untimed warm-up round compiles every shape on the path; the measured
+    window starts from a ``reset_window``.
+    """
+    n_churn_events = rounds // churn_every + 1
+    pool = common.dataset("uniform", n + n_churn_events * churn, d, seed)
+    base, fresh = pool[:n], pool[n:]
+    queries = common.dataset("uniform", (rounds + 1) * burst, d, seed + 1)
+    cfg = construct.BuildConfig(
+        k=k, metric="l2", wave=256, lgd=True, beam=40, n_seeds=8,
+        dispatch="reference",
+    )
+    t0 = time.perf_counter()
+    idx = OnlineIndex.build(base, cfg, key=jax.random.PRNGKey(seed))
+    t_build = time.perf_counter() - t0
+
+    tracker = None
+    if trace_path:
+        tracker = JsonlTracker(
+            trace_path,
+            run_meta={**common.run_meta(), "bench": "serving_load", "n": n},
+        )
+    loop = ServingLoop(
+        idx,
+        ServeLoopConfig(
+            top_k=top_k, beam=beam, max_batch=max_batch,
+            recall_reservoir=96, recall_sample_every=5,
+        ),
+        tracker=tracker,
+        seed=seed + 2,
+    )
+    rng = np.random.RandomState(seed)
+
+    def round_(r: int, with_churn: bool):
+        if with_churn:
+            alive = np.flatnonzero(np.asarray(idx.graph.alive))
+            victims = rng.choice(alive, churn, replace=False)
+            loop.remove(jnp.asarray(victims, jnp.int32))
+            loop.add(fresh[r * churn : (r + 1) * churn])
+        loop.submit(queries[r * burst : (r + 1) * burst])
+        loop.pump()
+
+    # warm-up: compiles the search at every pow2 bucket the bursts hit plus
+    # the churn path, so the measured window holds steady-state costs only
+    round_(0, with_churn=True)
+    loop.pump()
+    loop.reset_window()
+
+    churn_events = 0
+    for r in range(1, rounds + 1):
+        with_churn = r % churn_every == 0
+        churn_events += int(with_churn)
+        round_(r, with_churn)
+
+    rec = loop.report(audit_k=10)
+    p50, p99 = rec["p50_latency_ms"], rec["p99_latency_ms"]
+    out = {
+        "n": n, "d": d, "rounds": rounds, "burst": burst,
+        "churn": churn, "churn_events": churn_events,
+        "top_k": top_k, "beam": beam, "max_batch": max_batch,
+        "t_build_s": t_build,
+        "n_served": rec["n_served"],
+        "n_waves": rec["n_waves"],
+        "qps": rec["qps"],
+        "p50_latency_ms": p50,
+        "p99_latency_ms": p99,
+        "p99_p50_ratio": p99 / p50 if p50 > 0 else 0.0,
+        "comps_per_query": rec["comps_per_query"],
+        "scanning_rate": rec["scanning_rate"],
+        "hash_saturation_ratio": rec["hash_saturation_ratio"],
+        "recall_at_10": rec["recall_at_10"],
+        "recall_at_10_served": rec["recall_at_10_served"],
+        "n_audited": rec["n_audited"],
+    }
+    if tracker is not None:
+        tracker.log_metrics({f"record/{k_}": v for k_, v in out.items()})
+        tracker.finish()
+    return out
+
+
+def serving_gate(
+    n: int = 2048, d: int = 20, seed: int = 0,
+    trace_path: Optional[str] = None,
+) -> dict:
+    """The canonical CI sustained-load measurement.  ``benchmarks.ci_gate``
+    fails the benchmark-smoke job when ``recall_at_10`` drops below
+    ``serving_recall_at_10_min`` or ``p99_p50_ratio`` exceeds
+    ``serving_p99_p50_ratio_max`` (baseline_ci.json); latency/QPS are
+    recorded ungated.
+
+    Shape rationale: n≈2k/d=20 matches the build-quality and churn gates so
+    the three recalls are comparable, and the loop over-searches at
+    ``top_k=32`` while the audit scores recall@10 — the EHC termination
+    horizon is the search k (beam width beyond it does not change the walk),
+    so serving quality is bought with a deeper walk, the same
+    over-search-then-cut protocol ``bench_lifecycle`` gates.  Measured on
+    the reference setup: k=20 walks hold ~0.94 recall@10 under this churn
+    (the churn gate's regime), k=32 walks ~0.99 at ~1.4x the comps — the
+    0.95 floor then has real headroom instead of sitting on the measurement."""
+    return serving_bench(
+        n=n, d=d, seed=seed, top_k=32, trace_path=trace_path
+    )
+
+
+def run(n: int = 4096, trace: Optional[str] = None, **kw):
+    tbl = common.Table(
+        "serving: sustained load (pow2-coalesced waves + interleaved churn)",
+        ["n", "served", "waves", "qps", "p50_ms", "p99_ms", "recall@10",
+         "scan_rate"],
+    )
+    rec = serving_bench(n=n, trace_path=trace, **kw)
+    tbl.add(rec["n"], rec["n_served"], rec["n_waves"], rec["qps"],
+            rec["p50_latency_ms"], rec["p99_latency_ms"],
+            rec["recall_at_10"], rec["scanning_rate"])
+    tbl.show()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--trace", type=str, default=None,
+                    help="write a JsonlTracker trace to this path")
+    args = ap.parse_args()
+    run(args.n, rounds=args.rounds, trace=args.trace)
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,18 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
     recall@10 vs the fp32 search on the same graph (CEILING — the exact
     re-rank is what makes the cheap ADC first pass admissible).  The bf16
     record rides along ungated.
+  * ``serving_recall_at_10_min`` + ``serving_p99_p50_ratio_max`` — the
+    sustained-load serving record (bench_serving.serving_gate, opt-in via
+    ``benchmarks.run --serving``, same absent-record rule): fresh-search
+    recall@10 of the ServingLoop's query reservoir against alive-aware
+    brute force must hold the floor under interleaved query bursts + light
+    churn, AND the p99/p50 latency ratio must stay under a generous sanity
+    CEILING — the loop serves a steady warm-cache arrival pattern, so a
+    blown ratio means the measurement itself broke (compile inside the
+    timed window, a stray host sync in the hot path), which floors on raw
+    wall-clock could never distinguish from a slow runner.  p50/p99
+    latency, QPS and scanning rate ride along ungated — they are the
+    recorded trajectory later perf PRs diff against.
 
 Exit code 0 = all floors hold; 1 = regression (fails the CI job).  The
 BENCH_ci.json artifact is uploaded either way so regressions come with data.
@@ -119,12 +131,27 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
              float(baseline["rerank_recall_delta_max"]),
              pdelta <= float(baseline["rerank_recall_delta_max"]))
         )
+    if "serving_load" in bench:  # opt-in record (benchmarks.run --serving);
+        # absent record skips, present record gates two-sided: recall floor
+        # + p99/p50 ratio sanity ceiling
+        srec = float(bench["serving_load"]["recall_at_10"])
+        results.append(
+            ("serving_recall_at_10", srec,
+             float(baseline["serving_recall_at_10_min"]),
+             srec >= float(baseline["serving_recall_at_10_min"]))
+        )
+        sratio = float(bench["serving_load"]["p99_p50_ratio"])
+        results.append(
+            ("serving_p99_p50_ratio", sratio,
+             float(baseline["serving_p99_p50_ratio_max"]),
+             sratio <= float(baseline["serving_p99_p50_ratio_max"]))
+        )
     return results
 
 
 # metrics whose bound is a CEILING (measured must stay <= the baseline);
 # "_rate"-suffixed names are ceilings by convention, the rest are listed here
-_CEILINGS = frozenset({"rerank_recall_delta"})
+_CEILINGS = frozenset({"rerank_recall_delta", "serving_p99_p50_ratio"})
 
 
 def main() -> int:

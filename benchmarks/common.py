@@ -134,12 +134,34 @@ def _jsonable(v):
     return v
 
 
+def _git_sha() -> str:
+    """Current commit SHA, or "unknown" outside a git checkout (artifact
+    tarballs, pip installs) — provenance must never fail a benchmark run."""
+    import os
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
 def run_meta() -> dict:
-    """Provenance stamped into every emitted benchmark file."""
+    """Provenance stamped into every emitted benchmark file: records from
+    different machines/commits are comparable only if each says where it
+    came from (jax version, backend, device count, commit)."""
     return {
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "git_sha": _git_sha(),
         "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }
 

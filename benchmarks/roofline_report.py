@@ -145,6 +145,38 @@ def render_precision(rec: dict) -> str:
     return "\n".join(rows)
 
 
+def render_serving(rec: dict) -> str:
+    """Sustained-load serving table (bench_serving.serving_gate record):
+    latency percentiles, throughput, and the Eq.-2-extended serving scanning
+    rate side by side.  Latency and QPS are wall-clock (informational on
+    shared runners); the scanning rate and comps/query are exact device
+    counts — the pair is the serving roofline: comps/query is the work, the
+    latency percentiles are what the machine made of it."""
+    rows = [
+        "### Sustained-load serving "
+        f"(n={rec['n']}, d={rec['d']}, {rec['rounds']} rounds x "
+        f"{rec['burst']}-query bursts, churn {rec['churn']}-in/"
+        f"{rec['churn']}-out x{rec['churn_events']}, search k={rec['top_k']})",
+        "| served | waves | QPS | p50 | p99 | p99/p50 | comps/q "
+        "| scan rate | hash sat | recall@10 (fresh / served) |",
+        "|" + "---|" * 10,
+        (
+            f"| {rec['n_served']} | {rec['n_waves']} | {rec['qps']:.1f} "
+            f"| {rec['p50_latency_ms']:.1f}ms | {rec['p99_latency_ms']:.1f}ms "
+            f"| {rec['p99_p50_ratio']:.2f} | {rec['comps_per_query']:.0f} "
+            f"| {rec['scanning_rate']:.4f} "
+            f"| {rec['hash_saturation_ratio']:.3f} "
+            f"| {rec['recall_at_10']:.4f} / {rec['recall_at_10_served']:.4f} |"
+        ),
+    ]
+    rows.append(
+        f"\nGated: recall@10 {rec['recall_at_10']:.4f} (floored), "
+        f"p99/p50 {rec['p99_p50_ratio']:.2f} (sanity ceiling); latency/QPS "
+        f"recorded ungated."
+    )
+    return "\n".join(rows)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single.json"
     with open(path) as f:
@@ -160,6 +192,9 @@ def main():
         if "precision_gate" in records:
             print()
             print(render_precision(records["precision_gate"]))
+        if "serving_load" in records:
+            print()
+            print(render_serving(records["serving_load"]))
         return
     print(render(records))
 

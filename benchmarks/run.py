@@ -19,6 +19,7 @@ fresh interpreter, not this driver.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
@@ -42,6 +43,13 @@ def main():
                          "(bench_search.run_precision: int8 gather speedup "
                          "at n=2^17/d=256/C=512 + PQ rank-then-rerank recall "
                          "delta — large-allocation bench, opt-in like --hier)")
+    ap.add_argument("--serving", action="store_true",
+                    help="include the sustained-load serving gate "
+                         "(bench_serving.serving_gate: ServingLoop under "
+                         "interleaved query bursts + churn; recall@10 "
+                         "floored, p99/p50 ratio ceiling-gated, latency/QPS "
+                         "recorded; writes the tracker JSONL trace next to "
+                         "--ci-out)")
     args = ap.parse_args()
     n = 2000 if args.quick else args.n
 
@@ -53,6 +61,7 @@ def main():
         bench_refine,
         bench_search,
         bench_search_baseline,
+        bench_serving,
         common,
     )
 
@@ -93,6 +102,14 @@ def main():
         # therefore opt-in: the bench-smoke CI job passes --hier; quick local
         # --ci-out runs skip it and ci_gate tolerates the absent record
         hier = bench_search.hier_gate(n=args.hier_n) if args.hier else None
+        # the serving gate drives the instrumented ServingLoop and writes its
+        # JsonlTracker trace next to the CI artifact (uploaded together by
+        # the bench-smoke job); opt-in with the same absent-record rule
+        serving = None
+        if args.serving:
+            trace_path = os.path.splitext(args.ci_out)[0] + "_trace.jsonl"
+            serving = bench_serving.serving_gate(trace_path=trace_path)
+            print(f"wrote {trace_path}")
         payload = {
             "expansion": expansion[16],  # serving batch — the gated record
             "expansion_wave": expansion[256],  # construction wave — recorded
@@ -117,6 +134,10 @@ def main():
             # compressed engine: int8 gather speedup floor-gated, PQ
             # rank-then-rerank recall delta ceiling-gated; bf16 informational
             payload["precision_gate"] = precision
+        if serving is not None:
+            # sustained-load serving: recall@10 floored, p99/p50 ratio
+            # ceiling-gated (harness sanity); latency + QPS informational
+            payload["serving_load"] = serving
         common.emit_json(args.ci_out, payload)
         print(f"wrote {args.ci_out}")
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s (n={n})")

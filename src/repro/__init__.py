@@ -8,7 +8,10 @@ surface stays importable from the subpackages:
   * ``repro.kernels`` — the blocked Pallas distance engine + precision codecs
   * ``repro.index``   — lifecycle (OnlineIndex), sharded serving
                         (ShardedIndex), versioned snapshots
-  * ``repro.serve``   — retrieval-facing entry points
+  * ``repro.serve``   — retrieval-facing entry points + the instrumented
+                        ``ServingLoop``
+  * ``repro.obs``     — telemetry: ``Tracker`` (noop/in-memory/JSONL spans +
+                        metrics) and the ``SearchStats`` aggregator
   * ``repro.data`` / ``repro.models`` / ``repro.train`` — substrate
 
 Quick start::
@@ -24,8 +27,15 @@ from repro.core.construct import BuildConfig, build, build_parallel
 from repro.core.search import SearchConfig, SearchResult, search
 from repro.index.lifecycle import OnlineIndex
 from repro.index.router import ShardedIndex
+from repro.obs import (
+    InMemoryTracker,
+    JsonlTracker,
+    NoopTracker,
+    SearchStats,
+    Tracker,
+)
 
-__version__ = "0.7.0"  # tracks the PR sequence; PR 7 = precision API
+__version__ = "0.9.0"  # tracks the PR sequence; PR 9 = telemetry + serving
 
 __all__ = [
     "BuildConfig",
@@ -33,6 +43,11 @@ __all__ = [
     "SearchResult",
     "OnlineIndex",
     "ShardedIndex",
+    "Tracker",
+    "NoopTracker",
+    "InMemoryTracker",
+    "JsonlTracker",
+    "SearchStats",
     "build",
     "build_parallel",
     "search",

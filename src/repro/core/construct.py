@@ -392,6 +392,7 @@ def build(
     initial: Optional[tuple[KNNGraph, int]] = None,
     coarse=None,
     return_coarse: bool = False,
+    tracker=None,
 ):
     """Build the k-NN graph over x with OLG (cfg.lgd=False) or LGD (True).
 
@@ -400,6 +401,14 @@ def build(
     advances an integer cursor.  The only host syncs are the optional
     ``wave_callback`` (every ``callback_stride`` waves) and whatever the
     caller reads from the returned device-side ``BuildStats``.
+
+    ``tracker`` (an ``obs.Tracker``) makes the stride boundary a telemetry
+    point as well: each ``callback_stride``-wave block runs under a
+    ``build/stride`` span synced on the committed graph, and the cumulative
+    build counters (comps, edges, partial scanning rate) are logged there —
+    the ONLY host syncs telemetry introduces, and only at boundaries that
+    are already sync points when a callback is in use.  ``tracker=None``
+    (the default) keeps the loop bitwise and sync-wise identical to before.
 
     Args:
       x: (n, d) dataset.
@@ -467,23 +476,48 @@ def build(
     stats = zero_stats(pre_charge)
     W = cfg.wave
 
+    from repro.obs import NOOP  # late: keep core importable without obs init
+
+    trk = tracker if tracker is not None else NOOP
     pos = int(start)
     n_waves = 0
     while pos < n:
-        key, sk = jax.random.split(key)
-        if coarse is None:
-            g, stats = wave_step(
-                g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg, enc=enc
-            )
-        else:
-            g, stats, coarse = wave_step(
-                g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg,
-                coarse=coarse, enc=enc,
-            )
-        pos += min(W, n - pos)
-        n_waves += 1
+        # one stride block = one span; under NoopTracker span() and sync()
+        # are free passthroughs, so the untracked loop shape is unchanged
+        with trk.span("build/stride") as sp:
+            stride_end = n_waves + callback_stride
+            while pos < n and n_waves < stride_end:
+                key, sk = jax.random.split(key)
+                if coarse is None:
+                    g, stats = wave_step(
+                        g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg,
+                        enc=enc,
+                    )
+                else:
+                    g, stats, coarse = wave_step(
+                        g, x, jnp.asarray(pos, jnp.int32), sk, stats, cfg,
+                        coarse=coarse, enc=enc,
+                    )
+                pos += min(W, n - pos)
+                n_waves += 1
+            sp.sync(g.nbr_ids)
         if wave_callback is not None and n_waves % callback_stride == 0:
             wave_callback(n_waves, g)
+        if tracker is not None:
+            # int()/float() on Counter64 is the host sync — stride-boundary
+            # only, per the sync-boundary-only capture policy
+            comps = int(stats.n_comps)
+            trk.log_metrics(
+                {
+                    "build/rows_inserted": pos,
+                    "build/n_comps": comps,
+                    "build/n_inserted_edges": int(stats.n_inserted_edges),
+                    "build/scanning_rate_partial": (
+                        comps / (n * (n - 1) / 2.0) if n > 1 else 0.0
+                    ),
+                },
+                step=n_waves,
+            )
 
     if return_coarse:
         return g, stats, coarse

@@ -45,6 +45,7 @@ from repro.core import graph as graph_lib
 from repro.core import search as search_lib
 from repro.core.graph import KNNGraph
 from repro.index import snapshot as snapshot_lib
+from repro.obs import NOOP
 
 Array = jax.Array
 
@@ -70,6 +71,7 @@ class OnlineIndex:
     last_compact_map: Optional[np.ndarray] = None  # old->new rows, last compact
     pending_key: Optional[Array] = None  # PRNG key stashed by buffered adds
     pq_codebook: Optional[Array] = None  # trained PQ code space (precision="pq")
+    tracker: object = None  # obs.Tracker for lifecycle spans (None -> no-op)
     _enc: object = None  # cached kernels.precision.EncodedData (serving table)
     _ledger_synced: bool = False  # reconciliation ran (clones inherit True)
 
@@ -209,26 +211,38 @@ class OnlineIndex:
             return self
         if key is None:
             key = self.pending_key
-        batch = jnp.concatenate(
-            [p.astype(self.items.dtype) for p in self.pending], axis=0
+        trk = self.tracker or NOOP
+        with trk.span("index/flush") as sp:
+            batch = jnp.concatenate(
+                [p.astype(self.items.dtype) for p in self.pending], axis=0
+            )
+            m = batch.shape[0]
+            self._ensure_room(m)
+            n0 = int(self.graph.n_valid)
+            items = self.items.at[n0 : n0 + m].set(batch)
+            out = dynamic.insert(
+                self.graph, items, m, self.build_cfg, key, coarse=self.coarse
+            )
+            if len(out) == 3:
+                g, _, self.coarse = out
+            else:
+                g, _ = out
+            self.graph, self.items = g, items
+            self._enc = None  # compressed serving table re-derives lazily
+            # drained only after the wave landed: a failure above (growth OOM,
+            # insert error) leaves the buffer intact for retry, not silently
+            # lost
+            self.pending = ()
+            self.pending_key = None
+            sp.sync(self.graph.nbr_ids)
+        trk.log_metrics(
+            {
+                "index/flushed": m,
+                "index/n_items": self.n_items,
+                "index/ledger_depth": self.free_slots,
+                "index/capacity": self.capacity,
+            }
         )
-        m = batch.shape[0]
-        self._ensure_room(m)
-        n0 = int(self.graph.n_valid)
-        items = self.items.at[n0 : n0 + m].set(batch)
-        out = dynamic.insert(
-            self.graph, items, m, self.build_cfg, key, coarse=self.coarse
-        )
-        if len(out) == 3:
-            g, _, self.coarse = out
-        else:
-            g, _ = out
-        self.graph, self.items = g, items
-        self._enc = None  # compressed serving table re-derives lazily
-        # drained only after the wave landed: a failure above (growth OOM,
-        # insert error) leaves the buffer intact for retry, not silently lost
-        self.pending = ()
-        self.pending_key = None
         return self
 
     def remove(self, ids: Array) -> "OnlineIndex":
@@ -256,23 +270,33 @@ class OnlineIndex:
         newly_dead = ids_np[alive[ids_np]]
         if not newly_dead.size:
             return self
-        bucket = 1 << int(newly_dead.size - 1).bit_length()
-        padded = np.full(bucket, -1, np.int64)
-        padded[: newly_dead.size] = newly_dead
-        self.graph = dynamic.remove(
-            self.graph, self.items, jnp.asarray(padded, jnp.int32),
-            self.metric,
-        )
-        if self.coarse is not None:
-            # landmark victims are masked like any dead row; their frozen
-            # routing vectors keep steering the coarse walk
-            from repro.core import hierarchy
-
-            self.coarse = hierarchy.purge_rows(
-                self.coarse, jnp.asarray(newly_dead, jnp.int32)
+        trk = self.tracker or NOOP
+        with trk.span("index/remove") as sp:
+            bucket = 1 << int(newly_dead.size - 1).bit_length()
+            padded = np.full(bucket, -1, np.int64)
+            padded[: newly_dead.size] = newly_dead
+            self.graph = dynamic.remove(
+                self.graph, self.items, jnp.asarray(padded, jnp.int32),
+                self.metric,
             )
-        self.free_ids = self.free_ids + tuple(int(i) for i in newly_dead)
-        self._enc = None  # victims' rows must drop out of the serving table
+            if self.coarse is not None:
+                # landmark victims are masked like any dead row; their frozen
+                # routing vectors keep steering the coarse walk
+                from repro.core import hierarchy
+
+                self.coarse = hierarchy.purge_rows(
+                    self.coarse, jnp.asarray(newly_dead, jnp.int32)
+                )
+            self.free_ids = self.free_ids + tuple(int(i) for i in newly_dead)
+            self._enc = None  # victims' rows must drop out of the table
+            sp.sync(self.graph.alive)
+        trk.log_metrics(
+            {
+                "index/removed": int(newly_dead.size),
+                "index/n_items": self.n_items,
+                "index/ledger_depth": self.free_slots,
+            }
+        )
         return self
 
     def compact(self) -> np.ndarray:
@@ -283,15 +307,26 @@ class OnlineIndex:
         compact implicitly (``flush`` under ``auto_compact``) leave a trail
         for id-holding callers (the sharded router).
         """
-        g, x, id_map = dynamic.compact(self.graph, self.items)
-        self.graph, self.items = g, x
-        if self.coarse is not None:
-            from repro.core import hierarchy
+        trk = self.tracker or NOOP
+        with trk.span("index/compact") as sp:
+            reclaimed = len(self.free_ids)
+            g, x, id_map = dynamic.compact(self.graph, self.items)
+            self.graph, self.items = g, x
+            if self.coarse is not None:
+                from repro.core import hierarchy
 
-            self.coarse = hierarchy.remap_rows(self.coarse, id_map)
-        self.free_ids = ()
-        self.last_compact_map = np.asarray(id_map)
-        self._enc = None  # rows moved; compressed serving table re-derives
+                self.coarse = hierarchy.remap_rows(self.coarse, id_map)
+            self.free_ids = ()
+            self.last_compact_map = np.asarray(id_map)  # this IS a host sync
+            self._enc = None  # rows moved; compressed serving table re-derives
+            sp.synced = True
+        trk.log_metrics(
+            {
+                "index/compact_reclaimed": reclaimed,
+                "index/n_items": self.n_items,
+                "index/capacity": self.capacity,
+            }
+        )
         return self.last_compact_map
 
     def _ensure_room(self, m: int) -> None:
@@ -306,10 +341,14 @@ class OnlineIndex:
                 self.compact()
                 return
         needed = int(self.graph.n_valid) + m
+        old_cap = self.capacity
         new_cap = max(needed, int(self.capacity * self.growth_factor), 1)
         self.graph = graph_lib.grow_graph(self.graph, new_cap)
         self.items = jnp.pad(
             self.items, ((0, new_cap - self.items.shape[0]), (0, 0))
+        )
+        (self.tracker or NOOP).log_metrics(
+            {"index/grow_from": old_cap, "index/grow_to": new_cap}
         )
 
     # -- search --------------------------------------------------------------

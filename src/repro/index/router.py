@@ -49,11 +49,19 @@ class ShardedIndex:
         shards: list,
         gids: list,
         next_gid: int,
+        tracker=None,
     ):
         self.shards: list[OnlineIndex] = shards
         # per shard: (shard capacity,) int64, local row -> global id (-1 free)
         self.gids: list[np.ndarray] = [np.asarray(g, np.int64) for g in gids]
         self.next_gid = int(next_gid)
+        # one tracker for the router AND its shards: shard lifecycle spans
+        # (flush/remove/compact) nest under the router's fan-out spans
+        self.tracker = tracker
+        if tracker is not None:
+            for sh in self.shards:
+                if sh.tracker is None:
+                    sh.tracker = tracker
 
     # -- construction --------------------------------------------------------
 
@@ -259,6 +267,7 @@ class ShardedIndex:
         beam: Optional[int] = None,
         key: Optional[Array] = None,
         brute: bool = False,
+        with_stats: bool = False,
     ):
         """Fan out to every shard, merge per-shard top-k globally.
 
@@ -266,25 +275,42 @@ class ShardedIndex:
         convention (``serve.retrieval.score_from_dist``).  ``brute=True``
         serves each shard exactly — the merged result is then exactly the
         unsharded brute answer (the router's correctness oracle).
+
+        With a tracker attached, each shard's leg of the fan-out gets its own
+        ``router/shard`` span (the per-shard ``np.asarray`` merge pull is the
+        existing sync, so the span measures the shard's device work, not
+        dispatch) — the straggler profile of the fan-out in one trace.
+        ``with_stats=True`` appends a merged ``obs.SearchStats`` over all
+        shards' graph searches (``None`` under ``brute=True``).
         """
+        from repro.obs import NOOP, SearchStats
         from repro.serve import retrieval  # late: serve imports repro.index
 
         if key is None:
             key = jax.random.PRNGKey(0)
+        trk = self.tracker or NOOP
+        stats = None if brute else SearchStats()
         all_gids, all_dist = [], []
         for s, shard in enumerate(self.shards):
-            if brute:
-                ids, scores = retrieval.retrieve_brute(shard, interests, top_k)
-            else:
-                ids, scores = retrieval.retrieve(
-                    shard, interests, top_k, beam=beam,
-                    key=jax.random.fold_in(key, s),
+            with trk.span(f"router/shard{s}") as sp:
+                if brute:
+                    ids, scores = retrieval.retrieve_brute(
+                        shard, interests, top_k
+                    )
+                else:
+                    ids, scores, res = retrieval.retrieve(
+                        shard, interests, top_k, beam=beam,
+                        key=jax.random.fold_in(key, s), with_stats=True,
+                    )
+                    stats.update(res, n_items=shard.n_items)
+                ids = np.asarray(ids)
+                # scores -> distances for a convention-free merge;
+                # score_from_dist is an involution (negation for similarity
+                # metrics, identity otherwise)
+                dist = np.asarray(
+                    retrieval.score_from_dist(scores, self.metric)
                 )
-            ids = np.asarray(ids)
-            # scores -> distances for a convention-free merge; score_from_dist
-            # is an involution (negation for similarity metrics, identity
-            # otherwise)
-            dist = np.asarray(retrieval.score_from_dist(scores, self.metric))
+                sp.synced = True  # the np.asarray pulls are the sync
             # drop -1 padding AND inf-distance filler: a shard with fewer
             # than top_k live items pads with dedupe-masked duplicates whose
             # distance is inf — letting them through would surface duplicate
@@ -299,7 +325,10 @@ class ShardedIndex:
         out_dist = np.full(top_k, np.inf, np.float32)
         out_ids[: order.size] = gids[order]
         out_dist[: order.size] = dist[order]
-        return out_ids, retrieval.score_from_dist(out_dist, self.metric)
+        scores = retrieval.score_from_dist(out_dist, self.metric)
+        if with_stats:
+            return out_ids, scores, stats
+        return out_ids, scores
 
     # -- persistence ---------------------------------------------------------
 

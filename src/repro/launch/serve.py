@@ -33,7 +33,17 @@ from repro import configs
 
 def serve_retrieval(args):
     from repro.index import OnlineIndex, ShardedIndex
+    from repro.obs import JsonlTracker
     from repro.serve import retrieval
+    from repro.serve.loop import ServeLoopConfig, ServingLoop
+
+    tracker = None
+    if args.trace:
+        tracker = JsonlTracker(
+            args.trace,
+            run_meta={"launcher": "serve_retrieval", "mode": "retrieval",
+                      "n_items": args.n_items, "shards": args.shards},
+        )
 
     key = jax.random.PRNGKey(0)
     items = jax.random.normal(key, (args.n_items, args.d))
@@ -58,21 +68,48 @@ def serve_retrieval(args):
         index = cls.load(args.snapshot)
         print(f"snapshot round trip ({args.snapshot}) in {time.time()-t0:.1f}s")
 
-    def one_request(q):
-        if args.shards > 1:
-            return index.retrieve(q, args.topk, beam=48)
-        return retrieval.retrieve(index, q, args.topk, beam=48)
-
-    lat = []
-    for r in range(args.requests):
-        q = jax.random.normal(jax.random.fold_in(key, 100 + r), (4, args.d))
-        t0 = time.time()
-        ids, scores = one_request(q)
-        jax.block_until_ready(jnp.asarray(scores))
-        lat.append(time.time() - t0)
-    lat_ms = np.asarray(lat[2:]) * 1e3  # drop warmup
-    print(f"{args.requests} requests: p50={np.percentile(lat_ms,50):.1f}ms "
-          f"p99={np.percentile(lat_ms,99):.1f}ms")
+    if args.shards > 1:
+        # router fan-out path: per-shard spans land in the trace; latency
+        # is measured around the merged answer like before
+        if tracker is not None:
+            index.tracker = tracker
+            for sh in index.shards:
+                sh.tracker = tracker
+        lat = []
+        for r in range(args.requests):
+            q = jax.random.normal(jax.random.fold_in(key, 100 + r), (4, args.d))
+            t0 = time.time()
+            ids, scores = index.retrieve(q, args.topk, beam=48)
+            jax.block_until_ready(jnp.asarray(scores))
+            lat.append(time.time() - t0)
+        lat_ms = np.asarray(lat[2:]) * 1e3  # drop warmup
+        print(f"{args.requests} requests: p50={np.percentile(lat_ms,50):.1f}ms "
+              f"p99={np.percentile(lat_ms,99):.1f}ms")
+    else:
+        # single index: traffic runs through the instrumented ServingLoop —
+        # pow2-coalesced waves, enqueue->synced-result latency, reservoir
+        # recall audit, all reported through the tracker
+        loop = ServingLoop(
+            index,
+            ServeLoopConfig(top_k=args.topk, beam=48, max_batch=16),
+            tracker=tracker,
+        )
+        for r in range(args.requests):
+            q = jax.random.normal(jax.random.fold_in(key, 100 + r), (4, args.d))
+            loop.submit(np.asarray(q))
+            loop.step()
+            if r == 1:  # drop compile warmup from the reported window
+                loop.reset_window()
+        rec = loop.report(audit_k=min(args.topk, 10))
+        print(f"{loop.served} queries in {rec['n_waves']} waves: "
+              f"p50={rec['p50_latency_ms']:.1f}ms "
+              f"p99={rec['p99_latency_ms']:.1f}ms qps={rec['qps']:.1f} "
+              f"recall@{min(args.topk, 10)}="
+              f"{rec.get(f'recall_at_{min(args.topk, 10)}', float('nan')):.3f} "
+              f"scan_rate={rec['scanning_rate']:.4f}")
+    if tracker is not None:
+        tracker.finish()
+        print(f"trace written to {args.trace}")
 
 
 def serve_lm(args):
@@ -117,6 +154,9 @@ def main():
                     help="save + restore the index through a snapshot "
                          "before serving")
     ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="write an obs.JsonlTracker event trace "
+                         "(spans + metrics) of the serving run")
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -1,0 +1,32 @@
+"""repro.obs — the telemetry subsystem (trackers, spans, search stats).
+
+One ``Tracker`` protocol (``log_metrics`` + ``span``), three
+implementations (``NoopTracker``/``InMemoryTracker``/``JsonlTracker``), and
+the ``SearchStats`` aggregator that folds per-query search signals into
+scanning rate / hash saturation / comps histograms at host sync boundaries.
+Event schema and reading guide: docs/observability.md.
+"""
+
+from repro.obs.stats import SearchStats
+from repro.obs.tracker import (
+    NOOP,
+    InMemoryTracker,
+    JsonlTracker,
+    NoopTracker,
+    Span,
+    Tracker,
+    load_events,
+    span_tree,
+)
+
+__all__ = [
+    "Tracker",
+    "Span",
+    "NoopTracker",
+    "InMemoryTracker",
+    "JsonlTracker",
+    "SearchStats",
+    "NOOP",
+    "load_events",
+    "span_tree",
+]

@@ -89,12 +89,20 @@ def retrieve(
     *,
     beam: Optional[int] = None,
     key: Optional[Array] = None,
+    with_stats: bool = False,
 ):
     """k-NN retrieval: EHC search per interest + cross-interest dedupe/merge.
 
     Returns (item_ids (top_k,), scores (top_k,)) — scores follow
     ``score_from_dist``: higher = better for similarity metrics (ip,
     cosine), plain distances (lower = better) otherwise.
+
+    ``with_stats=True`` appends the raw per-interest ``SearchResult`` as a
+    third element.  The search computes ``n_comps``/``hash_full``/``n_iters``
+    exactly for every query anyway; the default 2-tuple used to be the only
+    surface, silently discarding them — serving telemetry (``obs.SearchStats``
+    saturation/scanning-rate accounting) folds this object at its own sync
+    boundary, so requesting it adds no host sync here.
     """
     # one search dispatch for facade and serving: OnlineIndex.search flushes
     # buffered writes and serves on the build's kernel path / LGD setting
@@ -109,7 +117,10 @@ def retrieve(
     dist_s = jnp.where(dup | (ids_s < 0), jnp.inf, dist[order])
     sel = jnp.argsort(dist_s)[:top_k]
     out_ids = ids_s[sel]
-    return out_ids, score_from_dist(dist_s[sel], index.metric)
+    scores = score_from_dist(dist_s[sel], index.metric)
+    if with_stats:
+        return out_ids, scores, res
+    return out_ids, scores
 
 
 def retrieve_brute(index: OnlineIndex, interests: Array, top_k: int):

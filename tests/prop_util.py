@@ -377,6 +377,62 @@ def check_search_comps_accounting(seed: int, n: int, k: int, B: int) -> None:
     )
 
 
+def check_tracker_transparency(seed: int, n: int, k: int, B: int) -> None:
+    """Telemetry is read-only: tracker on == tracker off, bitwise (fp32).
+
+    Builds the same dataset twice through ``construct.build`` — once bare,
+    once under an ``InMemoryTracker`` — and asserts the committed graphs and
+    a subsequent B-query search are bit-identical.  The tracked run must
+    also have actually produced telemetry (stride spans + cumulative build
+    metrics whose final ``build/n_comps`` equals the returned counter), so
+    a silently-disconnected tracker can't pass as "transparent".
+    """
+    import jax
+
+    from repro.core import construct
+    from repro.core import search as search_lib
+    from repro.obs import InMemoryTracker
+
+    x = jnp.asarray(make_points(seed, n, 4))
+    # n_seed_init below n so the instrumented wave loop actually runs
+    cfg = construct.BuildConfig(
+        k=k, metric="l2", wave=8, n_seed_init=min(8, max(2, n - 1)),
+        use_pallas=False,
+    )
+    key = jax.random.PRNGKey(seed)
+    g0, st0 = construct.build(x, cfg, key)
+    trk = InMemoryTracker()
+    g1, st1 = construct.build(x, cfg, key, tracker=trk)
+    for f in ("nbr_ids", "nbr_dist", "alive", "rev_ids", "rev_ptr"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g0, f)), np.asarray(getattr(g1, f)),
+            err_msg=f"graph field {f} changed under telemetry",
+        )
+    assert int(st0.n_comps) == int(st1.n_comps)
+
+    stride_spans = trk.spans("build/stride")
+    assert stride_spans and all(e["synced"] for e in stride_spans)
+    build_metrics = [
+        e for e in trk.metrics_events if "build/n_comps" in e["metrics"]
+    ]
+    assert build_metrics, "tracked build emitted no build metrics"
+    assert build_metrics[-1]["metrics"]["build/n_comps"] == int(st1.n_comps)
+
+    rng = np.random.RandomState(seed ^ 0x0B5)
+    q = jnp.asarray(rng.rand(B, 4).astype(np.float32))
+    scfg = search_lib.SearchConfig(
+        k=min(k, 8), beam=16, n_seeds=4, metric="l2", max_iters=24,
+        use_pallas=False,
+    )
+    r0 = search_lib.search(g0, x, q, jax.random.PRNGKey(seed), scfg)
+    r1 = search_lib.search(g1, x, q, jax.random.PRNGKey(seed), scfg)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    np.testing.assert_array_equal(np.asarray(r0.dists), np.asarray(r1.dists))
+    np.testing.assert_array_equal(
+        np.asarray(r0.n_comps), np.asarray(r1.n_comps)
+    )
+
+
 def check_topk_smallest_matches_numpy(seed: int, m: int, c: int, k: int) -> None:
     """ref.topk_smallest == NumPy partial sort, ids consistent with dists."""
     from repro.kernels import ref

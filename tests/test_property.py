@@ -88,6 +88,13 @@ def test_search_comps_accounting(seed, n, k, B):
     prop_util.check_search_comps_accounting(seed, n, k, B)
 
 
+@given(seeds, st.integers(16, 24), st.integers(3, 6), st.integers(1, 4))
+@settings(max_examples=6)  # each distinct shape compiles a build + search
+def test_tracker_transparency(seed, n, k, B):
+    """Telemetry on == telemetry off, bitwise (fp32): graphs and searches."""
+    prop_util.check_tracker_transparency(seed, n, k, B)
+
+
 @given(seeds, st.integers(1, 6), st.integers(1, 20), st.integers(1, 8))
 def test_topk_smallest_matches_numpy(seed, m, c, k):
     prop_util.check_topk_smallest_matches_numpy(seed, m, c, k)

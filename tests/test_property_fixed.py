@@ -56,6 +56,11 @@ def test_search_comps_accounting(seed, n, k, B):
     prop_util.check_search_comps_accounting(seed, n, k, B)
 
 
+@pytest.mark.parametrize("seed,n,k,B", [(0, 20, 4, 2), (1, 24, 6, 4)])
+def test_tracker_transparency(seed, n, k, B):
+    prop_util.check_tracker_transparency(seed, n, k, B)
+
+
 @pytest.mark.parametrize("seed,m,c,k", [(0, 5, 16, 3), (1, 2, 20, 8), (2, 6, 1, 1)])
 def test_topk_smallest(seed, m, c, k):
     prop_util.check_topk_smallest_matches_numpy(seed, m, c, k)

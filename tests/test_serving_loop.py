@@ -1,0 +1,260 @@
+"""ServingLoop semantics (repro.serve.loop).
+
+The loop is a deterministic host-side state machine; these tests drive it
+step by step and pin the contracts the benchmarks and the CI serving gate
+stand on: exactly-once serving, pow2 wave coalescing, churn flushed at wave
+boundaries (reads observe prior writes), the deterministic recall
+reservoir, and the report/audit surface.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import construct
+from repro.index.lifecycle import OnlineIndex
+from repro.obs import InMemoryTracker
+from repro.serve.loop import ServeLoopConfig, ServingLoop, _slice_result
+
+D = 8
+
+
+def _mk_index(n=192, seed=0, k=6):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.rand(n, D).astype(np.float32))
+    return OnlineIndex.build(
+        x, construct.BuildConfig(k=k, wave=64), key=jax.random.PRNGKey(1)
+    )
+
+
+def _queries(m, seed=100):
+    return np.random.RandomState(seed).rand(m, D).astype(np.float32)
+
+
+def _mk_loop(index=None, **cfg_kw):
+    index = index or _mk_index()
+    return ServingLoop(index, ServeLoopConfig(top_k=5, **cfg_kw))
+
+
+# ---------------------------------------------------------------------------
+# coalescing + exactly-once
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_bucketing_and_drain_order():
+    loop = _mk_loop(max_batch=8)
+    assert loop.submit(_queries(5)) == 5
+    assert loop.submit(_queries(6, seed=101)) == 11
+    w1 = loop.step()  # drains 8 (the cap), bucket 8
+    assert (w1["batch"], w1["bucket"]) == (8, 8)
+    w2 = loop.step()  # drains the remaining 3, padded to 4
+    assert (w2["batch"], w2["bucket"]) == (3, 4)
+    assert loop.step() is None  # empty queue: no wave, no crash
+    assert loop.served == 11 and loop.queue_depth == 0
+
+
+@pytest.mark.parametrize("m,bucket", [(1, 1), (2, 2), (3, 4), (4, 4), (7, 8)])
+def test_bucket_is_next_pow2(m, bucket):
+    loop = _mk_loop(max_batch=8)
+    loop.submit(_queries(m))
+    assert loop.step()["bucket"] == bucket
+
+
+def test_single_query_submit_is_a_row():
+    loop = _mk_loop(max_batch=4)
+    loop.submit(_queries(1)[0])  # 1-D submit
+    w = loop.step()
+    assert (w["batch"], w["bucket"]) == (1, 1) and loop.served == 1
+
+
+def test_pump_drains_everything():
+    loop = _mk_loop(max_batch=4)
+    loop.submit(_queries(11))
+    assert loop.pump() == 3  # 4 + 4 + 3
+    assert loop.served == 11 and loop.queue_depth == 0
+    assert loop.stats.n_queries == 11  # padding lanes not double-counted
+
+
+def test_served_ids_are_alive_rows():
+    idx = _mk_index()
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, max_batch=8,
+                                            recall_sample_every=1))
+    loop.submit(_queries(13))
+    loop.pump()
+    alive = np.asarray(idx.graph.alive)
+    for ids in loop._res_ids:
+        assert (ids >= 0).all() and (ids < idx.n_items).all()
+        assert alive[ids].all()
+
+
+# ---------------------------------------------------------------------------
+# churn interleave: reads observe prior writes
+# ---------------------------------------------------------------------------
+
+
+def test_add_is_buffered_until_wave_boundary():
+    idx = _mk_index()
+    loop = _mk_loop(index=idx, max_batch=8)
+    n0 = idx.n_items
+    loop.add(_queries(3, seed=55), key=jax.random.PRNGKey(9))
+    # buffered: the catalog counts them, the graph has not committed them
+    assert idx.n_pending == 3 and int(idx.graph.n_valid) == n0
+    loop.submit(_queries(2))
+    loop.step()
+    assert idx.n_pending == 0  # flushed at the wave boundary, pre-search
+    assert int(idx.graph.n_valid) == n0 + 3 and idx.n_items == n0 + 3
+
+
+def test_remove_lands_immediately_and_is_never_served():
+    idx = _mk_index()
+    victims = [3, 40, 77]
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, max_batch=8,
+                                            recall_sample_every=1))
+    loop.remove(jnp.asarray(victims))
+    assert idx.n_items == 192 - 3
+    loop.submit(_queries(16))
+    loop.pump()
+    for ids in loop._res_ids:
+        assert not np.isin(ids, victims).any()
+
+
+def test_inserted_row_is_findable_next_wave():
+    idx = _mk_index()
+    probe = _queries(1, seed=777)
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, beam=32, max_batch=4,
+                                            recall_sample_every=1))
+    new_id = idx.n_items  # lands in the first free slot
+    loop.add(probe, key=jax.random.PRNGKey(4))
+    loop.submit(probe)  # query == the just-inserted vector
+    loop.step()
+    assert new_id in loop._res_ids[0]  # its own (distance-0) neighbor
+
+
+# ---------------------------------------------------------------------------
+# recall reservoir + audit
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_stride_and_round_robin():
+    loop = _mk_loop(max_batch=8, recall_sample_every=2, recall_reservoir=3)
+    q = _queries(10)
+    loop.submit(q)
+    loop.pump()
+    # sampled arrival indices: 0,2,4,6,8 -> slots 0,1,2,0,1 (round robin),
+    # so the reservoir ends holding arrivals 6, 8, 4 in slots 0, 1, 2
+    assert len(loop._res_q) == 3
+    np.testing.assert_array_equal(loop._res_q[0], q[6])
+    np.testing.assert_array_equal(loop._res_q[1], q[8])
+    np.testing.assert_array_equal(loop._res_q[2], q[4])
+
+
+def test_audit_reports_fresh_and_served_recall():
+    idx = _mk_index()
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, max_batch=8,
+                                            recall_sample_every=1,
+                                            recall_reservoir=8))
+    loop.submit(_queries(8))
+    loop.pump()
+    out = loop.audit_recall(k=5)
+    assert out["n_audited"] == 8
+    assert 0.0 <= out["recall_at_5"] <= 1.0
+    assert 0.0 <= out["recall_at_5_served"] <= 1.0
+
+
+def test_audit_recall_high_on_tiny_catalog():
+    # a wide-beam walk over a 48-row catalog finds nearly everything; the
+    # floor guards the audit's alive-aware ground truth plumbing (a wrong
+    # n_valid/alive mask crashes recall toward 0), not EHC quality
+    idx = _mk_index(n=48)
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, beam=48, max_batch=8,
+                                            recall_sample_every=1))
+    loop.submit(_queries(8))
+    loop.pump()
+    out = loop.audit_recall(k=5)
+    assert out["recall_at_5"] >= 0.85
+
+
+def test_empty_reservoir_audit():
+    loop = _mk_loop(max_batch=4)
+    assert loop.audit_recall() == {"n_audited": 0}
+
+
+# ---------------------------------------------------------------------------
+# report + measurement window
+# ---------------------------------------------------------------------------
+
+
+def test_report_surface_and_reset_window():
+    idx = _mk_index()
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, max_batch=8))
+    loop.submit(_queries(12))
+    loop.pump()
+    rec = loop.report(audit_k=5)
+    for k in ("n_served", "n_waves", "qps", "p50_latency_ms",
+              "p99_latency_ms", "mean_latency_ms", "comps_per_query",
+              "scanning_rate", "hash_saturation_ratio", "capped_ratio",
+              "recall_at_5", "recall_at_5_served"):
+        assert k in rec, k
+    assert rec["n_served"] == 12 and rec["n_waves"] == 2
+    assert rec["qps"] > 0 and rec["p99_latency_ms"] >= rec["p50_latency_ms"]
+    assert rec["comps_per_query"] > 0
+    assert 0.0 < rec["scanning_rate"] < 1.0
+    # warm-up exclusion: the window resets, the index does not
+    loop.reset_window()
+    assert loop.served == 0 and loop.stats.n_queries == 0
+    assert loop._res_q == [] and loop._lat == []
+    assert idx.n_items == 192
+    loop.submit(_queries(3))
+    loop.pump()
+    assert loop.report()["n_served"] == 3
+
+
+def test_latency_includes_queueing_delay():
+    import time
+
+    loop = _mk_loop(max_batch=8)
+    loop.submit(_queries(2))
+    time.sleep(0.05)  # queries wait in the queue before the wave fires
+    loop.step()
+    rec = loop.report()
+    assert rec["p50_latency_ms"] >= 50.0  # enqueue->result, not search-only
+
+
+# ---------------------------------------------------------------------------
+# telemetry wiring
+# ---------------------------------------------------------------------------
+
+
+def test_tracker_sees_the_wave_skeleton():
+    trk = InMemoryTracker()
+    idx = _mk_index()
+    loop = ServingLoop(idx, ServeLoopConfig(top_k=5, max_batch=8),
+                       tracker=trk)
+    assert idx.tracker is trk  # lifecycle spans share the trace
+    loop.submit(_queries(9))
+    loop.pump()
+    assert len(trk.spans("serve/step")) == 2
+    searches = trk.spans("serve/search")
+    assert len(searches) == 2
+    assert all(s["synced"] for s in searches)  # latency covered device work
+    assert all(s["parent"] == "serve/step" for s in searches)
+    per_wave = [e for e in trk.metrics_events
+                if "serve/batch" in e["metrics"]]
+    assert [e["metrics"]["serve/bucket"] for e in per_wave] == [8, 1]
+    assert [e["step"] for e in per_wave] == [1, 2]
+
+
+def test_slice_result_trims_every_field():
+    idx = _mk_index()
+    res = idx.search(jnp.asarray(_queries(4)), 5, key=jax.random.PRNGKey(0))
+    cut = _slice_result(res, 2)
+    for f in res._fields:
+        assert getattr(cut, f).shape[0] == 2, f
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        ServeLoopConfig(max_batch=6)  # not a pow2
+    with pytest.raises(AssertionError):
+        ServeLoopConfig(recall_sample_every=0)
