@@ -130,6 +130,83 @@ def merge_build_gate(
     }
 
 
+def parallel_gate(
+    n: int = 4000, d: int = 20, seed: int = 0, shards: int = 2
+) -> dict:
+    """The two-sided CI record for ``build_parallel`` vs ``build``.
+
+    Unlike ``merge_build_gate`` (same cfg both sides, ratio informational),
+    this gate runs the parallel path the way it is meant to be run — light
+    sub-builds (``sub_cfg``: capped insertion-search iterations, coarse
+    seeding so leaf levels exist) folded by shallow coarse-seeded cross
+    searches (``merge_scfg``: beam == k, few EHC iterations) widened by the
+    second-hop proposals — and gates BOTH sides of the bargain:
+
+      * ``recall_at_10`` >= the sequential quality floor (0.95): the cheap
+        path may not cost quality.  Deterministic at the pinned seed.
+      * ``wallclock_ratio`` < 1.0: the parallel build must actually beat
+        the sequential build wall-clock, even on a single core, because it
+        does LESS TOTAL WORK — sub-builds cap their search depth and the
+        merge repairs boundary and interior alike.  Timed as the median of
+        5 alternating warmed runs so scheduler hiccups cannot flip the
+        gate; ``run_meta()`` stamps the host CPU count so records from
+        multi-core runners (where thread overlap widens the gap) stay
+        interpretable.
+    """
+    x = common.dataset("uniform", n, d, seed)
+    true_ids = common.ground_truth(x, x, 11, "l2")[:, 1:]  # drop self
+    cfg = construct.BuildConfig(
+        k=20, metric="l2", wave=256, beam=40, n_seeds=8, lgd=True,
+        dispatch="reference",
+    )
+    sub_cfg = dataclasses.replace(
+        cfg, max_iters=12, seed_mode="coarse", coarse_landmarks=64,
+        coarse_members=8,
+    )
+    merge_scfg = dataclasses.replace(
+        cfg.search_config(), beam=cfg.k, max_iters=4,
+        coarse_beam=8, coarse_iters=4,
+    )
+
+    def seq():
+        g, _ = construct.build(x, cfg, jax.random.PRNGKey(seed))
+        return g
+
+    def par():
+        g, _ = construct.build_parallel(
+            x, cfg, jax.random.PRNGKey(seed), shards=shards,
+            refine_rounds=0, search_chunk=1024,
+            sub_cfg=sub_cfg, merge_scfg=merge_scfg,
+        )
+        return g
+
+    # warm both pipelines at the real shapes, then alternate timed runs
+    jax.block_until_ready(seq().nbr_ids)
+    jax.block_until_ready(par().nbr_ids)
+    t_seq, t_par = [], []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        g_seq = seq()
+        jax.block_until_ready(g_seq.nbr_ids)
+        t_seq.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        g_par = par()
+        jax.block_until_ready(g_par.nbr_ids)
+        t_par.append(time.perf_counter() - t0)
+    med = lambda ts: sorted(ts)[len(ts) // 2]
+    return {
+        "n": n, "d": d, "k": 10, "shards": shards,
+        "recall_at_10": common.graph_recall(g_par, true_ids, 10),
+        "recall_at_10_seq": common.graph_recall(g_seq, true_ids, 10),
+        "build_s_seq": med(t_seq),
+        "build_s_par": med(t_par),
+        "build_s_seq_all": t_seq,
+        "build_s_par_all": t_par,
+        "wallclock_ratio": med(t_par) / med(t_seq) if med(t_seq) > 0
+        else float("inf"),
+    }
+
+
 def run(n: int = 10_000, dims=DIMS, metrics=("l2", "l1"), k: int = 10, seed: int = 0):
     tbl = common.Table(
         "construction: recall vs dim at matched scanning rate (Fig 6/7, Table II)",

@@ -25,6 +25,16 @@ compares it against the committed floors in ``benchmarks/baseline_ci.json``:
     sub-graph merge or the refinement sweep regressed.  The record's
     ``wallclock_ratio`` (parallel vs sequential build) rides along ungated —
     shared CI runners compress thread overlap.
+  * ``parallel_recall_at_10`` (floor ``merge_recall_at_10_min``) +
+    ``parallel_wallclock_ratio`` (ceiling ``parallel_wallclock_ratio_max``)
+    — the tuned divide-and-conquer path (bench_construction.parallel_gate,
+    n=4000/d=20, light sub-builds + shallow coarse-seeded merge searches +
+    second-hop proposals): merged recall@10 must hold the SAME 0.95 floor
+    as the merge gate WHILE the parallel/sequential wall-clock ratio stays
+    below 1.0 — "build_parallel beats build" as a regression-checked claim.
+    Median-of-3 alternating warmed runs; run_meta stamps host_cpus so the
+    ratio reads correctly across runners.  Opt-in record (``benchmarks.run
+    --parallel``) with the usual absent-record rule.
   * ``hier_recall_at_10_min`` + ``scanning_rate_max`` — hierarchical
     (coarse-landmark) seeding at paper scale (bench_search.hier_gate,
     n=10^5/d=20): recall@10 on sampled rows must hold the quality floor
@@ -102,6 +112,21 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
          float(baseline["merge_recall_at_10_min"]),
          mrec >= float(baseline["merge_recall_at_10_min"]))
     )
+    if "parallel_gate" in bench:  # opt-in record (benchmarks.run
+        # --parallel); absent record skips, present record gates two-sided:
+        # recall floor (shared with merge_build) + wallclock ratio ceiling
+        prec = float(bench["parallel_gate"]["recall_at_10"])
+        results.append(
+            ("parallel_recall_at_10", prec,
+             float(baseline["merge_recall_at_10_min"]),
+             prec >= float(baseline["merge_recall_at_10_min"]))
+        )
+        pratio = float(bench["parallel_gate"]["wallclock_ratio"])
+        results.append(
+            ("parallel_wallclock_ratio", pratio,
+             float(baseline["parallel_wallclock_ratio_max"]),
+             pratio <= float(baseline["parallel_wallclock_ratio_max"]))
+        )
     if "hier_gate" in bench:  # opt-in record (minutes at n=10^5); absent in
         # quick --ci-out runs — but when present it is always gated, and the
         # scanning-rate check is a CEILING, not a floor
@@ -151,7 +176,10 @@ def check(bench: dict, baseline: dict) -> list[tuple[str, float, float, bool]]:
 
 # metrics whose bound is a CEILING (measured must stay <= the baseline);
 # "_rate"-suffixed names are ceilings by convention, the rest are listed here
-_CEILINGS = frozenset({"rerank_recall_delta", "serving_p99_p50_ratio"})
+_CEILINGS = frozenset({
+    "rerank_recall_delta", "serving_p99_p50_ratio",
+    "parallel_wallclock_ratio",
+})
 
 
 def main() -> int:

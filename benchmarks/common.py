@@ -11,6 +11,7 @@ measured on the SAME machine, mirroring the paper's protocol (Table IV).
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import Callable, Dict, Iterable, List
 
@@ -161,6 +162,10 @@ def run_meta() -> dict:
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        # wall-clock records (e.g. parallel_gate's wallclock_ratio) read
+        # differently on 1-core vs multi-core hosts — stamp the count so
+        # ratio records stay interpretable across runners
+        "host_cpus": os.cpu_count(),
         "git_sha": _git_sha(),
         "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }

@@ -43,6 +43,12 @@ def main():
                          "(bench_search.run_precision: int8 gather speedup "
                          "at n=2^17/d=256/C=512 + PQ rank-then-rerank recall "
                          "delta — large-allocation bench, opt-in like --hier)")
+    ap.add_argument("--parallel", action="store_true",
+                    help="include the parallel-build gate "
+                         "(bench_construction.parallel_gate: build_parallel "
+                         "vs build at n=4000/d=20 — wallclock_ratio ceiling-"
+                         "gated below 1.0 AND merged recall@10 floor-gated; "
+                         "opt-in like --hier, bench-smoke runs it)")
     ap.add_argument("--serving", action="store_true",
                     help="include the sustained-load serving gate "
                          "(bench_serving.serving_gate: ServingLoop under "
@@ -105,6 +111,11 @@ def main():
         # the serving gate drives the instrumented ServingLoop and writes its
         # JsonlTracker trace next to the CI artifact (uploaded together by
         # the bench-smoke job); opt-in with the same absent-record rule
+        # the parallel-build gate times build_parallel against build at its
+        # tuned shape (median-of-5, both pipelines warmed); opt-in with the
+        # same absent-record rule
+        parallel = (bench_construction.parallel_gate()
+                    if args.parallel else None)
         serving = None
         if args.serving:
             trace_path = os.path.splitext(args.ci_out)[0] + "_trace.jsonl"
@@ -130,6 +141,11 @@ def main():
             # coarse-seeding quality at n=10^5: recall AND scanning rate
             # both gated; the random-seed baseline rides along inside
             payload["hier_gate"] = hier
+        if parallel is not None:
+            # divide-and-conquer build, tuned path: wallclock_ratio gated
+            # as a CEILING (< 1.0 = parallel actually wins) AND merged
+            # recall@10 gated at the same 0.95 floor as merge_build
+            payload["parallel_gate"] = parallel
         if precision is not None:
             # compressed engine: int8 gather speedup floor-gated, PQ
             # rank-then-rerank recall delta ceiling-gated; bf16 informational

@@ -551,7 +551,10 @@ def build_parallel(
     refine_rounds: int = 1,
     search_chunk: int = 512,
     mesh=None,
-) -> tuple[KNNGraph, BuildStats]:
+    return_coarse: bool = False,
+    sub_cfg: Optional[BuildConfig] = None,
+    merge_scfg=None,
+):
     """Divide-and-conquer build: S concurrent sub-builds + symmetric merges.
 
     The sequential online build caps construction throughput at one wave
@@ -578,17 +581,36 @@ def build_parallel(
       search_chunk: cross-search batch size inside ``symmetric_merge``.
       mesh: optional device mesh — sub-builds run via
         ``distributed.build_subgraphs`` (requires n % n_devices == 0 and
-        ``shards`` equal to the mesh's device count).
+        ``shards`` equal to the mesh's device count), and the merge-tree
+        levels run mesh-resident under shard_map where pair shapes allow.
+      return_coarse: append the merged graph's ``CoarseLevel`` to the
+        return — the same contract as ``build``: the merge fold's root
+        level when the tree produced one, a fresh ``derive_coarse``
+        otherwise (always a level under ``seed_mode="coarse"``, else None).
+      sub_cfg: optional distinct build configuration for the per-shard
+        sub-builds.  The merge's cross-searches + second-hop proposals
+        repair boundary and interior alike, so sub-builds can afford a
+        lighter effort (smaller ``beam``/``hash_slots``) than a standalone
+        build at the same quality target — the wallclock lever behind the
+        ``parallel_gate`` CI record.  Defaults to ``cfg``.
+      merge_scfg: optional ``SearchConfig`` for the merge-tree cross
+        searches.  Merge hits only seed the candidate commit (the hop
+        proposals widen them k_t-fold), so a shallow search — low
+        ``max_iters``, ``beam == k`` — loses little recall; coarse-seeded
+        entry points (``seed_mode="coarse"``) keep the shallow walks on
+        target.  Defaults to ``cfg.search_config()``.
 
     Returns: (graph, stats) — stats aggregate sub-builds, merge candidate
-    distances, and refinement comps (host-side fold, exact).
+    distances, and refinement comps (host-side fold, exact) — plus the
+    coarse level when ``return_coarse``.
     """
     n = x.shape[0]
     if key is None:
         key = jax.random.PRNGKey(0)
     if shards == 1 and mesh is None:
-        return build(x, cfg, key)
+        return build(x, cfg, key, return_coarse=return_coarse)
     bounds = partition_bounds(n, shards)
+    sub = sub_cfg if sub_cfg is not None else cfg
 
     if mesh is not None:
         from repro.core import distributed  # late: distributed imports construct
@@ -599,8 +621,8 @@ def build_parallel(
                 f"mesh has {n_dev} devices, build_parallel got "
                 f"shards={shards} — on a mesh, one sub-graph per device"
             )
-        graphs, sub_comps, sub_waves, sub_edges = distributed.build_subgraphs(
-            mesh, x, cfg, key
+        graphs, coarses, sub_comps, sub_waves, sub_edges = (
+            distributed.build_subgraphs(mesh, x, sub, key)
         )
     else:
         import concurrent.futures
@@ -608,7 +630,7 @@ def build_parallel(
         def _one(s: int):
             lo, hi = int(bounds[s]), int(bounds[s + 1])
             return build(
-                x[lo:hi], cfg, jax.random.fold_in(key, s), return_coarse=True
+                x[lo:hi], sub, jax.random.fold_in(key, s), return_coarse=True
             )
 
         with concurrent.futures.ThreadPoolExecutor(max_workers=shards) as ex:
@@ -623,11 +645,10 @@ def build_parallel(
 
     from repro.core import nndescent  # late: nndescent is a leaf consumer
 
-    scfg = cfg.search_config()
-    g, merge_comps = merge.merge_subgraphs(
+    scfg = merge_scfg if merge_scfg is not None else cfg.search_config()
+    g, merge_comps, coarse = merge.merge_subgraphs(
         graphs, x, scfg, jax.random.fold_in(key, 1_000_000),
-        search_chunk=search_chunk,
-        coarses=None if mesh is not None else coarses,
+        search_chunk=search_chunk, coarses=coarses, mesh=mesh,
     )
 
     g, refine_comps = nndescent.refine(
@@ -635,8 +656,18 @@ def build_parallel(
     )
 
     stats = BuildStats(
-        n_comps=Counter64.of(sub_comps + merge_comps + int(refine_comps)),
+        n_comps=Counter64.of(sub_comps + merge_comps + refine_comps),
         n_waves=jnp.asarray(sub_waves, jnp.int32),
         n_inserted_edges=Counter64.of(sub_edges),
     )
-    return g, stats
+    if not return_coarse:
+        return g, stats
+    if coarse is None and cfg.seed_mode == "coarse":
+        # no folded level survived the tree (e.g. a seed-mode mismatch on
+        # one shard) — re-derive on the merged graph, maintenance-style
+        from repro.core import hierarchy  # late: hierarchy imports construct
+
+        coarse = hierarchy.derive_coarse(
+            g, x, cfg, jax.random.fold_in(key, 2_000_000)
+        )
+    return g, stats, coarse

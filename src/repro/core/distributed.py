@@ -211,9 +211,17 @@ def build_subgraphs(
     seeds an exact |I|-graph over its block and runs the shard-local fused
     wave step (the same ``wave_core`` the sequential build jits) with zero
     collective traffic.  Returns the per-shard graphs in LOCAL id spaces —
-    exactly what ``merge.symmetric_merge`` folds — plus aggregate counters:
+    exactly what ``merge.symmetric_merge`` folds — their coarse levels, and
+    aggregate counters:
 
-      (graphs: list[KNNGraph], n_comps: int, n_waves: int, n_edges: int)
+      (graphs: list[KNNGraph], coarses: list[CoarseLevel | None],
+       n_comps: int, n_waves: int, n_edges: int)
+
+    Under ``cfg.seed_mode == "coarse"`` each shard gets a derived coarse
+    level (shard-LOCAL ids — ``hierarchy.derive_coarse``, maintenance work
+    like the router's lazy re-derive, so uncharged) so the merge fold's
+    cross searches seed coarsely instead of falling back to cold EHC; other
+    seed modes return ``None`` per shard.
     """
     from repro.core import brute  # late: brute sits above distributed
 
@@ -281,4 +289,103 @@ def build_subgraphs(
                 row_scale=jnp.asarray(gh.row_scale[lo:hi]),
             )
         )
-    return graphs, int(total_comps), n_waves * n_dev, int(total_edges)
+    coarses: list = [None] * n_dev
+    if cfg.seed_mode == "coarse":
+        from repro.core import hierarchy  # late: hierarchy imports construct
+
+        for s, gs in enumerate(graphs):
+            lo = s * n_local
+            coarses[s] = hierarchy.derive_coarse(
+                gs, x[lo : lo + n_local], cfg,
+                jax.random.fold_in(key, 500_000 + s),
+            )
+    return graphs, coarses, int(total_comps), n_waves * n_dev, int(total_edges)
+
+
+def merge_pairs_mesh(
+    pairs,
+    xs,
+    scfg,
+    keys,
+    coarses=None,
+):
+    """Merge P equal-shape sub-graph pairs under ``shard_map``, one pair per
+    device — the mesh-resident fold level of ``merge.merge_subgraphs``.
+
+    Each pair's leaves are stacked along a new leading axis and sharded over
+    a P-device sub-mesh; the per-device body runs the full-batch cross
+    searches (coarse-seeded when every pair carries levels) and the SAME
+    traceable commit as the host path (``merge.merge_commit_core`` — one
+    implementation of merge semantics), so proposal assembly, candidate
+    commit and reverse rebuild all stay device-resident.
+
+    Args:
+      pairs: list of (g_a, g_b) fully-allocated sub-graphs, identical leaf
+        shapes across pairs (the caller checks; shapes must stack).
+      xs: list of (n_a + n_b, d) data slices, one per pair.
+      scfg: ``search.SearchConfig`` for the cross searches.
+      keys: list of per-pair PRNG keys.
+      coarses: optional list of (coarse_a, coarse_b) CoarseLevels, all
+        present (mixed None entries must be filtered by the caller); cross
+        searches then seed coarsely, else randomly.
+
+    Returns (list of merged KNNGraph, total cross + hop comps as an exact
+    host int).
+    """
+    import dataclasses
+
+    from repro.core import merge as merge_lib
+
+    P_n = len(pairs)
+    mesh = compat.make_mesh((P_n,), ("pairs",))
+    stack = lambda trees: jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+    ga_s = stack([a for a, _ in pairs])
+    gb_s = stack([b for _, b in pairs])
+    x_s = jnp.stack(xs)
+    k_s = jnp.stack(keys)
+    n_a = pairs[0][0].capacity
+    use_coarse = coarses is not None and scfg.seed_mode == "coarse"
+    scfg_eff = (
+        scfg if use_coarse else dataclasses.replace(scfg, seed_mode="random")
+    )
+    args = (ga_s, gb_s, x_s, k_s)
+    if use_coarse:
+        args += (stack([ca for ca, _ in coarses]),
+                 stack([cb for _, cb in coarses]))
+
+    def local(ga, gb, xp, kk, *cs):
+        take0 = lambda t: jax.tree.map(lambda a: a[0], t)
+        g_a, g_b = take0(ga), take0(gb)
+        ca = take0(cs[0]) if cs else None
+        cb = take0(cs[1]) if cs else None
+        xp0, kk0 = xp[0], kk[0]
+        xa, xb = xp0[:n_a], xp0[n_a:]
+        k_ab, k_ba = jax.random.split(kk0)
+        res_ab = search_lib.search(g_b, xb, xa, k_ab, scfg_eff, coarse=cb)
+        res_ba = search_lib.search(g_a, xa, xb, k_ba, scfg_eff, coarse=ca)
+        merged, hop_c = merge_lib.merge_commit_core(
+            g_a, g_b, xa, xb, res_ab.ids, res_ab.dists,
+            res_ba.ids, res_ba.dists, scfg.metric, scfg.dispatch,
+        )
+        comps = (
+            jnp.sum(res_ab.n_comps, dtype=jnp.int32)
+            + jnp.sum(res_ba.n_comps, dtype=jnp.int32)
+            + hop_c
+        )
+        expand = lambda t: jax.tree.map(lambda a: a[None], t)
+        return expand(merged), comps[None]
+
+    spec = P("pairs")
+    fn = compat.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=tuple(spec for _ in args),
+        out_specs=(spec, spec),
+    )
+    out_g, out_c = jax.jit(fn)(*args)
+    out_g = jax.device_get(out_g)
+    graphs = [
+        jax.tree.map(lambda a, i=i: jnp.asarray(a[i]), out_g)
+        for i in range(P_n)
+    ]
+    return graphs, sum(int(c) for c in jax.device_get(out_c))

@@ -204,6 +204,47 @@ def build_coarse(
     return _assemble(x, landmark_rows, cfg, key_b, assign_rows)
 
 
+def fold_coarse(
+    ca: Optional[CoarseLevel],
+    cb: Optional[CoarseLevel],
+    n_a: int,
+    scfg,
+    key: Array,
+) -> tuple[Optional[CoarseLevel], int]:
+    """Fold two sides' coarse levels into one for a merged intermediate.
+
+    ``ca`` routes the left block (rows [0, n_a) of the merged graph, already
+    its own id space) and ``cb`` the right block in LOCAL ids — the same
+    offset arithmetic ``merge.stack_subgraphs`` applies to the graphs
+    remaps ``cb``'s full-graph references (+n_a on live entries).  The two
+    landmark graphs — small, fully allocated by construction — merge via
+    ``merge.symmetric_merge`` over the concatenated frozen routing points
+    (landmark-local ids, random-seeded cross searches: levels don't carry
+    levels), and the member rings concatenate per landmark.
+
+    Either side missing means no fold: the merged intermediate seeds
+    randomly, exactly like a leaf without a level.  Returns
+    (folded level or None, comps charged by the landmark-graph merge).
+    """
+    if ca is None or cb is None:
+        return None, 0
+    points = jnp.concatenate([ca.points, cb.points])
+    gc, comps = merge.symmetric_merge(
+        ca.graph, cb.graph, points, scfg, key
+    )
+    off = lambda a: jnp.where(a >= 0, a + n_a, -1)
+    level = CoarseLevel(
+        landmark_rows=jnp.concatenate(
+            [ca.landmark_rows, off(cb.landmark_rows)]
+        ),
+        points=points,
+        graph=gc,
+        members=jnp.concatenate([ca.members, off(cb.members)], axis=0),
+        mem_ptr=jnp.concatenate([ca.mem_ptr, cb.mem_ptr]),
+    )
+    return level, comps
+
+
 def derive_coarse(g: KNNGraph, x: Array, cfg, key: Array) -> CoarseLevel:
     """Re-derive a coarse level offline from a live graph — the recovery path
     for pre-v2 snapshots, ``ShardedIndex.merge_shards`` outputs, and any

@@ -26,6 +26,13 @@ from repro.core import segments
 
 Array = jax.Array
 
+# Second-hop expansion width for merge proposals: only the nearest HOP_TOP
+# cross-search hits donate their neighbor lists.  Proposal volume (and the
+# two full lexsorts inside ``merge_candidates``) scales linearly with this;
+# the recall contribution concentrates in the first few hits' neighborhoods,
+# so a small cap keeps the k² candidate quality at a fraction of the cost.
+HOP_TOP = 20
+
 
 class MergeResult(NamedTuple):
     nbr_ids: Array  # (cap, k) int32  merged lists
@@ -188,8 +195,6 @@ def stack_subgraphs(g_a, g_b, n_a: int):
     *gathered* (concatenated), never recomputed — the cache owners already
     paid for it.
     """
-    from repro.core.graph import KNNGraph  # graph does not import merge
-
     n_b = g_b.capacity
     if int(g_a.n_valid) != g_a.capacity or int(g_b.n_valid) != n_b:
         raise ValueError(
@@ -197,6 +202,17 @@ def stack_subgraphs(g_a, g_b, n_a: int):
             f"(n_valid == capacity); got {int(g_a.n_valid)}/{g_a.capacity} "
             f"and {int(g_b.n_valid)}/{n_b} — compact first"
         )
+    return _stack_core(g_a, g_b)
+
+
+def _stack_core(g_a, g_b):
+    """Traceable body of ``stack_subgraphs`` (shapes carry the capacities,
+    so the concatenation works identically under jit/shard_map — the host
+    wrapper keeps the fully-allocated precondition check)."""
+    from repro.core.graph import KNNGraph  # graph does not import merge
+
+    n_a = g_a.nbr_ids.shape[0]
+    n_b = g_b.nbr_ids.shape[0]
     b_ids = jnp.where(g_b.nbr_ids >= 0, g_b.nbr_ids + n_a, -1)
     R = max(g_a.rev_capacity, g_b.rev_capacity)
     cap = n_a + n_b
@@ -247,6 +263,95 @@ def _chunked_cross_search(g, xg, queries, key, scfg, chunk: int, coarse=None):
     return jnp.concatenate(ids)[:B], jnp.concatenate(dists)[:B], comps
 
 
+def merge_commit_core(
+    g_a, g_b, xa, xb, ab_ids, ab_d, ba_ids, ba_d, metric, dispatch,
+    hop_top=HOP_TOP,
+):
+    """Traceable merge commit: stack + proposals + candidate commit + reverse.
+
+    The single implementation behind the host path (jitted as
+    ``_merge_commit``) and the mesh fold (inlined into ``distributed
+    .merge_pairs_mesh``'s shard_map body).  Cross-search hits come in as
+    ``ab_ids``/``ab_d`` ((n_a, k), b-LOCAL ids: a's points vs g_b) and
+    ``ba_ids``/``ba_d`` ((n_b, k), a's ids — already the global [0, n_a)
+    space).  On top of the hits, each direction proposes the hits' own
+    neighbor lists through ``ops.merge_proposals`` (second-hop candidates,
+    distances via the one blocked engine), every pair goes in both
+    directions, and ``merge_candidates`` re-selects the joint top-k.
+
+    Returns (merged KNNGraph, hop-proposal comps () int32 — the cross-search
+    comps are the caller's, hop distances are charged here).
+    """
+    from repro.core import graph as graph_lib
+    from repro.kernels import ops
+
+    n_a, n_b = xa.shape[0], xb.shape[0]
+    stacked = _stack_core(g_a, g_b)
+
+    # second-hop proposals: the hits' own neighbor lists, blocked engine
+    ab_hop, ab_hop_d, c_ab = ops.merge_proposals(
+        xa, xb, ab_ids, g_b.nbr_ids, g_b.alive, metric,
+        dispatch=dispatch, sq_norms=g_b.sq_norms, hop_top=hop_top,
+    )
+    ba_hop, ba_hop_d, c_ba = ops.merge_proposals(
+        xb, xa, ba_ids, g_a.nbr_ids, g_a.alive, metric,
+        dispatch=dispatch, sq_norms=g_a.sq_norms, hop_top=hop_top,
+    )
+
+    # per-query pre-selection: of the h·k_t hop lanes only the best 2k can
+    # matter (at most k enter the query's own list; the surplus k keeps the
+    # reverse direction rich).  This caps the global candidate sort inside
+    # ``merge_candidates`` — its two full lexsorts are the commit's dominant
+    # cost — at O(n·k) instead of O(n·h·k_t).
+    k = g_a.nbr_ids.shape[1]
+    if ab_hop.shape[1] > 2 * k:
+        ab_hop_d, ab_hop = ops.topk_smallest(ab_hop_d, ab_hop, 2 * k)
+        ba_hop_d, ba_hop = ops.topk_smallest(ba_hop_d, ba_hop, 2 * k)
+
+    # a dead row must not receive or donate edges (search already masks dead
+    # *targets*; this masks dead *queries*)
+    def rows_for(side_lo, live, like):
+        r = jnp.arange(like.shape[0], dtype=jnp.int32) + side_lo
+        r = jnp.broadcast_to(r[:, None], like.shape)
+        return jnp.where(live[:, None], r, -1)
+
+    to_global_b = lambda ids: jnp.where(ids >= 0, ids + n_a, -1)
+    # (query rows, candidate ids GLOBAL, distances) per proposal family
+    families = (
+        (rows_for(0, g_a.alive, ab_ids), to_global_b(ab_ids), ab_d),
+        (rows_for(n_a, g_b.alive, ba_ids), ba_ids, ba_d),
+        (rows_for(0, g_a.alive, ab_hop), to_global_b(ab_hop), ab_hop_d),
+        (rows_for(n_a, g_b.alive, ba_hop), ba_hop, ba_hop_d),
+    )
+    # both directions for every pair: (row -> cand, d) and (cand -> row, d)
+    v = jnp.concatenate(
+        [r.reshape(-1) for r, _, _ in families]
+        + [c.reshape(-1) for _, c, _ in families]
+    )
+    q = jnp.concatenate(
+        [c.reshape(-1) for _, c, _ in families]
+        + [r.reshape(-1) for r, _, _ in families]
+    )
+    d = jnp.concatenate([dd.reshape(-1) for _, _, dd in families] * 2)
+    # a pair with either end masked is dropped entirely (q < 0 or v < 0)
+    v = jnp.where((q >= 0) & (v >= 0), v, -1)
+
+    mres = merge_candidates(
+        stacked.nbr_ids, stacked.nbr_dist, stacked.nbr_lam, v, q, d
+    )
+    merged = stacked._replace(
+        nbr_ids=mres.nbr_ids,
+        nbr_dist=mres.nbr_dist,
+        nbr_lam=mres.nbr_lam,
+    )
+    return graph_lib.rebuild_reverse(merged), c_ab + c_ba
+
+
+_merge_commit = jax.jit(
+    merge_commit_core, static_argnames=("metric", "dispatch", "hop_top")
+)
+
+
 def symmetric_merge(
     g_a,
     g_b,
@@ -286,10 +391,9 @@ def symmetric_merge(
         falls back to random seeding.
 
     Returns:
-      (merged KNNGraph, n_comps) — comps spent on cross candidate distances.
+      (merged KNNGraph, n_comps) — comps spent on cross candidate distances
+      plus the second-hop proposal distances (``ops.merge_proposals``).
     """
-    from repro.core import graph as graph_lib
-
     if key is None:
         key = jax.random.PRNGKey(0)
     n_a = g_a.capacity
@@ -315,49 +419,30 @@ def symmetric_merge(
         g_a, xa, xb, kb, scfg, search_chunk, coarse=coarse_a
     )
 
-    stacked = stack_subgraphs(g_a, g_b, n_a)
-    cap = stacked.capacity
-    k = ab_ids.shape[1]
+    # one jitted commit: stack + second-hop proposals + candidate merge +
+    # reverse rebuild stay on-device (no per-pair eager dispatch)
+    merged, hop_comps = _merge_commit(
+        g_a, g_b, xa, xb, ab_ids, ab_d, ba_ids, ba_d,
+        metric=scfg.metric, dispatch=scfg.dispatch,
+    )
+    return merged, comps_a + comps_b + int(hop_comps)
 
-    # both directions for every cross pair: (a -> b, d) and (b -> a, d)
-    a_rows = jnp.broadcast_to(
-        jnp.arange(n_a, dtype=jnp.int32)[:, None], (n_a, k)
-    )
-    b_rows = jnp.broadcast_to(
-        jnp.arange(n_a, n_a + n_b, dtype=jnp.int32)[:, None], (n_b, k)
-    )
-    ab_gl = jnp.where(ab_ids >= 0, ab_ids + n_a, -1)  # b side -> global
-    ba_gl = ba_ids  # a side already global in g_a's id space
-    # a dead row must not receive or donate edges (search already masks dead
-    # *targets*; this masks dead *queries*)
-    a_live = stacked.alive[:n_a]
-    b_live = stacked.alive[n_a:]
-    a_rows_m = jnp.where(a_live[:, None], a_rows, -1)
-    b_rows_m = jnp.where(b_live[:, None], b_rows, -1)
-    v = jnp.concatenate(
-        [a_rows_m.reshape(-1), ab_gl.reshape(-1),
-         b_rows_m.reshape(-1), ba_gl.reshape(-1)]
-    )
-    q = jnp.concatenate(
-        [ab_gl.reshape(-1), a_rows_m.reshape(-1),
-         ba_gl.reshape(-1), b_rows_m.reshape(-1)]
-    )
-    d = jnp.concatenate(
-        [ab_d.reshape(-1), ab_d.reshape(-1), ba_d.reshape(-1), ba_d.reshape(-1)]
-    )
-    # a pair with either end masked is dropped entirely (q < 0 or v < 0)
-    v = jnp.where((q >= 0) & (v >= 0), v, -1)
 
-    mres = merge_candidates(
-        stacked.nbr_ids, stacked.nbr_dist, stacked.nbr_lam, v, q, d
+def _pairs_mesh_ready(pairs, mesh) -> bool:
+    """A fold level can go mesh-resident iff every pair has identical leaf
+    shapes (shard_map stacks them) and there are enough devices."""
+    if mesh is None or len(pairs) > int(mesh.devices.size):
+        return False
+
+    def shape_sig(node):
+        g = node[0]
+        return (g.capacity, g.k, g.rev_capacity)
+
+    a0 = shape_sig(pairs[0][0])
+    b0 = shape_sig(pairs[0][1])
+    return all(
+        shape_sig(a) == a0 and shape_sig(b) == b0 for a, b in pairs
     )
-    merged = stacked._replace(
-        nbr_ids=mres.nbr_ids,
-        nbr_dist=mres.nbr_dist,
-        nbr_lam=mres.nbr_lam,
-    )
-    merged = graph_lib.rebuild_reverse(merged)
-    return merged, comps_a + comps_b
 
 
 def merge_subgraphs(
@@ -368,6 +453,7 @@ def merge_subgraphs(
     *,
     search_chunk: int = 512,
     coarses=None,
+    mesh=None,
 ):
     """Fold S adjacent sub-graphs into one via a balanced pairwise merge tree.
 
@@ -376,17 +462,25 @@ def merge_subgraphs(
     ``symmetric_merge`` level by level — O(log S) cross-searches per point
     instead of the O(S) a left-to-right fold costs (shard 0's points would
     re-search every later shard) — and the merges within a level run on
-    host threads, the same concurrency the sub-builds used.
+    host threads, or mesh-resident under ``shard_map`` when ``mesh`` is
+    given (``distributed.merge_pairs_mesh``, one pair per device; a level
+    whose pair shapes disagree or outnumber the devices falls back to host
+    threads).
 
     ``coarses`` (optional, aligned with ``graphs``, entries may be None)
     supplies each leaf's ``core.hierarchy.CoarseLevel`` for the level-0
-    cross searches; merged intermediates have no level, so deeper fold
-    levels seed randomly (log S − 1 of the log S levels for S = 2^m, and
-    none at the default S = 2 where the single fold IS level 0).
+    cross searches.  Each merged intermediate then gets a FOLDED level
+    (``hierarchy.fold_coarse`` — the two sides' landmark graphs merged by
+    this same ``symmetric_merge``, members remapped by the block offset), so
+    every deeper fold level seeds coarsely too, and the root level rides
+    out to the caller instead of being re-derived from scratch.
 
-    Returns (merged KNNGraph over all of x, total cross-search comps).
+    Returns (merged KNNGraph over all of x, total cross-search + fold
+    comps, root CoarseLevel or None).
     """
     import concurrent.futures
+
+    from repro.core import hierarchy  # late: hierarchy imports merge
 
     if not graphs:
         raise ValueError("merge_subgraphs needs at least one sub-graph")
@@ -416,23 +510,54 @@ def merge_subgraphs(
             (nodes[i], nodes[i + 1]) for i in range(0, len(nodes) - 1, 2)
         ]
         carry = [nodes[-1]] if len(nodes) % 2 else []
+        pair_keys = [
+            jax.random.fold_in(key, (level << 16) | i)
+            for i in range(len(pairs))
+        ]
 
-        def _merge_pair(item):
-            i, ((ga, lo, mid, ca), (gb, mid2, hi, cb)) = item
-            assert mid == mid2
-            g, c = symmetric_merge(
-                ga, gb, x[lo:hi], scfg,
-                jax.random.fold_in(key, (level << 16) | i),
-                search_chunk=search_chunk,
-                coarse_a=ca, coarse_b=cb,
+        if _pairs_mesh_ready(pairs, mesh):
+            from repro.core import distributed  # late: imports construct
+
+            pair_coarses = [(a[3], b[3]) for a, b in pairs]
+            if any(ca is None or cb is None for ca, cb in pair_coarses):
+                pair_coarses = None
+            merged_graphs, c = distributed.merge_pairs_mesh(
+                [(a[0], b[0]) for a, b in pairs],
+                [x[a[1] : b[2]] for a, b in pairs],
+                scfg,
+                pair_keys,
+                coarses=pair_coarses,
             )
-            return (g, lo, hi, None), c
+            merged = [
+                (g, None) for g in merged_graphs
+            ]
+            total_comps += c
+        else:
 
-        with concurrent.futures.ThreadPoolExecutor(
-            max_workers=len(pairs)
-        ) as ex:
-            merged = list(ex.map(_merge_pair, enumerate(pairs)))
-        total_comps += sum(c for _, c in merged)
-        nodes = [node for node, _ in merged] + carry
+            def _merge_pair(item):
+                i, ((ga, lo, mid, ca), (gb, mid2, hi, cb)) = item
+                assert mid == mid2
+                return symmetric_merge(
+                    ga, gb, x[lo:hi], scfg, pair_keys[i],
+                    search_chunk=search_chunk,
+                    coarse_a=ca, coarse_b=cb,
+                )
+
+            with concurrent.futures.ThreadPoolExecutor(
+                max_workers=len(pairs)
+            ) as ex:
+                merged = list(ex.map(_merge_pair, enumerate(pairs)))
+            total_comps += sum(c for _, c in merged)
+
+        # fold the coarse levels host-side (landmark graphs are tiny): the
+        # merged intermediate seeds the NEXT level's cross searches coarsely
+        out = []
+        for i, ((ga, lo, mid, ca), (gb, _, hi, cb)) in enumerate(pairs):
+            lvl, cc = hierarchy.fold_coarse(
+                ca, cb, mid - lo, scfg, jax.random.fold_in(pair_keys[i], 7)
+            )
+            total_comps += cc
+            out.append((merged[i][0], lo, hi, lvl))
+        nodes = out + carry
         level += 1
-    return nodes[0][0], total_comps
+    return nodes[0][0], total_comps, nodes[0][3]

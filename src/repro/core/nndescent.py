@@ -120,6 +120,48 @@ def _local_join_chunk(x, cand_ids, cand_new, metric, dispatch):
     return v, q, dd, n_comps
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "chunk_size"))
+def _lambda_round(x: Array, ids: Array, dist: Array, metric: str, chunk_size: int):
+    """Canonical λ for already-sorted neighbor lists, chunked over rows.
+
+    λ(j_i ∈ G[v]) = #{l < i : m(j_l, j_i) < m(v, j_i)} — the same occlusion
+    rule the sequential commit path maintains incrementally (Rules 1-3 in
+    ``construct.commit_wave``), evaluated from scratch on the final lists.
+    m(v, j_i) is read off ``dist``; the member-pair distances are computed
+    here and charged.  Returns ((n, k) λ, per-chunk comp counts).
+    """
+    n, k = ids.shape
+    nchunks = -(-n // chunk_size)
+    npad = nchunks * chunk_size
+    pids = jnp.pad(ids, ((0, npad - n), (0, 0)), constant_values=-1)
+    pdist = jnp.pad(dist, ((0, npad - n), (0, 0)), constant_values=jnp.inf)
+    from repro.core import metrics as metrics_lib
+
+    # mask[l, i] = l < i: occlusion only by closer-ranked members
+    earlier = jnp.triu(jnp.ones((k, k), bool), k=1)[None]
+
+    def body(_, i):
+        ci = jax.lax.dynamic_slice_in_dim(pids, i * chunk_size, chunk_size, 0)
+        cd = jax.lax.dynamic_slice_in_dim(pdist, i * chunk_size, chunk_size, 0)
+        vec = x[jnp.maximum(ci, 0)]  # (B, k, dfeat)
+        dmat = jax.vmap(lambda v: metrics_lib.pairwise(metric, v, v))(vec)
+        valid = (ci[:, :, None] >= 0) & (ci[:, None, :] >= 0) & earlier
+        occ = valid & (dmat < cd[:, None, :])
+        lam = jnp.sum(occ, axis=1).astype(jnp.int32)
+        return None, (jnp.where(ci >= 0, lam, 0), jnp.sum(valid, dtype=jnp.int32))
+
+    _, (lam_chunks, comp_chunks) = jax.lax.scan(body, None, jnp.arange(nchunks))
+    return lam_chunks.reshape(npad, k)[:n], comp_chunks
+
+
+def recompute_lambda(
+    ids: Array, dist: Array, x: Array, metric: str, *, node_chunk: int = 2048
+) -> tuple[Array, int]:
+    """Host wrapper for ``_lambda_round``: (λ table, exact python-int comps)."""
+    lam, comp_chunks = _lambda_round(x, ids, dist, metric, node_chunk)
+    return lam, sum(int(c) for c in comp_chunks)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "dispatch", "chunk_size"))
 def _join_round(
     x: Array,
@@ -235,15 +277,19 @@ def local_join_refine(
     node_chunk: int = 2048,
     use_pallas: Optional[bool] = None,
     dispatch: Optional[str] = None,
-) -> tuple[KNNGraph, float]:
+) -> tuple[KNNGraph, int]:
     """§IV-D refinement: NN-Descent join round(s) over an existing graph.
 
-    Recovers missed true-neighbor pairs after online construction.  Returns
-    (refined graph, number of distance computations spent).
+    Recovers missed true-neighbor pairs after online construction.  The
+    refined lists get canonical λ recomputed (``recompute_lambda``) before
+    the reverse rebuild, so ``rev_lam`` snapshots real occlusion factors and
+    LGD search on a refined graph behaves like it does on a sequential
+    build.  Returns (refined graph, exact python-int distance comps —
+    join rounds plus the λ recompute).
     """
     ids, dist = g.nbr_ids, g.nbr_dist
     is_new = ids >= 0
-    comps = 0.0
+    comps = 0
     k = g.k
     for _ in range(rounds):
         rev_ids, rev_new = _reverse_sample(ids, is_new, k)
@@ -251,8 +297,12 @@ def local_join_refine(
             x, ids, dist, is_new, rev_ids, rev_new, metric,
             _dispatch_of(dispatch, use_pallas), node_chunk,
         )
-        comps += float(c)
-    g = g._replace(nbr_ids=ids, nbr_dist=dist, nbr_lam=jnp.zeros_like(ids))
+        comps += int(c)
+    lam, lam_comps = recompute_lambda(
+        ids, dist, x, metric, node_chunk=node_chunk
+    )
+    comps += lam_comps
+    g = g._replace(nbr_ids=ids, nbr_dist=dist, nbr_lam=lam)
     return rebuild_reverse(g), comps
 
 
@@ -265,17 +315,18 @@ def refine(
     node_chunk: int = 2048,
     use_pallas: Optional[bool] = None,
     dispatch: Optional[str] = None,
-) -> tuple[KNNGraph, float]:
+) -> tuple[KNNGraph, int]:
     """Bounded refinement sweep: the EFANNA-style recall-recovery pass.
 
     The canonical post-merge step of the divide-and-conquer construction
     path (``construct.build_parallel``): a fixed number of NN-Descent join
     rounds over the merged graph closes the residual recall gap the
     sub-graph merge leaves.  ``rounds=0`` is a no-op (returns ``g`` with 0
-    comps), so callers can thread a config knob straight through.
+    comps), so callers can thread a config knob straight through.  Comps
+    are exact python ints per the Counter64 policy.
     """
     if rounds <= 0:
-        return g, 0.0
+        return g, 0
     return local_join_refine(
         g, x, metric, rounds=rounds, node_chunk=node_chunk,
         use_pallas=use_pallas, dispatch=dispatch,

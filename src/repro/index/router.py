@@ -237,14 +237,18 @@ class ShardedIndex:
 
         x = jnp.concatenate(parts)
         scfg = base.build_cfg.search_config()
-        g, _ = merge_lib.merge_subgraphs(graphs, x, scfg, key, coarses=coarses)
+        g, _, coarse = merge_lib.merge_subgraphs(
+            graphs, x, scfg, key, coarses=coarses
+        )
         g, _ = nndescent.refine(
             g, x, base.metric, rounds=refine_rounds,
             dispatch=base.build_cfg.dispatch,
         )
-        # no merged coarse level: the shard levels live in shard-local id
-        # spaces; under seed_mode="coarse" the merged index re-derives one
-        # lazily on first search (OnlineIndex._ensure_coarse)
+        # the merge fold's root coarse level is already in the union id
+        # space (shard levels fold with the same offset arithmetic as the
+        # graphs), so the merged index serves coarse-seeded searches
+        # immediately; shards without levels leave it None and
+        # OnlineIndex._ensure_coarse re-derives lazily as before
         merged = OnlineIndex(
             graph=g,
             items=x,
@@ -252,6 +256,7 @@ class ShardedIndex:
             ingest_batch=base.ingest_batch,
             auto_compact=base.auto_compact,
             growth_factor=base.growth_factor,
+            coarse=coarse,
         )
         self.shards = [merged]
         self.gids = [np.concatenate(tables)]

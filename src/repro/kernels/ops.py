@@ -158,6 +158,57 @@ def gather_distance(
     )
 
 
+def merge_proposals(
+    q: Array,
+    xt: Array,
+    hit_ids: Array,
+    t_nbr_ids: Array,
+    t_alive: Array,
+    metric: str = "l2",
+    *,
+    dispatch: Optional[str] = None,
+    sq_norms: Optional[Array] = None,
+    hop_top: Optional[int] = None,
+) -> tuple[Array, Array, Array]:
+    """Second-hop merge candidates through the blocked distance engine.
+
+    For each query row with cross-search hits ``hit_ids`` (target-LOCAL ids,
+    -1 pad) against a target sub-graph, propose the hits' own neighbor lists
+    (``t_nbr_ids[hit]``) as additional candidates — the 1908.00814 move that
+    turns one EHC walk per query into a k²-wide neighborhood sample.  All
+    candidate distances run through ``gather_distance`` (the one blocked
+    engine), so proposal assembly stays on-device; dead targets are masked.
+
+    Args:
+      q: (B, d) query vectors (the searching side's points).
+      xt: (n_t, d) target side's data.
+      hit_ids: (B, k) target-LOCAL hit ids from the cross search.
+      t_nbr_ids: (n_t, k_t) target graph forward lists (LOCAL ids).
+      t_alive: (n_t,) target liveness.
+      metric/dispatch/sq_norms: distance-engine routing (``sq_norms`` =
+        target side's graph-resident norm cache).
+      hop_top: expand only the nearest ``hop_top`` hits per query (hit
+        lists arrive distance-sorted from the search).  The full k² fan-out
+        is quadratic in candidate volume but the recall lives in the first
+        few hits' neighborhoods; ``None`` expands every hit.
+
+    Returns (cand_ids (B, h*k_t) LOCAL, cand_dist (B, h*k_t) with inf at
+    masked lanes, n_comps () int32 — every evaluated lane charged), where
+    ``h = min(hop_top, k)``.
+    """
+    B, k = hit_ids.shape
+    if hop_top is not None and hop_top < k:
+        hit_ids = hit_ids[:, :hop_top]
+    hop = t_nbr_ids[jnp.maximum(hit_ids, 0)]  # (B, h, k_t)
+    hop = jnp.where(hit_ids[:, :, None] >= 0, hop, -1).reshape(B, -1)
+    hop = jnp.where((hop >= 0) & t_alive[jnp.maximum(hop, 0)], hop, -1)
+    d = gather_distance(
+        q, xt, hop, metric, dispatch=dispatch, sq_norms=sq_norms
+    )
+    live = hop >= 0
+    return hop, jnp.where(live, d, jnp.inf), jnp.sum(live, dtype=jnp.int32)
+
+
 def topk_smallest(dists: Array, ids: Array, k: int):
     """Row-wise smallest-k selection; see ref.topk_smallest."""
     return _ref.topk_smallest(dists, ids, k)

@@ -467,3 +467,97 @@ def check_grouped_top_r_matches_numpy(seed: int, num_segments: int, r: int, t: i
         got = [int(x) for x in buf[s] if x >= 0]
         assert got == want, f"segment {s}: {got} != {want}"
         assert counts[s] == len(vals), "counts must be uncapped"
+
+
+def check_merged_coarse_fold_invariants(seed: int, n_rm: int) -> None:
+    """Folded coarse levels obey the hierarchy invariants through a 4-shard
+    merge tree with pre-merge churn on shard 0.
+
+    Four shard graphs build under seed_mode="coarse" (fixed shapes: one jit
+    specialization across every drawn example); shard 0 then loses ``n_rm``
+    rows (``dynamic.remove`` + ``hierarchy.purge_rows`` — capacity keeps its
+    high-water mark, so the merge precondition holds).  The fold's root
+    level must reference only live union rows, keep every member cell in
+    range, and be exactly the offset-concatenation of the leaf levels
+    (landmarks fold, they are never resampled).
+    """
+    import jax
+
+    from repro.core import construct, hierarchy
+    from repro.core import merge as merge_lib
+
+    SHARD_N, D, K, L, M = 48, 6, 4, 12, 4
+    assert 0 <= n_rm <= 8
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.rand(4 * SHARD_N, D).astype(np.float32))
+    cfg = construct.BuildConfig(
+        k=K, wave=16, lgd=True, beam=12, n_seeds=2, hash_slots=256,
+        max_iters=16, n_seed_init=16, seed_mode="coarse",
+        coarse_landmarks=L, coarse_members=M,
+    )
+    graphs, coarses = [], []
+    for s in range(4):
+        g, _, c = construct.build(
+            x[s * SHARD_N : (s + 1) * SHARD_N], cfg,
+            jax.random.fold_in(jax.random.PRNGKey(seed), s),
+            return_coarse=True,
+        )
+        graphs.append(g)
+        coarses.append(c)
+
+    # churn shard 0 pre-merge: remove rows (padded to a fixed width so the
+    # remove jit-cache hits across examples) and purge its level
+    rm = np.full(8, -1, np.int32)
+    rm[:n_rm] = rng.choice(SHARD_N, size=n_rm, replace=False)
+    graphs[0] = dynamic.remove(
+        graphs[0], x[:SHARD_N], jnp.asarray(rm), cfg.metric
+    )
+    coarses[0] = hierarchy.purge_rows(coarses[0], jnp.asarray(rm))
+
+    merged, comps, root = merge_lib.merge_subgraphs(
+        x=x, graphs=graphs, scfg=cfg.search_config(),
+        key=jax.random.PRNGKey(seed + 99), coarses=coarses,
+    )
+    assert root is not None and comps > 0
+    n_total = 4 * SHARD_N
+    alive = np.asarray(merged.alive)
+    removed_global = set(rm[rm >= 0].tolist())  # shard 0 is offset 0
+
+    # landmark liveness: live landmark rows reference live union rows; no
+    # removed row survives the fold
+    lrows = np.asarray(root.landmark_rows)
+    assert root.n_landmarks == 4 * L
+    assert lrows.shape == (4 * L,)
+    live_l = lrows[lrows >= 0]
+    assert live_l.size, "fold must keep live landmarks"
+    assert live_l.max() < n_total
+    assert alive[live_l].all(), "dead landmark row escaped the fold"
+    assert not (set(live_l.tolist()) & removed_global)
+
+    # member-cell id ranges: every member in [-1, n_total), never dead
+    mem = np.asarray(root.members)
+    assert mem.shape == (4 * L, M)
+    live_m = mem[mem >= 0]
+    assert live_m.size == 0 or live_m.max() < n_total
+    assert live_m.size == 0 or alive[live_m].all()
+    assert not (set(live_m.tolist()) & removed_global)
+    assert np.asarray(root.mem_ptr).shape == (4 * L,)
+    assert (np.asarray(root.mem_ptr) >= 0).all()
+
+    # structural oracle: the root is the offset-concatenation of the leaves
+    # in shard order (points frozen; landmark graph re-merged, not resampled)
+    assert np.array_equal(
+        np.asarray(root.points),
+        np.concatenate([np.asarray(c.points) for c in coarses]),
+    )
+    want_rows = np.concatenate(
+        [
+            np.where(
+                np.asarray(c.landmark_rows) >= 0,
+                np.asarray(c.landmark_rows) + s * SHARD_N,
+                -1,
+            )
+            for s, c in enumerate(coarses)
+        ]
+    )
+    assert np.array_equal(lrows, want_rows)

@@ -181,6 +181,54 @@ class TestNNDescent:
         assert rec1 >= rec0, (rec0, rec1)
         assert comps > 0
 
+    def test_refine_rebuilds_canonical_lambda(self, data, truth):
+        # regression (λ wipe): refine used to zero nbr_lam, and the reverse
+        # rebuild then snapshotted zeros into rev_lam — degenerating the LGD
+        # reverse filter on every refined graph.  Pin the refined λ table
+        # (and the search behavior it drives) against a scratch NumPy oracle.
+        cfg = BuildConfig(k=K, wave=256, lgd=True, beam=12, n_seeds=2,
+                          hash_slots=512, max_iters=10)
+        g, _ = build(data, cfg, jax.random.PRNGKey(4))
+        g2, _ = nndescent.local_join_refine(g, data, "l2", node_chunk=512)
+
+        # scratch oracle: λ(j_i) = #{l < i : m(j_l, j_i) < m(v, j_i)} on the
+        # refined (sorted) lists — the one formula the commit path maintains
+        x = np.asarray(data)
+        ids = np.asarray(g2.nbr_ids)
+        dist = np.asarray(g2.nbr_dist)
+        sq = np.sum(x.astype(np.float32) ** 2, axis=1)
+        lam_oracle = np.zeros_like(ids)
+        for v in range(ids.shape[0]):
+            for i in range(ids.shape[1]):
+                if ids[v, i] < 0:
+                    continue
+                for ll in range(i):
+                    if ids[v, ll] < 0:
+                        continue
+                    # same squared-l2 matmul expansion the engine computes
+                    a, b = ids[v, ll], ids[v, i]
+                    m = max(sq[a] + sq[b] - 2.0 * np.float32(x[a] @ x[b]), 0.0)
+                    if m < dist[v, i]:
+                        lam_oracle[v, i] += 1
+        assert np.array_equal(np.asarray(g2.nbr_lam), lam_oracle)
+        assert lam_oracle.any()  # a refined graph has real occlusion
+
+        # the LGD-masked search must behave exactly as it does on a graph
+        # whose λ was rebuilt from scratch (comps AND results)
+        g_oracle = graph_lib.rebuild_reverse(
+            g2._replace(nbr_lam=jnp.asarray(lam_oracle))
+        )
+        assert np.array_equal(np.asarray(g2.rev_lam), np.asarray(g_oracle.rev_lam))
+        scfg = SearchConfig(k=K, beam=24, n_seeds=4, hash_slots=1024,
+                            max_iters=40, use_lgd_mask=True)
+        q = data[:64]
+        r_fix = search_lib.search(g2, data, q, jax.random.PRNGKey(5), scfg)
+        r_orc = search_lib.search(g_oracle, data, q, jax.random.PRNGKey(5), scfg)
+        assert np.array_equal(np.asarray(r_fix.ids), np.asarray(r_orc.ids))
+        assert int(jnp.sum(r_fix.n_comps)) == int(jnp.sum(r_orc.n_comps))
+        rec = float(brute.recall_at_k(r_fix.ids, truth[0][:64], K))
+        assert rec > 0.85, rec
+
 
 class TestDynamic:
     def test_insert(self, data):

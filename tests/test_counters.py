@@ -92,3 +92,60 @@ class TestBuildStatsCounters:
         assert int(stats.n_comps) > n_seed  # seed charge + wave comps
         assert int(stats.n_inserted_edges) > 0
         assert int(stats.n_waves) == (400 - 256 + 63) // 64
+
+
+class TestRefineCompsExact:
+    """Regression: ``nndescent.refine`` returned comps as float (``0.0`` /
+    ``float(c)`` accumulation), violating the exact-count policy the wave
+    pipeline pays Counter64 for — ``build_parallel`` papered over it with
+    ``int(refine_comps)``.  The refine path must thread exact python ints."""
+
+    def _tiny(self):
+        rng = np.random.RandomState(3)
+        x = jnp.asarray(rng.rand(64, 6).astype(np.float32))
+        cfg = construct.BuildConfig(
+            k=4, wave=32, lgd=True, beam=8, n_seeds=2, hash_slots=256,
+            max_iters=12,
+        )
+        g, _ = construct.build(x, cfg, jax.random.PRNGKey(0))
+        return g, x
+
+    def test_refine_returns_exact_int(self):
+        from repro.core import nndescent
+
+        g, x = self._tiny()
+        g2, comps = nndescent.refine(g, x, "l2", rounds=1, node_chunk=64)
+        assert isinstance(comps, int) and comps > 0
+        g3, comps0 = nndescent.refine(g, x, "l2", rounds=0)
+        assert isinstance(comps0, int) and comps0 == 0
+        assert g3 is g  # rounds=0 is a true no-op
+
+    def test_refine_comps_exact_past_2_24(self, monkeypatch):
+        """>2^24 join comps per round: the total must come back as an exact
+        python int (float32 accumulation would stall; the per-round counts
+        here even cross the int32 word boundary when summed)."""
+        from repro.core import nndescent
+
+        g, x = self._tiny()
+        big = 2**31 - 1  # one round's worth of join comps, int32-max
+        real = nndescent._join_round
+
+        def inflated(*args, **kw):
+            ids, dist, is_new, _total, ins = real(*args, **kw)
+            return ids, dist, is_new, jnp.asarray(big, jnp.int32), ins
+
+        monkeypatch.setattr(nndescent, "_join_round", inflated)
+        g2, comps = nndescent.refine(g, x, "l2", rounds=2, node_chunk=64)
+        assert isinstance(comps, int)
+
+        # exact expectation: 2 inflated join rounds + the λ-recompute charge
+        # (#{l < i} member pairs with both ids live, from the final lists)
+        ids = np.asarray(g2.nbr_ids)
+        k = ids.shape[1]
+        live = ids >= 0
+        lam_pairs = 0
+        for i in range(k):
+            for ll in range(i):
+                lam_pairs += int(np.sum(live[:, i] & live[:, ll]))
+        assert comps == 2 * big + lam_pairs
+        assert comps > 2**32  # past the uint32 word boundary, still exact

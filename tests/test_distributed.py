@@ -100,12 +100,14 @@ cfg = construct.BuildConfig(k=8, wave=32, n_seed_init=32, beam=16, n_seeds=4,
                             hash_slots=512, max_iters=20, use_pallas=False)
 
 # shard_map sub-builds over real data: 4 local graphs in local id spaces
-graphs, comps, waves, edges = distributed.build_subgraphs(
+graphs, coarses, comps, waves, edges = distributed.build_subgraphs(
     mesh, x, cfg, jax.random.PRNGKey(1))
 assert len(graphs) == 4 and all(int(g.n_valid) == 80 for g in graphs)
+assert coarses == [None] * 4  # random seed mode: no shard levels
 assert comps > 0 and waves > 0 and edges > 0
 
-# the same shard graphs fold through the device-path of build_parallel
+# the same shard graphs fold through the device-path of build_parallel —
+# with a mesh, the merge-tree levels run mesh-resident (merge_pairs_mesh)
 g, stats = construct.build_parallel(
     x, cfg, jax.random.PRNGKey(1), shards=4, refine_rounds=1, mesh=mesh)
 tids, _ = brute.brute_force_knn(
@@ -115,7 +117,21 @@ rec = float(brute.recall_at_k(g.nbr_ids, tids, 8))
 from repro.core.graph import graph_invariants_ok
 inv = graph_invariants_ok(g)
 bad = [k for k, v in inv.items() if not bool(jnp.all(v))]
-print(json.dumps({"recall": rec, "bad": bad, "comps": int(stats.n_comps)}))
+
+# coarse seed mode: shard levels derive per device, fold through the mesh
+# levels (stacked CoarseLevel operands), and the root level rides out
+import dataclasses
+cfg_c = dataclasses.replace(cfg, seed_mode="coarse", coarse_landmarks=32,
+                            coarse_members=4)
+g2, stats2, lvl = construct.build_parallel(
+    x, cfg_c, jax.random.PRNGKey(2), shards=4, refine_rounds=1, mesh=mesh,
+    return_coarse=True)
+assert lvl is not None and lvl.n_landmarks == 4 * 32
+rows = np.asarray(lvl.landmark_rows)
+assert rows.min() >= 0 and rows.max() < n  # folded into the union id space
+rec_c = float(brute.recall_at_k(g2.nbr_ids, tids, 8))
+print(json.dumps({"recall": rec, "bad": bad, "comps": int(stats.n_comps),
+                  "recall_coarse": rec_c}))
 """
 
 
@@ -140,6 +156,12 @@ def test_device_parallel_build_recall(subgraph_result):
     # 4-way device build + symmetric merge + one refine round must land in
     # the same quality band as the single-graph build at this tiny scale
     assert subgraph_result["recall"] > 0.85, subgraph_result
+
+
+def test_device_parallel_build_coarse_recall(subgraph_result):
+    # coarse-seeded mesh fold (stacked CoarseLevel operands under shard_map)
+    # must match the random-seeded fold's quality band
+    assert subgraph_result["recall_coarse"] > 0.85, subgraph_result
 
 
 COMPRESS_SCRIPT = r"""

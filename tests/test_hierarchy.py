@@ -126,6 +126,34 @@ class TestCoarseBuild:
         )
         assert float(brute.recall_at_k(g.nbr_ids, true_ids, K)) >= 0.85
 
+    def test_parallel_build_return_coarse_parity(self, data, queries):
+        """``build_parallel`` honors the same ``return_coarse=True`` contract
+        as ``build``: a merged graph under seed_mode="coarse" comes back with
+        a servable level (the merge fold's root, union id space)."""
+        out = construct.build_parallel(
+            data, _cfg(), jax.random.PRNGKey(3), shards=2, refine_rounds=1,
+            return_coarse=True,
+        )
+        assert len(out) == 3
+        g, stats, lvl = out
+        assert lvl is not None
+        rows = np.asarray(lvl.landmark_rows)
+        assert rows.min() >= 0 and rows.max() < N
+        # the level is directly servable — the parity ``build`` provides
+        scfg = _cfg().search_config()
+        res = search_lib.search(
+            g, data, queries, jax.random.PRNGKey(4), scfg, coarse=lvl
+        )
+        true_ids, _ = brute.brute_force_knn(
+            data, queries, K, "l2", use_pallas=False
+        )
+        assert float(brute.recall_at_k(res.ids, true_ids, K)) >= 0.85
+        # shards=1 degenerates to build() with the contract intact
+        out1 = construct.build_parallel(
+            data, _cfg(), jax.random.PRNGKey(3), shards=1, return_coarse=True
+        )
+        assert len(out1) == 3 and out1[2] is not None
+
 
 class TestCoarseSearch:
     def test_coarse_requires_level(self, built, data, queries):
@@ -235,14 +263,20 @@ class TestLifecycleCoarse:
 
 
 class TestRouterCoarse:
-    def test_merge_shards_rederives_lazily(self, data, queries):
+    def test_merge_shards_carries_folded_coarse(self, data, queries):
         sh = ShardedIndex.build(data, 2, _cfg(), key=jax.random.PRNGKey(4))
         assert all(s.coarse is not None for s in sh.shards)
+        n_lm = sum(s.coarse.n_landmarks for s in sh.shards)
         sh.merge_shards(key=jax.random.PRNGKey(5))
         merged = sh.shards[0]
-        # shard levels lived in shard-local rows — the merged index starts
-        # without one and re-derives on first search
-        assert merged.coarse is None
+        # the shard levels fold through the merge tree (offset-remapped into
+        # the union id space), so the merged index serves coarse-seeded
+        # searches without a lazy re-derive
+        assert merged.coarse is not None
+        assert merged.coarse.n_landmarks == n_lm
+        rows = np.asarray(merged.coarse.landmark_rows)
+        nv = int(merged.graph.n_valid)
+        assert np.all(rows < nv) and np.any(rows >= 0)
         ids, _ = sh.retrieve(queries[:2], 5, key=jax.random.PRNGKey(6))
         assert merged.coarse is not None
         assert int((np.asarray(ids) >= 0).sum()) == 5

@@ -103,3 +103,11 @@ def test_topk_smallest_matches_numpy(seed, m, c, k):
 @given(seeds, st.integers(2, 8), st.integers(1, 5), st.integers(0, 60))
 def test_grouped_top_r_matches_numpy(seed, num_segments, r, t):
     prop_util.check_grouped_top_r_matches_numpy(seed, num_segments, r, t)
+
+
+@given(seeds, st.integers(0, 8))
+@settings(max_examples=5)  # each case builds + folds four coarse shards
+def test_merged_coarse_fold_invariants(seed, n_rm):
+    """4-shard coarse fold (with pre-merge churn) preserves every
+    CoarseLevel invariant in the union id space."""
+    prop_util.check_merged_coarse_fold_invariants(seed, n_rm)

@@ -69,3 +69,8 @@ def test_topk_smallest(seed, m, c, k):
 @pytest.mark.parametrize("seed,s,r,t", [(0, 4, 2, 30), (1, 8, 5, 60), (2, 2, 1, 0)])
 def test_grouped_top_r(seed, s, r, t):
     prop_util.check_grouped_top_r_matches_numpy(seed, s, r, t)
+
+
+@pytest.mark.parametrize("seed,n_rm", [(0, 3), (1, 0), (2, 8)])
+def test_merged_coarse_fold_invariants(seed, n_rm):
+    prop_util.check_merged_coarse_fold_invariants(seed, n_rm)
